@@ -1,0 +1,272 @@
+"""Benchmark harness — one entry per paper table/figure plus the roofline
+deliverable.  Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1        — iteration/communication counts at a matched AUC target for
+                  PPD-SG (K=1), NP-PPD-SG (I=1) and CoDA       [paper Table 1]
+  vary_k        — iterations to target AUC for K ∈ {1,2,4,8}   [Fig. 1-3 (a)]
+  vary_i        — AUC + comm rounds for I ∈ {1,8,32,64}, K=4   [Fig. 1-3 (b)]
+  tradeoff      — largest harmless I for K=2 vs K=8            [Fig. 4-5]
+  growing_i     — fixed I vs I_s = I0·3^{s-1}                  [Appendix H]
+  kernels       — Pallas kernels (interpret) vs jnp oracles microbench
+  window_step   — CoDA window step wall time vs I (CPU)
+  roofline      — per (arch × shape × mesh) three-term roofline from the
+                  dry-run artifacts (run repro.launch.dryrun first)
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--only vary_k] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import hlo as H
+from repro.configs.base import mlp_config
+from repro.core import coda, objective, schedules
+from repro.data import DataConfig, ShardedDataset
+from repro.models import model as M
+
+MCFG = mlp_config(n_features=32, d=64)
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+# --------------------------------------------------------------------------
+# shared convergence runner
+# --------------------------------------------------------------------------
+def _run(K, I, *, stages=3, T0=64, batch=32, seed=0, eta0=0.5, grow_I=False,
+         target=0.88, eval_every_windows=2):
+    key = jax.random.PRNGKey(seed)
+    dcfg = DataConfig(kind="features", n_features=32, signal=1.5)
+    ds = ShardedDataset(key, dcfg, 8192, K, target_p=0.71)
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=ds.p_pos)
+    test = ds.full(1024)
+
+    def auc(state):
+        p0 = jax.tree_util.tree_map(lambda x: x[0], state["params"])
+        h, _ = M.score(MCFG, p0, {"features": test["features"]})
+        return float(objective.roc_auc(h, test["labels"]))
+
+    sched = schedules.ScheduleConfig(n_workers=K, eta0=eta0, T0=T0, I0=I,
+                                     grow_I=grow_I)
+    state = coda.init_state(key, MCFG, ccfg)
+    wstep = jax.jit(lambda st, wb, eta: coda.window_step(MCFG, ccfg, st, wb, eta))
+    send = jax.jit(lambda st, ab: coda.stage_end(MCFG, ccfg, st, ab))
+
+    iters = rounds = 0
+    iters_to_target = None
+    t0 = time.time()
+    for st in schedules.stages(sched, stages):
+        for w in range(-(-st.T // st.I)):
+            key, sk = jax.random.split(key)
+            state, _ = wstep(state, ds.sample_window(sk, st.I, batch),
+                             jnp.float32(st.eta))
+            iters += st.I
+            rounds += 1
+            if iters_to_target is None and w % eval_every_windows == 0:
+                if auc(state) >= target:
+                    iters_to_target = iters
+        key, sk = jax.random.split(key)
+        state = send(state, ds.sample_alpha_batch(sk, st.m))
+        rounds += 1
+    wall = time.time() - t0
+    return dict(auc=auc(state), iters=iters, rounds=rounds, wall=wall,
+                iters_to_target=iters_to_target or iters,
+                us_per_iter=wall / iters * 1e6)
+
+
+# --------------------------------------------------------------------------
+# paper experiments
+# --------------------------------------------------------------------------
+def bench_vary_k(fast=False):
+    """Fig 1-3(a): fixing I, larger K needs fewer iterations (linear speedup)."""
+    for K in ([1, 4] if fast else [1, 2, 4, 8]):
+        r = _run(K, 8, stages=2 if fast else 3)
+        emit(f"vary_k/K={K}/iters_to_0.88auc", r["us_per_iter"],
+             r["iters_to_target"])
+        emit(f"vary_k/K={K}/final_auc", r["us_per_iter"], round(r["auc"], 4))
+
+
+def bench_vary_i(fast=False):
+    """Fig 1-3(b): fixing K, skipping communication up to a threshold I does
+    not hurt AUC but slashes communication rounds."""
+    for I in ([1, 32] if fast else [1, 8, 32, 64]):
+        r = _run(4, I, stages=2 if fast else 3)
+        emit(f"vary_i/I={I}/final_auc", r["us_per_iter"], round(r["auc"], 4))
+        emit(f"vary_i/I={I}/comm_rounds", r["us_per_iter"], r["rounds"])
+
+
+def bench_tradeoff(fast=False):
+    """Fig 4-5: smaller K tolerates a larger I before AUC degrades."""
+    for K in [2, 8]:
+        base = _run(K, 1, stages=2)["auc"]
+        max_ok = 1
+        for I in ([16, 64] if fast else [8, 16, 64, 128]):
+            r = _run(K, I, stages=2)
+            if r["auc"] >= base - 0.02:
+                max_ok = I
+        emit(f"tradeoff/K={K}/max_harmless_I", 0.0, max_ok)
+
+
+def bench_growing_i(fast=False):
+    """Appendix H: growing I_s = I0·3^(s-1) matches fixed-I accuracy with
+    fewer rounds (later stages have smaller η ⇒ less drift)."""
+    fixed = _run(4, 8, stages=2 if fast else 3)
+    grow = _run(4, 8, stages=2 if fast else 3, grow_I=True)
+    emit("growing_i/fixed_I8_auc", fixed["us_per_iter"], round(fixed["auc"], 4))
+    emit("growing_i/grow_I8_auc", grow["us_per_iter"], round(grow["auc"], 4))
+    emit("growing_i/fixed_rounds", 0.0, fixed["rounds"])
+    emit("growing_i/grow_rounds", 0.0, grow["rounds"])
+
+
+def bench_table1(fast=False):
+    """Table 1: measured iteration + communication counts to the SAME AUC
+    target for the three algorithms."""
+    tgt = 0.88
+    runs = [("PPD-SG(K=1)", _run(1, 1, stages=2 if fast else 3, target=tgt), 1),
+            ("NP-PPD-SG(K=8,I=1)", _run(8, 1, stages=2 if fast else 3,
+                                        target=tgt), 1),
+            ("CoDA(K=8,I=16)", _run(8, 16, stages=2 if fast else 3,
+                                    target=tgt), 16)]
+    for name, r, I in runs:
+        emit(f"table1/{name}/iters_to_target", r["us_per_iter"],
+             r["iters_to_target"])
+        emit(f"table1/{name}/comm_rounds_to_target", 0.0,
+             -(-r["iters_to_target"] // I))
+
+
+# --------------------------------------------------------------------------
+# kernels
+# --------------------------------------------------------------------------
+def _time(fn, *args, n=20):
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / n * 1e6
+
+
+def bench_kernels(fast=False):
+    from repro.kernels import ref
+    from repro.kernels.auc_loss import auc_loss
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.prox_update import prox_update
+    key = jax.random.PRNGKey(0)
+    B, S, Hh, KV, hd = 1, 512, 4, 2, 64
+    q = jax.random.normal(key, (B, S, Hh, hd))
+    k = jax.random.normal(key, (B, S, KV, hd))
+    v = jax.random.normal(key, (B, S, KV, hd))
+    f_ref = jax.jit(lambda q, k, v: ref.attention_full(q, k, v, causal=True))
+    emit("kernels/attention_ref_jnp", _time(f_ref, q, k, v), f"S={S}")
+    f_pal = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True,
+                                                    block_q=128, block_k=128,
+                                                    interpret=True))
+    emit("kernels/attention_pallas_interpret", _time(f_pal, q, k, v, n=3),
+         "interpret=correctness-mode; CPU us not meaningful for TPU")
+
+    h = jax.random.uniform(key, (8192,))
+    y = (jax.random.uniform(key, (8192,)) < 0.7).astype(jnp.float32)
+    g_ref = jax.jit(lambda h, y: ref.auc_loss_ref(h, y, 0.1, 0.2, 0.0, 0.71))
+    emit("kernels/auc_loss_ref_jnp", _time(g_ref, h, y), "T=8192")
+    g_pal = jax.jit(lambda h, y: auc_loss(h, y, 0.1, 0.2, 0.0, 0.71,
+                                          interpret=True))
+    emit("kernels/auc_loss_pallas_interpret", _time(g_pal, h, y, n=3), "T=8192")
+
+    vv = jax.random.normal(key, (1 << 20,))
+    p_ref = jax.jit(lambda v: ref.prox_update_ref(v, v, v, 0.1, 0.5))
+    emit("kernels/prox_ref_jnp", _time(p_ref, vv), "N=1M")
+    p_pal = jax.jit(lambda v: prox_update(v, v, v, 0.1, 0.5, interpret=True))
+    emit("kernels/prox_pallas_interpret", _time(p_pal, vv, n=3), "N=1M")
+
+
+def bench_window_step(fast=False):
+    key = jax.random.PRNGKey(0)
+    K = 4
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7)
+    dcfg = DataConfig(kind="features", n_features=32)
+    state = coda.init_state(key, MCFG, ccfg)
+    from repro.data.synthetic import sample_online
+    for I in [1, 8]:
+        wb = sample_online(key, dcfg, (I, K, 32))
+        step = jax.jit(lambda st, wb: coda.window_step(MCFG, ccfg, st, wb, 0.1))
+        jax.block_until_ready(step(state, wb))
+        t0 = time.time()
+        n = 10
+        for _ in range(n):
+            jax.block_until_ready(step(state, wb))
+        us = (time.time() - t0) / n * 1e6
+        emit(f"window_step/I={I}/us_per_window", us,
+             f"us_per_iter={us / I:.0f}")
+
+
+# --------------------------------------------------------------------------
+# roofline (deliverable g — reads the dry-run artifacts)
+# --------------------------------------------------------------------------
+def bench_roofline(fast=False):
+    files = sorted(glob.glob(os.path.join(ARTIFACTS, "*.json")))
+    if not files:
+        emit("roofline/no_artifacts", 0.0,
+             "run `python -m repro.launch.dryrun --all --both-meshes` first")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        tag = os.path.basename(f)[:-5]
+        if rec.get("status") != "ok":
+            emit(f"roofline/{tag}", 0.0, rec.get("status"))
+            continue
+        terms = H.roofline_terms(rec["flops"], rec["hbm_bytes"],
+                                 rec["collectives"]["total_bytes"], 1)
+        model_flops = _model_flops(rec)
+        ratio = model_flops / max(rec["flops"] * rec["n_chips"], 1)
+        emit(f"roofline/{tag}",
+             max(terms["compute_s"], terms["memory_s"],
+                 terms["collective_s"]) * 1e6,
+             f"bottleneck={terms['bottleneck']};c={terms['compute_s']:.2e}"
+             f";m={terms['memory_s']:.2e};x={terms['collective_s']:.2e}"
+             f";useful_ratio={ratio:.2f}")
+
+
+def _model_flops(rec: dict) -> float:
+    """6·N·D (train), 2·N·D (prefill/decode); active params for MoE."""
+    n = rec["n_params_active"]
+    d = rec["tokens_per_step"] * rec.get("window_steps", 1)
+    mult = 6.0 if rec["step_kind"] == "coda_window" else 2.0
+    return mult * n * d
+
+
+BENCHES = {
+    "table1": bench_table1,
+    "vary_k": bench_vary_k,
+    "vary_i": bench_vary_i,
+    "tradeoff": bench_tradeoff,
+    "growing_i": bench_growing_i,
+    "kernels": bench_kernels,
+    "window_step": bench_window_step,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        fn(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

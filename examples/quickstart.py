@@ -1,0 +1,55 @@
+"""Quickstart: distributed AUC maximization with CoDA in ~1 minute on CPU.
+
+Builds an imbalanced synthetic dataset (p = 0.71, the paper's setting),
+partitions it across K = 4 simulated workers (each worker only ever touches
+its own shard, exactly like Algorithm 1), and runs 3 proximal-point stages of
+CoDA with communication every I = 8 local steps.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import mlp_config
+from repro.core import coda, objective, schedules
+from repro.data import DataConfig, ShardedDataset
+from repro.models import model as M
+
+K, I, BATCH = 4, 8, 32
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    mcfg = mlp_config(n_features=32, d=64)
+    dcfg = DataConfig(kind="features", n_features=32, signal=1.5)
+    ds = ShardedDataset(key, dcfg, 8192, K, target_p=0.71)
+    print(f"dataset: n={ds.n}, positive ratio={ds.p_pos:.3f}, {K} workers")
+
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=ds.p_pos)
+    sched = schedules.ScheduleConfig(n_workers=K, eta0=0.5, T0=64, I0=I)
+
+    test = ds.full(2048)
+
+    def auc(state):
+        params0 = jax.tree_util.tree_map(lambda x: x[0], state["params"])
+        h, _ = M.score(mcfg, params0, {"features": test["features"]})
+        return float(objective.roc_auc(h, test["labels"]))
+
+    res = coda.fit(
+        key, mcfg, ccfg, sched, n_stages=3,
+        sample_window=lambda k, i: ds.sample_window(k, i, BATCH),
+        sample_alpha_batch=lambda k, m: ds.sample_alpha_batch(k, m))
+
+    print(f"iterations            : {res.iterations}")
+    print(f"communication rounds  : {res.comm_rounds} "
+          f"(naive parallel would need {res.iterations + 3})")
+    print(f"bytes/round/worker    : {coda.model_bytes(res.state):,}")
+    print(f"final test AUC        : {auc(res.state):.4f}")
+    assert auc(res.state) > 0.85
+
+
+if __name__ == "__main__":
+    main()

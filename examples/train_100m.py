@@ -1,0 +1,85 @@
+"""End-to-end driver: CoDA-train a ~100M-parameter dense transformer scorer
+for a few hundred steps on synthetic imbalanced sequence data.
+
+The model is a qwen-family decoder (d=768, 12 layers, GQA 12:4, vocab 8192 ≈
+101M params) — big enough that the worker-stacked CoDA state and the
+I-window scan exercise exactly the code paths the production mesh runs,
+small enough that CPU makes progress.  Expect a few seconds/step on CPU.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 200 --workers 2
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.core import coda, objective, schedules
+from repro.data import DataConfig, ShardedDataset
+from repro.models import count_params, model as M
+
+
+def build_config():
+    base = get_config("qwen2.5-14b")
+    return dataclasses.replace(
+        base, name="qwen-100m", n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=4, d_ff=2048, vocab_size=8192, head_dim=0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--interval", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--eval-n", type=int, default=256)
+    args = ap.parse_args()
+
+    mcfg = build_config()
+    object.__setattr__(mcfg, "head_dim", mcfg.d_model // mcfg.n_heads)
+    n = count_params(mcfg)
+    print(f"model: {mcfg.name}, {n / 1e6:.1f}M params, "
+          f"K={args.workers}, I={args.interval}")
+
+    key = jax.random.PRNGKey(0)
+    dcfg = DataConfig(kind="tokens", vocab_size=mcfg.vocab_size,
+                      seq_len=args.seq, signal=1.0)
+    ds = ShardedDataset(key, dcfg, 4096, args.workers, target_p=0.71)
+    ccfg = coda.CoDAConfig(n_workers=args.workers, p_pos=ds.p_pos)
+    stages = max(1, args.steps * args.workers // 256)
+    sched = schedules.ScheduleConfig(
+        n_workers=args.workers, eta0=0.2,
+        T0=max(args.interval, args.steps // max(stages, 1)),
+        I0=args.interval)
+
+    test = ds.full(args.eval_n)
+
+    def auc(state):
+        params0 = jax.tree_util.tree_map(lambda x: x[0], state["params"])
+        h, _ = M.score(mcfg, params0, {"tokens": test["tokens"]})
+        return float(objective.roc_auc(h, test["labels"]))
+
+    t0 = time.time()
+    res = coda.fit(
+        key, mcfg, ccfg, sched, n_stages=stages,
+        sample_window=lambda k, i: ds.sample_window(k, i, args.batch),
+        sample_alpha_batch=lambda k, m: ds.sample_alpha_batch(k, min(m, 64)))
+    dt = time.time() - t0
+
+    print(f"trained {res.iterations} iterations in {dt / 60:.1f} min "
+          f"({dt / max(res.iterations, 1):.2f} s/iter)")
+    print(f"communication rounds: {res.comm_rounds} "
+          f"(I=1 naive parallel: {res.iterations + stages})")
+    print(f"final test AUC: {auc(res.state):.4f}")
+    losses = [l for (_, _, l) in res.history]
+    print(f"loss: first5={sum(losses[:5]) / 5:.4f} "
+          f"last5={sum(losses[-5:]) / 5:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""§Perf hillclimbing driver: lowers optimization VARIANTS of the three
+chosen (arch × shape) pairs and records before/after roofline terms.
+
+Each experiment is a (tag, overrides) pair fed to
+``repro.launch.dryrun.run_pair``; results land in
+``benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>__<tag>.json`` and are
+summarized into §Perf by hand (the hypothesis log lives in EXPERIMENTS.md).
+
+  PYTHONPATH=src python scripts/hillclimb.py --exp <name>
+"""
+import argparse
+import os
+import sys
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(HERE, "src"))
+
+import jax.numpy as jnp  # noqa: E402
+
+
+def experiments():
+    """name -> (arch, shape, multi_pod, overrides)"""
+    return {
+        # ---- pair 1: qwen2.5-14b × train_4k (K=16 replica — the paper's
+        # own setting; avg all-reduce is the collective) -------------------
+        "qwen_train_int8avg": ("qwen2.5-14b", "train_4k", False,
+                               {"avg_compress": "int8", "tag": "int8avg"}),
+        "arctic_int8avg": ("arctic-480b", "train_4k", True,
+                           {"avg_compress": "int8", "tag": "int8avg"}),
+        # ---- pair 2: dbrx-132b × train_4k (worst useful-FLOPs ratio:
+        # MoE dispatch replication) ---------------------------------------
+        "dbrx_cap1": ("dbrx-132b", "train_4k", False,
+                      {"mcfg_kw": {}, "tag": "cap1const",
+                       "moe_constraints": True, "moe_capacity": 1.0}),
+        "dbrx_constraints": ("dbrx-132b", "train_4k", False,
+                             {"moe_constraints": True, "tag": "constraints"}),
+        "arctic_prefill_constraints": ("arctic-480b", "prefill_32k", False,
+                                       {"moe_constraints": True,
+                                        "tag": "constraints"}),
+        # ---- pair 3: decode_32k collective-bound: head_dim-sharded cache
+        # forces per-layer score all-reduces; flash-decode seq sharding and
+        # the int8 cache attack collective and memory terms respectively ----
+        "qwen_decode_seq": ("qwen2.5-14b", "decode_32k", False,
+                            {"cache_shard": "seq", "tag": "seqshard"}),
+        "qwen_decode_seq_int8": ("qwen2.5-14b", "decode_32k", False,
+                                 {"cache_shard": "seq",
+                                  "cache_dtype": jnp.int8,
+                                  "tag": "seqint8"}),
+        "qwen_decode_int8": ("qwen2.5-14b", "decode_32k", False,
+                             {"cache_dtype": jnp.int8, "tag": "int8cache"}),
+        "stablelm_decode_int8": ("stablelm-1.6b", "decode_32k", False,
+                                 {"cache_dtype": jnp.int8, "tag": "int8cache"}),
+        # internvl2 train was heavily collective-bound: vocab 92553 is not
+        # divisible by 16 so the embedding/lm head replicate; pad to 92560
+        "internvl2_padvocab": ("internvl2-2b", "train_4k", False,
+                               {"mcfg_kw": {"vocab_size": 92560},
+                                "tag": "padvocab"}),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", required=True, choices=list(experiments()))
+    args = ap.parse_args()
+    from repro.launch.dryrun import run_pair
+    arch, shape, mp, ov = experiments()[args.exp]
+    if "moe_capacity" in ov:
+        # capacity factor is threaded through the MoE config
+        from repro.configs import get_config
+        m = get_config(arch).moe
+        import dataclasses
+        ov = dict(ov)
+        ov["mcfg_kw"] = {"moe": dataclasses.replace(
+            m, capacity_factor=ov.pop("moe_capacity"))}
+    tag = "__" + ov.get("tag", args.exp)
+    run_pair(arch, shape, multi_pod=mp, overrides=ov, tag_suffix=tag)
+
+
+if __name__ == "__main__":
+    main()

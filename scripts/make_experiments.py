@@ -1,0 +1,215 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run artifacts.  Narrative sections (§Perf, §Paper-validation) live in
+EXPERIMENTS.md between markers and are preserved.
+
+  PYTHONPATH=src python scripts/make_experiments.py [--coda-I 8]
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(HERE, "src"))
+
+from repro.analysis.hlo import V5E  # noqa: E402
+
+ART = os.path.join(HERE, "benchmarks", "artifacts", "dryrun")
+
+ARCH_ORDER = ["chatglm3-6b", "arctic-480b", "dbrx-132b", "internvl2-2b",
+              "qwen2.5-14b", "stablelm-1.6b", "seamless-m4t-medium",
+              "hymba-1.5b", "phi3-medium-14b", "xlstm-350m"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    recs = {}
+    for f in glob.glob(os.path.join(ART, "*.json")):
+        rec = json.load(open(f))
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        if len(parts) < 3 or parts[2] not in ("pod1", "pod2"):
+            continue  # hillclimb/override artifacts handled in §Perf by hand
+        recs[(parts[0], parts[1], parts[2])] = rec
+    return recs
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "—"
+    for u in ["B", "KB", "MB", "GB", "TB"]:
+        if abs(n) < 1024:
+            return f"{n:.1f}{u}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def fmt_e(x):
+    return f"{x:.2e}" if x is not None else "—"
+
+
+def roofline(rec, coda_I):
+    """Per-device, per-step three terms in seconds.  For CoDA train steps the
+    collective term amortizes the averaging all-reduce over I local steps."""
+    coll = rec.get("coll_bytes", 0.0)
+    note = ""
+    if rec.get("step_kind") == "coda_window":
+        avg = rec.get("avg_coll_bytes", 0.0)
+        internal = max(0.0, coll - avg)
+        coll = internal + avg / coda_I
+        note = f"I={coda_I}"
+    c = rec["flops"] / V5E.peak_flops
+    m = rec["hbm_bytes"] / V5E.hbm_bw
+    x = coll / V5E.ici_bw
+    dom = {"compute": c, "memory": m, "collective": x}
+    b = max(dom, key=dom.get)
+    return c, m, x, b, note
+
+
+def model_flops(rec):
+    n = rec["n_params_active"]
+    d = rec["tokens_per_step"]
+    mult = 6.0 if rec["step_kind"] == "coda_window" else 2.0
+    return mult * n * d
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | mesh | status | step kind | K | policy | "
+        "per-dev FLOPs/step | per-dev HBM bytes | coll bytes (HLO) | "
+        "peak mem/dev | compile |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            for pod in ("pod1", "pod2"):
+                rec = recs.get((a, s, pod))
+                if rec is None:
+                    lines.append(f"| {a} | {s} | {pod} | **missing** | | | | | | | | |")
+                    continue
+                if rec["status"] == "skipped":
+                    lines.append(
+                        f"| {a} | {s} | {pod} | skipped | — | — | — | — | — | — "
+                        f"| — | ({rec['reason'][:48]}…) |")
+                    continue
+                if rec["status"] != "ok":
+                    lines.append(
+                        f"| {a} | {s} | {pod} | **FAILED** | | | | | | | | "
+                        f"{rec.get('error', '')[:60]} |")
+                    continue
+                mem = rec.get("memory_rolled") or rec.get("memory") or {}
+                peak = mem.get("temp_bytes")
+                lines.append(
+                    f"| {a} | {s} | {pod} | ok | {rec['step_kind']} "
+                    f"| {rec.get('n_workers', '—')} | {rec['policy']} "
+                    f"| {fmt_e(rec['flops'])} | {fmt_e(rec['hbm_bytes'])} "
+                    f"| {fmt_e(rec.get('coll_bytes'))} | {fmt_bytes(peak)} "
+                    f"| {rec['full_raw']['seconds']}s |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, coda_I):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "MODEL_FLOPS/HLO_FLOPs | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            rec = recs.get((a, s, "pod1"))
+            if rec is None or rec["status"] != "ok":
+                continue
+            c, m, x, b, note = roofline(rec, coda_I)
+            mf = model_flops(rec)
+            # HLO flops are per-device; MODEL_FLOPS is global
+            ratio = mf / max(rec["flops"] * rec["n_chips"], 1.0)
+            hint = HINTS.get((rec["step_kind"], b), "")
+            lines.append(
+                f"| {a} | {s}{'(' + note + ')' if note else ''} | {c:.2e} "
+                f"| {m:.2e} | {x:.2e} | **{b}** | {ratio:.2f} | {hint} |")
+    return "\n".join(lines)
+
+
+HINTS = {
+    ("coda_window", "compute"): "larger I is free here; remat policy / MXU-"
+                                "friendlier head dims cut recompute",
+    ("coda_window", "collective"): "increase I (CoDA's knob) or "
+                                   "reduce-scatter the averaging",
+    ("coda_window", "memory"): "fuse prox-update (kernel) + bf16 master copy",
+    ("prefill", "compute"): "flash-attention kernel (block-skip) shrinks the "
+                            "S² term",
+    ("prefill", "memory"): "avoid KV round-trip: fuse cache emission into "
+                           "attention",
+    ("prefill", "collective"): "shard seq (context parallel) instead of batch",
+    ("decode", "memory"): "KV cache is the stream: GQA narrower / quantized "
+                          "cache / paged layout",
+    ("decode", "compute"): "batch more requests per step",
+    ("decode", "collective"): "keep params resident; all-gather per token is "
+                              "the bug",
+}
+
+MARK_BEGIN = "<!-- AUTOGEN:BEGIN -->"
+MARK_END = "<!-- AUTOGEN:END -->"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--coda-I", type=int, default=8)
+    args = ap.parse_args()
+    recs = load()
+    n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in recs.values() if r["status"] == "skipped")
+    n_fail = len(recs) - n_ok - n_skip
+
+    auto = f"""{MARK_BEGIN}
+*(regenerated by `scripts/make_experiments.py` from
+`benchmarks/artifacts/dryrun/` — {n_ok} ok / {n_skip} skipped / {n_fail}
+failed of {len(recs)} recorded lowerings)*
+
+## §Dry-run
+
+Methodology: AOT `.lower().compile()` on the production meshes with 512
+forced host devices; `cost_analysis()` is measured on the partitioned module
+(per-device numbers).  XLA counts while-loop bodies once, so cost lowerings
+unroll every structural scan (`repro.flags.DRYRUN_UNROLL`); the sequential
+sLSTM time scan gets an analytic correction.  Peak memory comes from a
+second, ROLLED lowering (the production module — unrolling distorts
+live-range analysis); decode paths have no scans so one lowering serves both.
+Collective bytes are result-shape sums over `all-reduce | all-gather |
+reduce-scatter | all-to-all | collective-permute` in the optimized HLO.
+pod1 = (16,16) `(data, model)`; pod2 = (2,16,16) `(pod, data, model)`.
+train_4k lowers the CoDA window step at I=1 plus a dedicated averaging-only
+lowering, so any interval I is `internal + avg/I` (Theorem 1's trade-off).
+
+{dryrun_table(recs)}
+
+## §Roofline
+
+Single-pod (256 chips), per device per step, v5e-class constants
+(197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI).  For CoDA training steps the
+collective term is `internal + averaging/I` with I={args.coda_I} (the
+averaging all-reduce measured by a dedicated lowering).  MODEL_FLOPS =
+6·N_active·D (train) or 2·N_active·D (prefill/decode), global, divided by
+global HLO FLOPs (per-device × 256).
+
+{roofline_table(recs, args.coda_I)}
+{MARK_END}"""
+
+    path = os.path.join(HERE, "EXPERIMENTS.md")
+    if os.path.exists(path):
+        text = open(path).read()
+        if MARK_BEGIN in text:
+            pre = text.split(MARK_BEGIN)[0]
+            post = text.split(MARK_END)[1]
+            text = pre + auto + post
+        else:
+            text = text + "\n" + auto
+    else:
+        text = "# EXPERIMENTS\n\n" + auto + "\n"
+    open(path, "w").write(text)
+    print(f"wrote {path}: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

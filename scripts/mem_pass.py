@@ -1,0 +1,77 @@
+"""Memory pass: re-lower each pod1 pair with ROLLED scans (the production
+configuration — unrolling distorts XLA's live-range analysis) and update the
+artifact's ``memory_rolled`` field with that module's memory_analysis().
+
+  PYTHONPATH=src python scripts/mem_pass.py [--arch X --shape Y]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(HERE, "benchmarks", "artifacts", "dryrun")
+
+RUNNER = """
+import os, json, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro import flags
+from repro.launch import dryrun as DR
+flags.DRYRUN_UNROLL = False  # rolled: the production module
+arch, shape = sys.argv[1], sys.argv[2]
+from repro.launch import mesh as MESH
+mesh = MESH.make_production_mesh(multi_pod=False)
+lowered, meta = DR.build_lowering(arch, shape, mesh, variant="full")
+compiled = lowered.compile()
+mem = compiled.memory_analysis()
+from repro.analysis import hlo as H
+coll = H.collective_bytes(compiled.as_text())
+ca = compiled.cost_analysis() or {}
+rec = {
+    "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+    "output_bytes": getattr(mem, "output_size_in_bytes", None),
+    "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+    "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+    "rolled_coll_bytes": coll["total_bytes"],
+    "rolled_flops": float(ca.get("flops", 0.0)),
+}
+print("MEMJSON " + json.dumps(rec))
+"""
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    args = ap.parse_args()
+    env = {**os.environ, "PYTHONPATH": os.path.join(HERE, "src")}
+    for f in sorted(os.listdir(ART)):
+        if not f.endswith("__pod1.json"):
+            continue
+        rec = json.load(open(os.path.join(ART, f)))
+        if rec.get("status") != "ok" or "memory_rolled" in rec:
+            continue
+        # decode lowerings have no scans — rolled == unrolled already
+        if rec["shape"] in ("decode_32k", "long_500k") and not args.shape:
+            continue
+        arch, shape = rec["arch"], rec["shape"]
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and shape != args.shape:
+            continue
+        r = subprocess.run([sys.executable, "-c", RUNNER, arch, shape],
+                           env=env, cwd=HERE, capture_output=True, text=True,
+                           timeout=3000)
+        out = [l for l in r.stdout.splitlines() if l.startswith("MEMJSON ")]
+        if out:
+            rec["memory_rolled"] = json.loads(out[-1][8:])
+            json.dump(rec, open(os.path.join(ART, f), "w"), indent=1)
+            tb = rec["memory_rolled"].get("temp_bytes")
+            print(f"{f}: temp={tb and tb / 2**30:.1f}GiB", flush=True)
+        else:
+            print(f"{f}: FAILED {r.stderr[-200:]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

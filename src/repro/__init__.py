@@ -1,0 +1,2 @@
+"""repro: CoDA (ICML 2020) — communication-efficient distributed stochastic
+AUC maximization — as a production-grade JAX/TPU framework."""

@@ -1,0 +1,82 @@
+"""Compiled-artifact analysis: collective bytes from optimized HLO text and
+the three roofline terms (§Roofline of EXPERIMENTS.md).
+
+collective_bytes is NOT in cost_analysis(); we parse the optimized HLO and
+sum the result-shape bytes of every cross-device op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?P<type>\([^)]*\)|[\w\[\],]+(?:\{[^}]*\})?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, dict]:
+    """Per-collective-kind {bytes, count} from optimized HLO text."""
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        kind = m.group("op")
+        out[kind]["bytes"] += _shape_bytes(m.group("type"))
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for v in out.values() if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for v in out.values() if isinstance(v, dict))
+    return out
+
+
+# --------------------------------------------------------------------------
+# roofline
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    """v5e-class chip (the production target)."""
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link (~3 links usable/chip)
+
+
+V5E = Hardware()
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   n_chips: int, hw: Hardware = V5E) -> dict:
+    """The three §Roofline terms, in seconds.
+
+    flops / hbm_bytes are whole-program HLO numbers (cost_analysis of the
+    partitioned module is already per-device under GSPMD; we pass
+    per_device=True from the dry-run and n_chips=1 here accordingly —
+    see launch/dryrun.py).
+    """
+    compute = flops / (n_chips * hw.peak_flops)
+    memory = hbm_bytes / (n_chips * hw.hbm_bw)
+    collective = coll_bytes / (n_chips * hw.ici_bw)
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]).replace("_s", "")
+    return terms

@@ -1,0 +1,68 @@
+"""Minimal-but-real pytree checkpointing: npz payload + json manifest.
+
+Layout: ``<dir>/step_<n>/arrays.npz`` + ``manifest.json`` (key-path list,
+dtypes, shapes, user metadata).  Restoration requires a template pytree with
+the same structure (the usual JAX convention) and verifies shapes/dtypes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = [jax.tree_util.keystr(path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return keys, leaves, treedef
+
+
+def save(directory: str, step: int, tree: Any, metadata: Optional[dict] = None) -> str:
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    keys, leaves, _ = _flatten(tree)
+    arrays = {f"a{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": keys,
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)$", d))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, template: Any) -> Any:
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    keys, leaves, treedef = _flatten(template)
+    if keys != manifest["keys"]:
+        raise ValueError(
+            f"checkpoint structure mismatch: {set(keys) ^ set(manifest['keys'])}")
+    new_leaves = []
+    for i, (tmpl, shape) in enumerate(zip(leaves, manifest["shapes"])):
+        arr = data[f"a{i}"]
+        if list(np.shape(tmpl)) != shape:
+            raise ValueError(f"shape mismatch at {keys[i]}: "
+                             f"{np.shape(tmpl)} vs checkpointed {shape}")
+        new_leaves.append(jnp.asarray(arr, dtype=jnp.asarray(tmpl).dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,35 @@
+"""resnet50 [cnn] — the paper's own network (He et al. 2016), used for the
+paper-faithful CoDA validation experiments on CIFAR-like synthetic data.
+
+The pool's transformer-oriented fields are repurposed: ``seq_len`` in
+``input_specs`` becomes the flattened pixel count (images arrive as
+``[B, seq_len, 3]`` and are reshaped to ``[B, H, W, 3]`` with
+``H = W = int(sqrt(seq_len))``).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+# Stage widths follow the standard ResNet50 bottleneck layout; the
+# ModelConfig scalar fields are informational for this family.
+CONFIG = ModelConfig(
+    name="resnet50",
+    family="cnn",
+    n_layers=50,
+    d_model=2048,  # final feature width
+    n_heads=1,
+    n_kv_heads=1,
+    d_ff=0,
+    vocab_size=0,
+    rope="none",
+    norm="layernorm",
+    source="He et al. 2016 (paper's own net)",
+)
+
+# (stage blocks, stage width) per ResNet50
+RESNET50_STAGES = ((3, 256), (4, 512), (6, 1024), (3, 2048))
+RESNET_TINY_STAGES = ((1, 64), (1, 128))
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(CONFIG, name="resnet-tiny", n_layers=8, d_model=128)

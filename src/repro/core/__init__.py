@@ -1,0 +1,5 @@
+"""The paper's primary contribution: CoDA (Alg. 1+2), its objective, the
+Theorem-1 schedules, and the paper's baselines (PPD-SG / NP-PPD-SG)."""
+from repro.core import baselines, coda, objective, schedules  # noqa: F401
+from repro.core.coda import (  # noqa: F401
+    CoDAConfig, average, fit, init_state, local_step, stage_end, window_step)

@@ -1,0 +1,62 @@
+"""Baselines the paper compares against.
+
+* PPD-SG  (Liu et al. 2020b)  — single machine: CoDA with K = 1, I = 1.
+* NP-PPD-SG                    — naive parallel: CoDA with I = 1 (gradient
+  averaging every step; Table 1 row 2).
+* Parallel minibatch SGD on binary cross-entropy — the "standard loss
+  minimization" strawman of the introduction, for AUC-vs-BCE comparisons.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import coda
+from repro.models import model as M
+
+
+def ppd_sg_config(ccfg: coda.CoDAConfig) -> coda.CoDAConfig:
+    return dataclasses.replace(ccfg, n_workers=1)
+
+
+def np_ppd_sg_window(mcfg, ccfg, state, window_batch, eta):
+    """NP-PPD-SG = average after *every* local step (I=1 semantics even if
+    the batch carries a window axis)."""
+
+    def body(st, wb):
+        st, loss = coda.local_step(mcfg, ccfg, st, wb, eta)
+        return coda.average(st), loss
+
+    return jax.lax.scan(body, state, window_batch)
+
+
+# --------------------------------------------------------------------------
+# BCE-SGD baseline (loss minimization, not AUC)
+# --------------------------------------------------------------------------
+def bce_init(key, mcfg: ModelConfig, K: int, dtype=jnp.float32):
+    params = M.init_params(key, mcfg, dtype=dtype)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (K,) + x.shape), params)
+
+
+def bce_step(mcfg: ModelConfig, params, batch, eta, *, impl="auto"):
+    """One synchronous parallel-SGD step on BCE (gradient averaging)."""
+
+    def loss_fn(p, wb):
+        inputs = {k: v for k, v in wb.items() if k != "labels"}
+        h, aux = M.score(mcfg, p, inputs, train=True, impl=impl)
+        h = jnp.clip(h, 1e-6, 1 - 1e-6)
+        y = wb["labels"]
+        return -jnp.mean(y * jnp.log(h) + (1 - y) * jnp.log(1 - h)) + 0.01 * aux
+
+    losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(params, batch)
+    # synchronous data parallelism: average the gradients across workers
+    grads = jax.tree_util.tree_map(
+        lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape),
+        grads)
+    params = jax.tree_util.tree_map(lambda p, g: p - eta * g, params, grads)
+    return params, jnp.mean(losses)

@@ -1,0 +1,67 @@
+"""The min-max AUC objective (Ying et al. 2016 reformulation; paper eq. 2).
+
+``auc_F`` is a differentiable fused primitive: forward and *all* partials
+come from one pass over the scores (``kernels.ops.auc_loss`` — Pallas on TPU,
+closed-form jnp elsewhere), wired into autodiff with ``jax.custom_vjp``.  The
+closed-form partials are exactly the expressions in Appendix B (eq. 34) of
+the paper restricted to the scalar head:
+
+    ∂F/∂h = 2(1-p)(h-a)·1⁺ + 2p(h-b)·1⁻ + 2(1+α)(p·1⁻ − (1-p)·1⁺)
+    ∂F/∂a = −2(1-p)(h-a)·1⁺        ∂F/∂b = −2p(h-b)·1⁻
+    ∂F/∂α = 2(p·h·1⁻ − (1-p)·h·1⁺) − 2p(1-p)α
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+@jax.custom_vjp
+def auc_F(h, y, a, b, alpha, p):
+    """Mean of F(w,a,b,α;z) over the batch.  h: [T] scores, y: [T] ∈ {0,1}."""
+    loss, *_ = kops.auc_loss(h, y, a, b, alpha, p)
+    return loss
+
+
+def _fwd(h, y, a, b, alpha, p):
+    loss, dh, da, db, dalpha = kops.auc_loss(h, y, a, b, alpha, p)
+    return loss, (dh.astype(h.dtype), da, db, dalpha)
+
+
+def _bwd(res, ct):
+    dh, da, db, dalpha = res
+    return (ct * dh, None, ct * da, ct * db, ct * dalpha, None)
+
+
+auc_F.defvjp(_fwd, _bwd)
+
+
+def optimal_alpha(h, y, eps: float = 1e-12):
+    """Closed-form maximizer α*(v) = E[h|y=-1] − E[h|y=1] (paper eq. 8),
+    estimated on a batch — this is Algorithm 1 lines 4–7 for one machine."""
+    h = h.astype(jnp.float32)
+    pos = y.astype(jnp.float32)
+    neg = 1.0 - pos
+    mean_neg = jnp.sum(h * neg) / jnp.maximum(jnp.sum(neg), eps)
+    mean_pos = jnp.sum(h * pos) / jnp.maximum(jnp.sum(pos), eps)
+    return mean_neg - mean_pos
+
+
+def roc_auc(scores, labels):
+    """Exact (tie-aware) empirical AUC via rank statistics."""
+    s = scores.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    order = jnp.argsort(s)
+    ss = s[order]
+    ranks1 = jnp.arange(1, s.shape[0] + 1, dtype=jnp.float32)
+    # average ranks over ties
+    first = jnp.searchsorted(ss, ss, side="left").astype(jnp.float32) + 1
+    last = jnp.searchsorted(ss, ss, side="right").astype(jnp.float32)
+    avg_rank_sorted = 0.5 * (first + last)
+    ranks = jnp.zeros_like(ranks1).at[order].set(avg_rank_sorted)
+    n_pos = jnp.sum(y)
+    n_neg = jnp.sum(1.0 - y)
+    sum_pos_ranks = jnp.sum(ranks * y)
+    return (sum_pos_ranks - n_pos * (n_pos + 1) / 2) / jnp.maximum(n_pos * n_neg, 1e-12)

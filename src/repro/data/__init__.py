@@ -1,0 +1,1 @@
+from repro.data.synthetic import DataConfig, ShardedDataset, sample_online  # noqa: F401

@@ -1,0 +1,125 @@
+"""Synthetic imbalanced binary-classification data with a planted signal.
+
+Three modalities matching the model families:
+  * tokens   — positive sequences over-sample a motif token set; a scoring
+               model must learn to detect motif density.
+  * images   — two Gaussian class means over [H, W, 3] pixels (CIFAR-like,
+               for the paper-faithful ResNet experiments).
+  * features — flat Gaussian features (fast CPU experiments).
+
+Both of the paper's settings are supported:
+  * online   — every draw samples y ~ Bernoulli(p) fresh (P_k = P for all k).
+  * batch    — a fixed dataset is built once, negatives dropped to reach the
+               target positive ratio (the paper keeps all positives and drops
+               negatives to reach p = 0.71), then *partitioned* across the K
+               workers so machine k only ever sees shard k (P_k = empirical
+               distribution of its shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    kind: str = "tokens"       # tokens | images | features
+    p_pos: float = 0.5
+    vocab_size: int = 512
+    seq_len: int = 64
+    image_hw: int = 32
+    n_features: int = 64
+    signal: float = 1.0        # planted signal strength
+    motif_frac: float = 0.1    # fraction of vocab that is "motif" tokens
+    d_model: int = 128         # for frame/patch stubs
+
+
+def _draw(key, dcfg: DataConfig, shape, labels):
+    """labels: [...], returns input dict with matching leading dims."""
+    if dcfg.kind == "tokens":
+        n_motif = max(1, int(dcfg.vocab_size * dcfg.motif_frac))
+        k1, k2, k3 = jax.random.split(key, 3)
+        base = jax.random.randint(k1, shape + (dcfg.seq_len,), 0, dcfg.vocab_size)
+        motif = jax.random.randint(k2, shape + (dcfg.seq_len,), 0, n_motif)
+        # positives get motif tokens with prob signal*0.25
+        use = jax.random.uniform(k3, shape + (dcfg.seq_len,)) < (
+            dcfg.signal * 0.25 * labels[..., None])
+        return {"tokens": jnp.where(use, motif, base)}
+    if dcfg.kind == "images":
+        hw = dcfg.image_hw
+        x = jax.random.normal(key, shape + (hw * hw, 3))
+        mean = (labels[..., None, None] * 2 - 1) * dcfg.signal * 0.2
+        return {"images": x + mean}
+    x = jax.random.normal(key, shape + (dcfg.n_features,))
+    mean = (labels[..., None] * 2 - 1) * dcfg.signal * 0.3
+    return {"features": x + mean}
+
+
+def sample_online(key, dcfg: DataConfig, shape) -> dict:
+    """Online setting: iid draws, y ~ Bernoulli(p).  ``shape`` e.g. (I,K,B)."""
+    kl, kx = jax.random.split(key)
+    labels = (jax.random.uniform(kl, shape) < dcfg.p_pos).astype(jnp.float32)
+    batch = _draw(kx, dcfg, shape, labels)
+    batch["labels"] = labels
+    return batch
+
+
+# --------------------------------------------------------------------------
+# batch setting: fixed dataset, imbalance by dropping negatives, shard by K
+# --------------------------------------------------------------------------
+class ShardedDataset:
+    """Fixed dataset partitioned across K workers (machine k sees shard k)."""
+
+    def __init__(self, key, dcfg: DataConfig, n: int, n_workers: int,
+                 target_p: Optional[float] = None):
+        self.dcfg = dcfg
+        kl, kx, kp = jax.random.split(key, 3)
+        labels = (jax.random.uniform(kl, (n,)) < 0.5).astype(jnp.float32)
+        if target_p is not None and target_p > 0.5:
+            # keep all positives, drop negatives (paper §5 "Data")
+            keep_neg = (1 - target_p) / target_p
+            u = jax.random.uniform(kp, (n,))
+            keep = (labels > 0.5) | (u < keep_neg)
+            idx = jnp.nonzero(keep, size=n, fill_value=-1)[0]
+            idx = np.asarray(idx[idx >= 0])
+            labels = labels[idx]
+            n = len(idx)
+        batch = _draw(kx, dcfg, (n,), labels)
+        self.inputs = {k: np.asarray(v) for k, v in batch.items()}
+        self.labels = np.asarray(labels)
+        self.n = n
+        self.K = n_workers
+        self.p_pos = float(self.labels.mean())
+        # shuffle then partition evenly (paper: "shuffled and evenly divided")
+        rng = np.random.RandomState(0)
+        perm = rng.permutation(n)
+        per = n // n_workers
+        self.shards = [perm[k * per:(k + 1) * per] for k in range(n_workers)]
+
+    def sample_window(self, key, I: int, B: int) -> dict:
+        """[I, K, B, ...] minibatches; worker k draws only from shard k."""
+        rng = np.random.RandomState(int(jax.random.randint(key, (), 0, 2 ** 31 - 1)))
+        idx = np.stack([
+            np.stack([rng.choice(self.shards[k], size=B) for k in range(self.K)])
+            for _ in range(I)])  # [I, K, B]
+        out = {k: jnp.asarray(v[idx]) for k, v in self.inputs.items()}
+        out["labels"] = jnp.asarray(self.labels[idx])
+        return out
+
+    def sample_alpha_batch(self, key, m: int) -> dict:
+        m = min(m, min(len(s) for s in self.shards))
+        rng = np.random.RandomState(int(jax.random.randint(key, (), 0, 2 ** 31 - 1)))
+        idx = np.stack([rng.choice(self.shards[k], size=m) for k in range(self.K)])
+        out = {k: jnp.asarray(v[idx]) for k, v in self.inputs.items()}
+        out["labels"] = jnp.asarray(self.labels[idx])
+        return out
+
+    def full(self, max_n: int = 4096) -> dict:
+        n = min(self.n, max_n)
+        out = {k: jnp.asarray(v[:n]) for k, v in self.inputs.items()}
+        out["labels"] = jnp.asarray(self.labels[:n])
+        return out

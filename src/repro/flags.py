@@ -1,0 +1,40 @@
+"""Process-wide tracing flags.
+
+``DRYRUN_UNROLL`` — set (only) by launch/dryrun.py before tracing.  XLA's
+cost_analysis counts a while-loop body ONCE regardless of trip count, so the
+dry-run unrolls the structural scans (layer stack, CoDA window, mLSTM chunk
+loop, chunked-attention KV loop) to make HLO_FLOPs/HLO_bytes honest.  Normal
+execution keeps rolled scans (fast compiles, small HLO).
+
+The strictly-sequential sLSTM time scan is never unrolled (S ≤ 524288 steps);
+launch/dryrun.py adds its analytic per-step FLOPs × (S-1) correction instead.
+"""
+
+DRYRUN_UNROLL = False
+
+# §Perf knob: insert explicit with_sharding_constraint on the MoE dispatch
+# intermediates (expert axis over "data", ff over "model") instead of letting
+# GSPMD propagate through the gather/scatter.  Requires an active mesh whose
+# axes include "data"/"model"; set only by the dry-run hillclimb.
+MOE_SHARDING_CONSTRAINTS = False
+
+
+def scan_unroll():
+    """Value for lax.scan(..., unroll=...)."""
+    return True if DRYRUN_UNROLL else 1
+
+
+def attn_chunk(skv: int, default: int = 512) -> int:
+    """KV chunk for the online-softmax fallback.  Under the dry-run the chunk
+    count is capped at 8 so the unrolled loop stays compilable."""
+    if DRYRUN_UNROLL:
+        return max(default, -(-skv // 8))
+    return default
+
+
+def mlstm_chunk(s: int, default: int = 256) -> int:
+    """Under the dry-run, cap the chunk count at 8 (like attention) so the
+    unrolled chunk loop stays compilable on one core."""
+    if DRYRUN_UNROLL:
+        return max(default, -(-s // 8))
+    return default

@@ -1,0 +1,83 @@
+"""Fused AUC min-max loss Pallas kernel.
+
+One pass over the score vector produces the loss and all four gradient
+components of the paper's objective F(w,a,b,α;z) (eq. 2):
+
+    F = (1-p)(h-a)² 1[y=1] + p(h-b)² 1[y=-1]
+        + 2(1+α)(p·h·1[y=-1] - (1-p)·h·1[y=1]) - p(1-p)α²
+
+The batch axis is blocked into VMEM tiles; per-block partial reductions for
+(loss, da, db, dα) land in an [n_blocks, 4] output that the wrapper sums —
+one HBM read of ``h``/``y`` instead of the ~8 masked reductions XLA would
+otherwise issue.  Scalar state (a, b, α, p) rides in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(scal_ref, h_ref, y_ref, dh_ref, parts_ref, *, bt: int, T: int):
+    i = pl.program_id(0)
+    a, b, alpha, p = (scal_ref[0], scal_ref[1], scal_ref[2], scal_ref[3])
+    h = h_ref[...].astype(jnp.float32)
+    pos = y_ref[...].astype(jnp.float32)
+    neg = 1.0 - pos
+    # mask padding rows (last block may exceed T)
+    row = i * bt + jax.lax.broadcasted_iota(jnp.int32, (bt,), 0)
+    live = (row < T).astype(jnp.float32)
+    pos, neg = pos * live, neg * live
+
+    da_h = h - a
+    db_h = h - b
+    f = ((1 - p) * da_h * da_h * pos + p * db_h * db_h * neg
+         + 2 * (1 + alpha) * (p * h * neg - (1 - p) * h * pos)
+         - p * (1 - p) * alpha * alpha * live)
+    dh = (2 * (1 - p) * da_h * pos + 2 * p * db_h * neg
+          + 2 * (1 + alpha) * (p * neg - (1 - p) * pos))
+    dh_ref[...] = (dh / T).astype(dh_ref.dtype)
+    parts_ref[0, 0] = jnp.sum(f) / T
+    parts_ref[0, 1] = jnp.sum(-2 * (1 - p) * da_h * pos) / T
+    parts_ref[0, 2] = jnp.sum(-2 * p * db_h * neg) / T
+    parts_ref[0, 3] = (jnp.sum(2 * (p * h * neg - (1 - p) * h * pos)) / T
+                       - 2 * p * (1 - p) * alpha * jnp.sum(live) / T)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def auc_loss(h, y, a, b, alpha, p, *, block: int = 1024, interpret: bool = False):
+    """Returns (loss, dh [T], da, db, dalpha) — see ref.auc_loss_ref."""
+    T = h.shape[0]
+    bt = min(block, max(8, T))
+    n = -(-T // bt)
+    Tp = n * bt
+    hp = jnp.pad(h.astype(jnp.float32), (0, Tp - T))
+    yp = jnp.pad(y.astype(jnp.float32), (0, Tp - T))
+    scal = jnp.stack([jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+                      jnp.asarray(alpha, jnp.float32), jnp.asarray(p, jnp.float32)])
+
+    kern = functools.partial(_kernel, bt=bt, T=T)
+    dh, parts = pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tp,), jnp.float32),
+            jax.ShapeDtypeStruct((n, 4), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scal, hp, yp)
+    loss, da, db, dalpha = (parts[:, 0].sum(), parts[:, 1].sum(),
+                            parts[:, 2].sum(), parts[:, 3].sum())
+    return loss, dh[:T], da, db, dalpha

@@ -1,0 +1,126 @@
+"""Flash-attention Pallas kernel for TPU (GQA, causal / sliding-window).
+
+TPU-native design (not a CUDA port):
+  * grid = (batch, q_head, S/BQ, Skv/BK); the KV axis is innermost and runs
+    sequentially on a TensorCore, so the online-softmax running state
+    (m, l, acc) lives in VMEM scratch across KV steps.
+  * BlockSpecs tile Q/K/V into VMEM with MXU-aligned shapes (block sizes are
+    multiples of 128 in the contracting/lane dims; head_dim is the lane dim).
+  * GQA is expressed in the K/V index_map (q head h reads kv head h // G) —
+    no materialized head repetition.
+  * Blocks entirely outside the causal/window band are skipped with
+    ``pl.when`` (no MXU work), the diagonal blocks are masked elementwise.
+
+Validated against ``ref.attention_full`` in interpret mode (tests/).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, window: Optional[int], bq: int, bk: int, n_kv: int,
+            sm_scale: float):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = kj * bk
+    # Static-shape early-out: is this KV block inside the causal/window band
+    # for *any* query row of the Q block?
+    needed = jnp.bool_(True)
+    if causal:
+        needed &= k_start <= q_start + bq - 1
+    if window is not None:
+        # newest query row is q_start + bq - 1; oldest allowed kv is
+        # q_pos - window + 1
+        needed &= k_start + bk - 1 > q_start - window
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # [BQ, hd]
+        k = k_ref[0, 0].astype(jnp.float32)                 # [BK, hd]
+        v = v_ref[0, 0].astype(jnp.float32)                 # [BK, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [BQ, BK]
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = jnp.ones((bq, bk), bool)
+        if causal:
+            valid &= k_pos <= q_pos
+        if window is not None:
+            valid &= k_pos > q_pos - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False):
+    """q: [B, S, H, hd]; k/v: [B, Skv, KV, hd] -> [B, S, H, hd].
+
+    ``window`` must be static here (the jnp fallbacks accept traced windows;
+    the kernel trades that flexibility for block skipping).
+    """
+    B, S, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, S)
+    bk = min(block_k, Skv)
+    assert S % bq == 0 and Skv % bk == 0, (S, bq, Skv, bk)
+    n_kv = Skv // bk
+
+    # [B, heads, S, hd] layout: block over (seq) with heads/batch in the grid
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    grid = (B, H, S // bq, n_kv)
+    kern = functools.partial(
+        _kernel, causal=causal, window=window, bq=bq, bk=bk, n_kv=n_kv,
+        sm_scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # m  (running max)
+            pltpu.VMEM((bq,), jnp.float32),      # l  (running denom)
+            pltpu.VMEM((bq, hd), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,66 @@
+"""Public jit'd wrappers over the Pallas kernels with XLA fallbacks.
+
+``impl`` semantics everywhere:
+  * "auto"   — Pallas on TPU backends; pure-jnp fallback elsewhere (CPU dry
+               runs and tests never trace the Mosaic path).
+  * "ref"    — force the pure-jnp oracle.
+  * "pallas" — force the kernel (on CPU this uses interpret mode).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.auc_loss import auc_loss as _auc_kernel
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.prox_update import prox_update as _prox_kernel
+
+# Threshold above which the jnp fallback switches from materialized scores to
+# the scanned online-softmax form (memory O(S·chunk)).
+_FULL_ATTN_MAX_KV = 8192
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal: bool = True, window=None, impl: str = "auto"):
+    """GQA attention.  q: [B,S,H,hd], k/v: [B,Skv,KV,hd] -> [B,S,H,hd].
+
+    ``window``: None / -1 = full; a Python int enables the Pallas kernel's
+    block skipping; a traced scalar falls back to masked jnp (used inside
+    scanned heterogeneous stacks, e.g. Hymba).
+    """
+    static_window = window is None or isinstance(window, int)
+    if static_window and isinstance(window, int) and window < 0:
+        window = None
+    if impl == "pallas" or (impl == "auto" and _on_tpu() and static_window):
+        return _flash(q, k, v, causal=causal, window=window,
+                      interpret=not _on_tpu())
+    if k.shape[1] <= _FULL_ATTN_MAX_KV:
+        return ref.attention_full(q, k, v, causal=causal, window=window)
+    return ref.attention_chunked(q, k, v, causal=causal, window=window)
+
+
+def auc_loss(h, y, a, b, alpha, p, *, impl: str = "auto"):
+    """Fused loss + closed-form grads of the min-max AUC objective."""
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _auc_kernel(h, y, a, b, alpha, p, interpret=not _on_tpu())
+    return ref.auc_loss_ref(h, y, a, b, alpha, p)
+
+
+def prox_update_tree(v_tree, g_tree, v0_tree, eta, gamma, *, impl: str = "auto"):
+    """Apply the fused proximal update leaf-wise over parameter pytrees."""
+    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
+
+    def upd(v, g, v0):
+        if use_kernel:
+            flat = _prox_kernel(v.reshape(-1), g.reshape(-1), v0.reshape(-1),
+                                eta, gamma, interpret=not _on_tpu())
+            return flat.reshape(v.shape)
+        return ref.prox_update_ref(v, g, v0, eta, gamma)
+
+    return jax.tree_util.tree_map(upd, v_tree, g_tree, v0_tree)

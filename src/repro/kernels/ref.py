@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel, plus the XLA fallbacks the
+models use on CPU.  These define the semantics the kernels are tested
+against.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, causal / sliding window; `window` may be a traced scalar,
+# -1 or None meaning full attention)
+# --------------------------------------------------------------------------
+def _mask(q_pos, kv_pos, causal: bool, window):
+    valid = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        valid &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        in_win = kv_pos[None, :] > (q_pos[:, None] - w)
+        valid &= jnp.where(w < 0, True, in_win)
+    return valid
+
+
+def attention_full(q, k, v, *, causal=True, window=None):
+    """q: [B, S, H, hd]; k/v: [B, Skv, KV, hd] -> [B, S, H, hd]."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bskgh,bckh->bskgc", qg, k.astype(jnp.float32))
+    valid = _mask(jnp.arange(S), jnp.arange(k.shape[1]), causal, window)
+    s = jnp.where(valid[None, :, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bskgc,bckh->bskgh", w, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal=True, window=None, chunk=512):
+    """Online-softmax attention, scanned over KV chunks (O(S·chunk) scores).
+
+    Used for the long prefill shapes where materializing [S, Skv] scores is
+    infeasible.  Matches ``attention_full`` to numerical tolerance.
+    """
+    from repro import flags
+    B, S, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    C = min(flags.attn_chunk(Skv, chunk), Skv)
+    assert Skv % C == 0, (Skv, C)
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32) * hd ** -0.5
+    kc = jnp.moveaxis(k.reshape(B, Skv // C, C, KV, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, Skv // C, C, KV, hd), 1, 0)
+    q_pos = jnp.arange(S)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        s = jnp.einsum("bskgh,bckh->bskgc", qg, kj.astype(jnp.float32))
+        kv_pos = j * C + jnp.arange(C)
+        valid = _mask(q_pos, kv_pos, causal, window)
+        s = jnp.where(valid[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bskgc,bckh->bskgh", p,
+                                                 vj.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, S, KV, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, S, KV, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(Skv // C), kc, vc),
+        unroll=flags.scan_unroll())
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# AUC min-max objective (Ying et al. 2016 reformulation) — fused loss+grads
+# --------------------------------------------------------------------------
+def auc_loss_ref(h, y, a, b, alpha, p):
+    """Per-batch mean of F(w,a,b,α;z) and its closed-form partials.
+
+    h: scores [T] ∈ [0,1]; y: labels [T] ∈ {0,1} (1 = positive);
+    a, b, alpha, p: scalars.  Returns (loss, dh [T], da, db, dalpha).
+    """
+    h = h.astype(jnp.float32)
+    pos = y.astype(jnp.float32)
+    neg = 1.0 - pos
+    T = h.shape[0]
+    f = ((1 - p) * (h - a) ** 2 * pos
+         + p * (h - b) ** 2 * neg
+         + 2 * (1 + alpha) * (p * h * neg - (1 - p) * h * pos)
+         - p * (1 - p) * alpha ** 2)
+    loss = jnp.mean(f)
+    dh = (2 * (1 - p) * (h - a) * pos + 2 * p * (h - b) * neg
+          + 2 * (1 + alpha) * (p * neg - (1 - p) * pos)) / T
+    da = jnp.sum(-2 * (1 - p) * (h - a) * pos) / T
+    db = jnp.sum(-2 * p * (h - b) * neg) / T
+    dalpha = jnp.sum(2 * (p * h * neg - (1 - p) * h * pos)) / T - 2 * p * (1 - p) * alpha
+    return loss, dh, da, db, dalpha
+
+
+# --------------------------------------------------------------------------
+# CoDA fused proximal local update
+# --------------------------------------------------------------------------
+def prox_update_ref(v, g, v0, eta, gamma):
+    """v ← argmin_u g·u + ‖u−v‖²/(2η) + ‖u−v0‖²/(2γ)
+         = (γ(v − ηg) + ηv0) / (η + γ)."""
+    eta = jnp.asarray(eta, jnp.float32)
+    vf = v.astype(jnp.float32)
+    out = (gamma * (vf - eta * g.astype(jnp.float32)) + eta * v0.astype(jnp.float32))
+    return (out / (eta + gamma)).astype(v.dtype)

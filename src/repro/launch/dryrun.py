@@ -1,0 +1,326 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count on
+# first backend init.  512 placeholder host devices back both the (16,16)
+# single-pod mesh and the (2,16,16) multi-pod mesh.  Only the dry-run does
+# this; tests/benches see 1 device.
+
+"""Multi-pod dry-run: AOT ``.lower().compile()`` of every
+(architecture × input shape × mesh) combination against the production mesh,
+recording memory_analysis / cost_analysis / collective bytes for §Dry-run and
+§Roofline of EXPERIMENTS.md.
+
+  train_4k     -> CoDA window_step (local primal-dual step + averaging)
+  prefill_32k  -> prefill_step (forward + stacked KV-cache emission)
+  decode_32k   -> serve_step (1 new token against a seq_len cache)
+  long_500k    -> serve_step (sub-quadratic archs; dense via sliding window;
+                  skipped for seamless-m4t — DESIGN.md §Arch-applicability)
+
+FLOP-accounting methodology:
+XLA's cost_analysis counts a while-loop body ONCE regardless of trip count,
+so with DRYRUN_UNROLL every structural scan (layer stack, chunked attention,
+mLSTM chunk loop) is unrolled before lowering — the full lowering's costs are
+honest as-is.  (The optional REPRO_DRYRUN_DELTAS=1 L=1/L=2 probe lowerings
+cross-check that: honest ≈ F(L=1) + (L-1)·(F(L=2)−F(L=1)).)  The only scan
+never unrolled is the sequential sLSTM time loop (S steps); its analytic
+per-step correction is added explicitly (slstm_flop_correction).
+
+The CoDA averaging collective is isolated with an averaging-only lowering so
+the roofline can report collective bytes per iteration as
+``internal + avg / I`` for any communication interval I — which is exactly
+the knob the paper's Theorem 1 trades off.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --both-meshes
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+flags.DRYRUN_UNROLL = True  # unroll inner data scans for honest costs
+
+from repro.analysis import hlo as H
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, input_specs
+from repro.core import coda
+from repro.launch import mesh as MESH
+from repro.serving import decode as D
+from repro.sharding import rules as R
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+
+def slstm_flop_correction(mcfg, shape, n_workers: int = 1) -> float:
+    """The strictly-sequential sLSTM time scan is never unrolled; XLA counts
+    its body once.  Add the analytic per-step FLOPs × (S-1) for the per-head
+    recurrent einsum (the dominant in-scan term): 2 · B · 4 · d · hd."""
+    if mcfg.family != "ssm" or mcfg.slstm_every <= 0:
+        return 0.0
+    if shape.kind == "decode":
+        return 0.0  # decode is a single step — fully counted
+    n_slstm = sum(1 for i in range(mcfg.n_layers)
+                  if i % mcfg.slstm_every == mcfg.slstm_every - 1)
+    B = shape.global_batch // max(n_workers, 1)
+    hd = mcfg.d_model // mcfg.n_heads
+    per_step = 2.0 * B * 4 * mcfg.d_model * hd
+    mult = 3.0 if shape.kind == "train" else 1.0  # fwd+bwd ≈ 3× fwd
+    return per_step * (shape.seq_len - 1) * n_slstm * mult
+
+
+def is_skipped(arch: str, shape_name: str) -> str:
+    if shape_name == "long_500k" and arch == "seamless-m4t-medium":
+        return ("quadratic enc/cross attention over 512k frames; no published "
+                "sub-quadratic variant for this arch (DESIGN.md)")
+    return ""
+
+
+def _spec_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(tree))
+
+
+def _with_layers(mcfg, n):
+    kw = {"n_layers": n}
+    if mcfg.encoder_layers:
+        kw["encoder_layers"] = n
+    return dataclasses.replace(mcfg, **kw)
+
+
+def build_lowering(arch: str, shape_name: str, mesh, *, variant: str = "full",
+                   overrides=None):
+    """variant: "full" | "l1" | "l2" (layer-delta probes) | "avg"
+    (averaging-only: isolates CoDA's periodic all-reduce)."""
+    mcfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    overrides = overrides or {}
+    if overrides.get("mcfg_kw"):
+        mcfg = dataclasses.replace(mcfg, **overrides["mcfg_kw"])
+    flags.MOE_SHARDING_CONSTRAINTS = bool(overrides.get("moe_constraints"))
+    policy = overrides.get("policy", R.policy_for(arch))
+    multi_pod = "pod" in mesh.axis_names
+    use_window = overrides.get(
+        "use_window",
+        shape_name == "long_500k" or mcfg.window_mode == "all_but_global")
+    if variant == "l1":
+        mcfg = _with_layers(mcfg, 1)
+    elif variant == "l2":
+        mcfg = _with_layers(mcfg, 2)
+
+    meta = dict(arch=arch, shape=shape_name, policy=policy,
+                multi_pod=multi_pod, n_chips=mesh.size, use_window=use_window,
+                variant=variant)
+
+    if shape.kind == "train":
+        K = MESH.n_workers(mesh, policy)
+        ccfg = coda.CoDAConfig(n_workers=K, param_dtype=jnp.bfloat16,
+                               use_window=use_window, p_pos=0.71,
+                               avg_compress=overrides.get("avg_compress", ""))
+        key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        state_shapes = jax.eval_shape(
+            lambda k: coda.init_state(k, mcfg, ccfg), key_spec)
+        st_sh = R.state_shardings(state_shapes, mesh, policy, multi_pod)
+        if variant == "avg":
+            fn = lambda st: coda.average(
+                st, compress=overrides.get("avg_compress") or None)
+            jitted = jax.jit(fn, in_shardings=(st_sh,), out_shardings=st_sh)
+            with mesh:
+                lowered = jitted.lower(state_shapes)
+            meta.update(n_workers=K, step_kind="coda_average")
+            return lowered, meta
+        batch_shapes = input_specs(mcfg, shape, n_workers=K, window_steps=1)
+        bt_sh = R.batch_shardings(batch_shapes, mesh, policy, multi_pod)
+        eta_spec = jax.ShapeDtypeStruct((), jnp.float32)
+        fn = lambda st, wb, eta: coda.window_step(mcfg, ccfg, st, wb, eta)
+        jitted = jax.jit(fn, in_shardings=(st_sh, bt_sh, None),
+                         out_shardings=(st_sh, None))
+        with mesh:
+            lowered = jitted.lower(state_shapes, batch_shapes, eta_spec)
+        meta.update(n_workers=K,
+                    tokens_per_step=shape.global_batch * shape.seq_len,
+                    step_kind="coda_window",
+                    state_bytes=_spec_bytes(state_shapes))
+        return lowered, meta
+
+    from repro.models import model as M
+    params_shapes = jax.eval_shape(
+        lambda k: M.init_params(k, mcfg, dtype=jnp.bfloat16),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    p_sh = R.tree_shardings(params_shapes, mesh, policy, worker_axes=())
+
+    if shape.kind == "prefill":
+        batch_shapes = input_specs(mcfg, shape, n_workers=1, window_steps=1)
+        batch_shapes = {k: jax.ShapeDtypeStruct(v.shape[2:], v.dtype)
+                        for k, v in batch_shapes.items() if k != "labels"}
+        bt_sh = R.serve_shardings(batch_shapes, mesh)
+        fn = lambda p, b: M.prefill_step(mcfg, p, b, use_window=use_window)
+        jitted = jax.jit(fn, in_shardings=(p_sh, bt_sh))
+        with mesh:
+            lowered = jitted.lower(params_shapes, batch_shapes)
+        meta.update(step_kind="prefill",
+                    tokens_per_step=shape.global_batch * shape.seq_len,
+                    state_bytes=_spec_bytes(params_shapes))
+        return lowered, meta
+
+    # decode (layer loop is Python-unrolled — costs are honest as-is)
+    B, S = shape.global_batch, shape.seq_len
+    cache_shapes = D.cache_specs(mcfg, B, S, use_window=use_window,
+                                 dtype=overrides.get("cache_dtype", jnp.bfloat16))
+    c_sh = R.serve_shardings(cache_shapes, mesh,
+                             cache_shard=overrides.get("cache_shard", "heads"))
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    io_sh = R.serve_shardings({"t": tok, "p": pos}, mesh)
+    fn = lambda p, c, t, ps: D.serve_step(mcfg, p, c, t, ps,
+                                          use_window=use_window)
+    jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, io_sh["t"], io_sh["p"]),
+                     out_shardings=(None, None, c_sh))
+    with mesh:
+        lowered = jitted.lower(params_shapes, cache_shapes, tok, pos)
+    meta.update(step_kind="decode", tokens_per_step=B,
+                state_bytes=_spec_bytes(params_shapes) + _spec_bytes(cache_shapes))
+    return lowered, meta
+
+
+def _compile_costs(arch, shape_name, mesh, variant, overrides):
+    t0 = time.time()
+    lowered, meta = build_lowering(arch, shape_name, mesh, variant=variant,
+                                   overrides=overrides)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception:
+        mem_rec = {}
+    coll = H.collective_bytes(compiled.as_text())
+    return dict(
+        meta=meta,
+        flops=float(ca.get("flops", 0.0)),
+        hbm_bytes=float(ca.get("bytes accessed", 0.0)),
+        collectives=coll,
+        memory=mem_rec,
+        seconds=round(time.time() - t0, 1),
+    )
+
+
+# which families have a scanned (rolled) layer stack needing the L-delta
+_SCANNED = ("dense", "moe", "vlm", "audio", "hybrid")
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool,
+             save: bool = True, verbose: bool = True, overrides=None,
+             tag_suffix: str = "") -> dict:
+    skip = is_skipped(arch, shape_name)
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}{tag_suffix}"
+    if skip:
+        rec = dict(arch=arch, shape=shape_name, multi_pod=multi_pod,
+                   status="skipped", reason=skip)
+        if save:
+            _save(tag, rec)
+        if verbose:
+            print(f"[dryrun] {tag}: SKIPPED ({skip.split(';')[0][:60]}...)")
+        return rec
+
+    mcfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = MESH.make_production_mesh(multi_pod=multi_pod)
+    try:
+        full = _compile_costs(arch, shape_name, mesh, "full", overrides)
+        rec = dict(status="ok", **full["meta"])
+        rec.update(full_raw={k: full[k] for k in
+                             ("flops", "hbm_bytes", "collectives", "seconds")},
+                   memory=full["memory"])
+
+        L = mcfg.n_layers
+        # With DRYRUN_UNROLL the layer scan is already unrolled in the full
+        # lowering, so its costs are honest as-is.  The L=1/L=2 delta probes
+        # exist for cross-checking that methodology (REPRO_DRYRUN_DELTAS=1)
+        # but are NOT added to the totals.
+        full_only = multi_pod and bool(os.environ.get("REPRO_MULTIPOD_FULL_ONLY"))
+        needs_delta = (bool(os.environ.get("REPRO_DRYRUN_DELTAS"))
+                       and mcfg.family in _SCANNED and shape.kind != "decode"
+                       and L > 2 and not full_only)
+        if needs_delta:
+            # cross-check only: honest-total should be ~ F_nonlayer + L*delta
+            l1 = _compile_costs(arch, shape_name, mesh, "l1", overrides)
+            l2 = _compile_costs(arch, shape_name, mesh, "l2", overrides)
+            rec["layer_delta_check"] = dict(
+                flops=max(0.0, l2["flops"] - l1["flops"]),
+                hbm_bytes=max(0.0, l2["hbm_bytes"] - l1["hbm_bytes"]),
+                coll_bytes=max(0, l2["collectives"]["total_bytes"]
+                               - l1["collectives"]["total_bytes"]),
+                l1_flops=l1["flops"])
+
+        nw = rec.get("n_workers", 1)
+        rec["flops"] = full["flops"] + slstm_flop_correction(mcfg, shape, nw)
+        rec["hbm_bytes"] = full["hbm_bytes"]
+        rec["coll_bytes"] = full["collectives"]["total_bytes"]
+        rec["collectives"] = full["collectives"]
+
+        if shape.kind == "train" and not full_only:
+            avg = _compile_costs(arch, shape_name, mesh, "avg", overrides)
+            rec["avg_coll_bytes"] = avg["collectives"]["total_bytes"]
+            rec["avg_collectives"] = avg["collectives"]
+
+        from repro.models import model as M
+        rec["n_params"] = M.count_params(mcfg)
+        rec["n_params_active"] = M.count_params(mcfg, active_only=True)
+    except Exception as e:  # a failure here is a bug in the system
+        rec = dict(arch=arch, shape=shape_name, multi_pod=multi_pod,
+                   status="FAILED", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if save:
+            _save(tag, rec)
+        if verbose:
+            print(f"[dryrun] {tag}: FAILED {e}")
+        return rec
+
+    if save:
+        _save(tag, rec)
+    if verbose:
+        print(f"[dryrun] {tag}: ok flops/step={rec['flops']:.3e} "
+              f"hbm={rec['hbm_bytes']:.3e} coll={rec['coll_bytes']:.3e} "
+              f"avg_coll={rec.get('avg_coll_bytes', 0):.3e} "
+              f"compile={full['seconds']}s", flush=True)
+    return rec
+
+
+def _save(tag: str, rec: dict):
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    with open(os.path.join(ARTIFACT_DIR, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                run_pair(arch, shape, multi_pod=mp)
+
+
+if __name__ == "__main__":
+    main()

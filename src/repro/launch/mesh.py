@@ -1,0 +1,42 @@
+"""Mesh construction.  Everything is a function — importing this module never
+touches jax device state (jax locks the device count on first backend init,
+and the dry-run needs to set XLA_FLAGS before that happens).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The production target: one v5e-class pod = a (16, 16) slice with axes
+    (data, model); two pods add a leading "pod" axis over DCI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh with the same axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def coda_worker_axes(policy: str, multi_pod: bool):
+    """Which mesh axes the CoDA worker (replica) axis is sharded over.
+
+    * replica — every worker is one `model`-axis group: K = pod × data.
+    * fsdp    — the giant-MoE policy: a worker spans (data × model); only the
+      pod axis carries workers (K = 2 multi-pod, K = 1 single-pod = PPD-SG).
+    """
+    if policy == "replica":
+        return ("pod", "data") if multi_pod else ("data",)
+    if policy == "fsdp":
+        return ("pod",) if multi_pod else ()
+    raise ValueError(policy)
+
+
+def n_workers(mesh, policy: str) -> int:
+    axes = coda_worker_axes(policy, multi_pod="pod" in mesh.axis_names)
+    k = 1
+    for a in axes:
+        k *= mesh.shape[a]
+    return max(k, 1)

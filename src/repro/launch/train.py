@@ -1,0 +1,119 @@
+"""CoDA training launcher.
+
+CPU-scale end-to-end run (reduced configs) or the production mesh layout.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b --smoke \
+      --workers 4 --stages 2 --t0 30 --interval 8
+  PYTHONPATH=src python -m repro.launch.train --arch mlp --workers 8 \
+      --stages 3 --t0 100 --interval 16 --p-pos 0.71
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import mlp_config
+from repro.core import coda, objective, schedules
+from repro.data import DataConfig, ShardedDataset
+
+
+def data_config_for(mcfg, p_pos: float) -> DataConfig:
+    if mcfg.family == "mlp":
+        return DataConfig(kind="features", p_pos=p_pos, n_features=mcfg.n_features)
+    if mcfg.family == "cnn":
+        return DataConfig(kind="images", p_pos=p_pos, image_hw=32)
+    return DataConfig(kind="tokens", p_pos=p_pos, vocab_size=mcfg.vocab_size,
+                      seq_len=64, d_model=mcfg.d_model)
+
+
+def make_batch_adapters(mcfg, ds: ShardedDataset, key):
+    """Wrap the dataset so modality stubs (patches/frames) are attached."""
+
+    def adapt(b):
+        if mcfg.family == "vlm":
+            lead = b["tokens"].shape[:-1]
+            b = dict(b)
+            b["patches"] = jax.random.normal(
+                key, lead + (mcfg.n_patches, mcfg.d_model))
+            b["tokens"] = b["tokens"][..., :max(1, b["tokens"].shape[-1] - mcfg.n_patches)]
+        elif mcfg.family == "audio":
+            lead = b["tokens"].shape[:-1]
+            S = b["tokens"].shape[-1]
+            b = dict(b)
+            b["frames"] = jax.random.normal(key, lead + (S, mcfg.d_model))
+            b["tokens"] = b["tokens"][..., :max(1, S // mcfg.decoder_fraction)]
+        return b
+
+    return adapt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mlp")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--stages", type=int, default=3)
+    ap.add_argument("--t0", type=int, default=60)
+    ap.add_argument("--eta0", type=float, default=0.5)
+    ap.add_argument("--interval", type=int, default=8, help="I (0 = Thm-1 rule)")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--p-pos", type=float, default=0.71)
+    ap.add_argument("--n-data", type=int, default=8192)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.arch == "mlp":
+        mcfg = mlp_config()
+    elif args.smoke:
+        mcfg = get_smoke_config(args.arch)
+    else:
+        mcfg = get_config(args.arch)
+
+    key = jax.random.PRNGKey(args.seed)
+    dcfg = data_config_for(mcfg, args.p_pos)
+    ds = ShardedDataset(key, dcfg, args.n_data, args.workers,
+                        target_p=args.p_pos)
+    adapt = make_batch_adapters(mcfg, ds, key)
+    print(f"dataset: n={ds.n} p_pos={ds.p_pos:.3f} workers={args.workers}")
+
+    ccfg = coda.CoDAConfig(n_workers=args.workers, p_pos=ds.p_pos)
+    sched = schedules.ScheduleConfig(n_workers=args.workers, eta0=args.eta0,
+                                     T0=args.t0, I0=args.interval,
+                                     p_pos=ds.p_pos)
+
+    test = adapt(ds.full(2048))
+
+    def eval_auc(state) -> float:
+        from repro.models import model as M
+        params0 = jax.tree_util.tree_map(lambda x: x[0], state["params"])
+        inputs = {k: v for k, v in test.items() if k != "labels"}
+        h, _ = M.score(mcfg, params0, inputs)
+        return float(objective.roc_auc(h, test["labels"]))
+
+    t0 = time.time()
+    res = coda.fit(
+        key, mcfg, ccfg, sched, args.stages,
+        sample_window=lambda k, i: adapt(ds.sample_window(k, i, args.batch)),
+        sample_alpha_batch=lambda k, m: adapt(ds.sample_alpha_batch(k, m)))
+    dt = time.time() - t0
+    auc = eval_auc(res.state)
+    print(f"done: {res.iterations} iters, {res.comm_rounds} comm rounds, "
+          f"{dt:.1f}s, test AUC={auc:.4f}")
+    print(f"bytes/round/worker={coda.model_bytes(res.state):,}")
+    if args.ckpt_dir:
+        path = checkpoint.save(args.ckpt_dir, res.iterations, res.state,
+                               {"auc": auc, "arch": mcfg.name})
+        print("checkpoint:", path)
+
+
+if __name__ == "__main__":
+    main()

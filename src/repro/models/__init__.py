@@ -1,0 +1,2 @@
+from repro.models import model  # noqa: F401
+from repro.models.model import backbone, count_params, init_params, lm_logits, score  # noqa: F401

@@ -1,0 +1,31 @@
+"""Feed-forward blocks: SwiGLU (Llama-style) and GeLU (classic)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0, dtype=jnp.float32):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    s = d ** -0.5
+    if cfg.act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": jax.random.normal(k1, (d, ff), dtype) * s,
+            "w_up": jax.random.normal(k2, (d, ff), dtype) * s,
+            "w_down": jax.random.normal(k3, (ff, d), dtype) * ff ** -0.5,
+        }
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": jax.random.normal(k1, (d, ff), dtype) * s,
+        "w_out": jax.random.normal(k2, (ff, d), dtype) * ff ** -0.5,
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    if "w_gate" in p:
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]

@@ -1,0 +1,104 @@
+"""Mixture-of-experts block with top-k routing and capacity-based dispatch.
+
+Dispatch is gather/scatter based (not dense one-hot einsum) so the expert
+FLOPs are the *active* FLOPs: ``E × C × d × ff`` with
+``C = ceil(T · top_k · capacity_factor / E)``.  The expert axis is the
+sharding target for expert parallelism (see sharding/rules.py); GSPMD turns
+the gather/scatter across a sharded expert axis into all-to-all style
+collectives.
+
+Arctic-style ``dense_residual`` adds an always-on MLP branch next to the
+experts.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.mlp import apply_mlp, init_mlp
+
+
+def _constrain(x, spec):
+    """Optional explicit sharding on MoE intermediates (§Perf knob)."""
+    from repro import flags
+    if not flags.MOE_SHARDING_CONSTRAINTS:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    d, ff, E = cfg.d_model, cfg.d_ff, m.n_experts
+    kr, k1, k2, k3, kd = jax.random.split(key, 5)
+    s = d ** -0.5
+    p = {
+        "router": jax.random.normal(kr, (d, E), jnp.float32) * s,
+        "w_gate": jax.random.normal(k1, (E, d, ff), dtype) * s,
+        "w_up": jax.random.normal(k2, (E, d, ff), dtype) * s,
+        "w_down": jax.random.normal(k3, (E, ff, d), dtype) * ff ** -0.5,
+    }
+    if m.dense_residual:
+        p["dense"] = init_mlp(kd, cfg, d_ff=m.dense_d_ff, dtype=dtype)
+    return p
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = math.ceil(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(4, c + (-c) % 4)  # pad to a multiple of 4
+
+
+def apply_moe(cfg: ModelConfig, p, x):
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    C = capacity(cfg, T)
+    xf = x.reshape(T, d)
+
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)  # [T, E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, k)  # [T, k]
+    top_g = top_g / jnp.sum(top_g, axis=-1, keepdims=True)
+
+    # position of each (token, choice) inside its expert's capacity buffer
+    e_flat = top_e.reshape(-1)  # [T*k]
+    t_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    g_flat = top_g.reshape(-1)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - onehot,
+                              e_flat[:, None], axis=1)[:, 0]
+    keep = pos < C
+    safe_e = jnp.where(keep, e_flat, E)  # out-of-range => dropped by scatter
+
+    # [E, C] token index / combine weight per expert slot
+    idx = jnp.zeros((E, C), jnp.int32).at[safe_e, pos].set(t_flat, mode="drop")
+    wgt = jnp.zeros((E, C), jnp.float32).at[safe_e, pos].set(g_flat, mode="drop")
+
+    xe = jnp.take(xf, idx.reshape(-1), axis=0).reshape(E, C, d)  # dispatch
+    xe = _constrain(xe, ("data", None, None))
+    h = _constrain(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]),
+                   ("data", None, "model"))
+    u = _constrain(jnp.einsum("ecd,edf->ecf", xe, p["w_up"]),
+                   ("data", None, "model"))
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, p["w_down"])
+    ye = _constrain(ye, ("data", None, None))
+    ye = ye * wgt[..., None].astype(ye.dtype)
+
+    out = jnp.zeros((T, d), ye.dtype).at[idx.reshape(-1)].add(
+        ye.reshape(E * C, d))  # combine
+    out = out.reshape(B, S, d).astype(x.dtype)
+
+    # Switch-style load-balance auxiliary loss
+    me = jnp.mean(gates, axis=0)  # mean router prob per expert
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    if m.dense_residual:
+        out = out + apply_mlp(cfg, p["dense"], x)
+    return out, aux

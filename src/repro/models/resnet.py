@@ -1,0 +1,86 @@
+"""ResNet50 in pure JAX — the paper's own scoring network (He et al. 2016).
+
+BatchNorm is replaced by GroupNorm(32): CoDA is a pure-functional primal-dual
+algorithm and running batch statistics would add mutable state that the
+paper's analysis (and our worker-averaging) does not model.  This is recorded
+as a hardware/framework adaptation in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.resnet50 import RESNET50_STAGES, RESNET_TINY_STAGES
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), dtype) * (2.0 / fan_in) ** 0.5
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _gn(p, x, groups=32):
+    c = x.shape[-1]
+    g = min(groups, c)
+    xg = x.reshape(*x.shape[:-1], g, c // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (xg.reshape(x.shape) * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def _stages(cfg: ModelConfig):
+    return RESNET_TINY_STAGES if cfg.name == "resnet-tiny" else RESNET50_STAGES
+
+
+def init_resnet(key, cfg: ModelConfig, dtype=jnp.float32):
+    stages = _stages(cfg)
+    ks = iter(jax.random.split(key, 4 + sum(n for n, _ in stages) * 4 + 2))
+    width0 = stages[0][1] // 4
+    p = {"stem": {"w": _conv_init(next(ks), 3, 3, 3, width0, dtype), "gn": _gn_init(width0)},
+         "stages": []}
+    cin = width0
+    for n_blocks, cout in stages:
+        mid = cout // 4
+        blocks = []
+        for b in range(n_blocks):
+            blk = {
+                "w1": _conv_init(next(ks), 1, 1, cin, mid, dtype), "gn1": _gn_init(mid),
+                "w2": _conv_init(next(ks), 3, 3, mid, mid, dtype), "gn2": _gn_init(mid),
+                "w3": _conv_init(next(ks), 1, 1, mid, cout, dtype), "gn3": _gn_init(cout),
+            }
+            if b == 0 and cin != cout:
+                blk["wproj"] = _conv_init(next(ks), 1, 1, cin, cout, dtype)
+            blocks.append(blk)
+            cin = cout
+        p["stages"].append(blocks)
+    return p
+
+
+def apply_resnet(cfg: ModelConfig, p, images):
+    """images: [B, H, W, 3] -> pooled features [B, d]."""
+    x = _gn(p["stem"]["gn"], _conv(images, p["stem"]["w"]))
+    x = jax.nn.relu(x)
+    for si, blocks in enumerate(p["stages"]):
+        for bi, blk in enumerate(blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            h = jax.nn.relu(_gn(blk["gn1"], _conv(x, blk["w1"])))
+            h = jax.nn.relu(_gn(blk["gn2"], _conv(h, blk["w2"], stride)))
+            h = _gn(blk["gn3"], _conv(h, blk["w3"]))
+            sc = x
+            if "wproj" in blk:
+                sc = _conv(x, blk["wproj"], stride)
+            elif stride != 1:
+                sc = _conv(x, jnp.eye(x.shape[-1], dtype=x.dtype)[None, None], stride)
+            x = jax.nn.relu(h + sc)
+    return jnp.mean(x, axis=(1, 2))  # global average pool

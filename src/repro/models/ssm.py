@@ -1,0 +1,111 @@
+"""Mamba-style selective state-space layer (Hymba's SSM branch).
+
+Train/prefill uses a parallel linear-recurrence via
+``jax.lax.associative_scan`` over the sequence axis; decode keeps an O(1)
+recurrent state ``(conv_state, ssm_state)``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return di, N, dt_rank
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di, N, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, di), dtype) * 0.2,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, dt_rank + 2 * N), dtype) * di ** -0.5,
+        "dt_proj": jax.random.normal(ks[3], (dt_rank, di), dtype) * dt_rank ** -0.5,
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01))).astype(dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def _causal_conv(p, xi):
+    """Depthwise causal conv over [B, S, di]."""
+    K = p["conv_w"].shape[0]
+    pad = jnp.pad(xi, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, k:k + xi.shape[1]] * p["conv_w"][k] for k in range(K))
+    return out + p["conv_b"]
+
+
+def _ssm_inputs(cfg, p, xi):
+    di, N, dt_rank = _dims(cfg)
+    proj = xi @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    Bc = proj[..., dt_rank:dt_rank + N]
+    Cc = proj[..., dt_rank + N:]
+    A = -jnp.exp(p["A_log"])  # [di, N] (fp32)
+    # keep the recurrence inputs in fp32: associative_scan concatenates the
+    # carry pair, so both elements must share one dtype, and the cumulative
+    # product is numerically delicate anyway
+    dt = dt.astype(jnp.float32)
+    dA = jnp.exp(dt[..., None] * A)                        # [..., di, N]
+    dBx = ((dt * xi.astype(jnp.float32))[..., None]
+           * Bc.astype(jnp.float32)[..., None, :])         # [..., di, N]
+    return dA, dBx, Cc
+
+
+def apply_ssm(cfg: ModelConfig, p, x):
+    """x: [B, S, d] -> [B, S, d]."""
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = jax.nn.silu(_causal_conv(p, xi))
+    dA, dBx, Cc = _ssm_inputs(cfg, p, xi)  # [B, S, di, N] x2, [B, S, N]
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cc.astype(jnp.float32))
+    y = (y + p["D"] * xi.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return (y @ p["out_proj"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+def init_ssm_state(cfg: ModelConfig, B: int, dtype=jnp.float32):
+    di, N, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((B, cfg.ssm_conv - 1, di), dtype),
+        "h": jnp.zeros((B, di, N), dtype),
+    }
+
+
+def decode_ssm(cfg: ModelConfig, p, state, x):
+    """One-token step.  x: [B, 1, d] -> ([B, 1, d], new_state)."""
+    xz = x[:, 0] @ p["in_proj"]
+    di = p["in_proj"].shape[1] // 2
+    xi, z = xz[:, :di], xz[:, di:]
+    K = p["conv_w"].shape[0]
+    hist = jnp.concatenate([state["conv"], xi[:, None]], axis=1)  # [B, K, di]
+    xi = jax.nn.silu(jnp.einsum("bkd,kd->bd", hist, p["conv_w"]) + p["conv_b"])
+    dA, dBx, Cc = _ssm_inputs(cfg, p, xi)  # [B, di, N] x2, [B, N]
+    h = dA * state["h"].astype(dA.dtype) + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32))
+    y = (y + p["D"] * xi.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None].astype(x.dtype)
+    return out, {"conv": hist[:, 1:], "h": h}

@@ -1,0 +1,214 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise/quadratic-parallel for
+train & prefill, O(1) recurrent for decode) and sLSTM (strictly sequential
+scalar memory, ``lax.scan``).  [arXiv:2405.04517]
+
+The 350M config uses xLSTM[7:1]: every ``slstm_every``-th block is sLSTM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _mdims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    H = cfg.n_heads
+    return di, H, di // H
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di, H, hd = _mdims(cfg)
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, di), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, di), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, di), dtype) * s,
+        "wz": jax.random.normal(ks[3], (d, di), dtype) * s,  # output gate branch
+        "wi": jax.random.normal(ks[4], (d, H), dtype) * s,   # input gate (per head)
+        "wf": jax.random.normal(ks[5], (d, H), dtype) * s,   # forget gate (per head)
+        "bi": jnp.zeros((H,), jnp.float32),
+        "bf": jnp.full((H,), 3.0, jnp.float32),  # forget-open init
+        "w_down": jax.random.normal(ks[6], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def _mlstm_qkv(cfg, p, x):
+    di, H, hd = _mdims(cfg)
+    B, S = x.shape[:2]
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, H, hd) * hd ** -0.5
+    v = (x @ p["wv"]).reshape(B, S, H, hd)
+    ig = (x @ p["wi"]).astype(jnp.float32) + p["bi"]           # [B, S, H]
+    fg = (x @ p["wf"]).astype(jnp.float32) + p["bf"]
+    return q, k, v, ig, fg
+
+
+def apply_mlstm(cfg: ModelConfig, p, x, chunk: int = 256):
+    """Chunkwise-parallel mLSTM: sequential ``lax.scan`` over chunks carrying
+    the matrix memory, quadratic only within a chunk (O(S·C) memory — this is
+    what makes ``prefill_32k``/``long_500k`` feasible for the SSM family).
+
+    x: [B, S, d] -> [B, S, d].
+    """
+    from repro import flags
+    B, S = x.shape[:2]
+    di, H, hd = _mdims(cfg)
+    C = min(flags.mlstm_chunk(S, chunk), S)
+    assert S % C == 0, (S, C)
+    q, k, v, ig, fg = _mlstm_qkv(cfg, p, x)
+    logf = jax.nn.log_sigmoid(fg)  # [B, S, H]
+
+    def to_chunks(a):  # [B, S, ...] -> [S//C, B, C, ...]
+        return jnp.moveaxis(a.reshape(B, S // C, C, *a.shape[2:]), 1, 0)
+
+    qc, kc, vc = map(to_chunks, (q.astype(jnp.float32), k.astype(jnp.float32),
+                                 v.astype(jnp.float32)))
+    igc, lfc = to_chunks(ig), to_chunks(logf)
+
+    init = (jnp.zeros((B, H, hd, hd), jnp.float32),   # C matrix memory
+            jnp.zeros((B, H, hd), jnp.float32),       # n normalizer
+            jnp.full((B, H), -1e30, jnp.float32))     # m stabilizer
+
+    tri = jnp.tril(jnp.ones((C, C), bool))
+
+    def step(carry, inp):
+        Cm, n, m = carry
+        qt, kt, vt, igt, lft = inp                     # [B,C,H,*]
+        F = jnp.cumsum(lft, axis=1)                    # inclusive decay  [B,C,H]
+        # intra-chunk log gate matrix D[t, j] = F_t - F_j + ig_j  (j <= t)
+        D = F[:, :, None, :] - F[:, None, :, :] + igt[:, None, :, :]
+        D = jnp.where(tri[None, :, :, None], D, -jnp.inf)
+        m_intra = jnp.max(D, axis=2)                   # [B,C,H]
+        b = F + m[:, None, :]                          # inter decay at step t
+        m_t = jnp.maximum(m_intra, b)                  # combined stabilizer
+        Dh = jnp.exp(D - m_t[:, :, None, :])           # [B,C,C,H]
+        qk = jnp.einsum("bihd,bjhd->bijh", qt, kt)
+        Sm = qk * Dh
+        inter_s = jnp.exp(b - m_t)                     # [B,C,H]
+        num = (jnp.einsum("bijh,bjhd->bihd", Sm, vt)
+               + inter_s[..., None] * jnp.einsum("bihd,bhde->bihe", qt, Cm))
+        den = (jnp.sum(Sm, axis=2)
+               + inter_s * jnp.einsum("bihd,bhd->bih", qt, n))
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- state update to end of chunk ----
+        Ftot = F[:, -1]                                # [B,H]
+        g = Ftot[:, None] - F + igt                    # decay of writes to chunk end
+        m_new = jnp.maximum(m + Ftot, jnp.max(g, axis=1))
+        wr = jnp.exp(g - m_new[:, None])               # [B,C,H]
+        Cm_new = (jnp.exp(m + Ftot - m_new)[..., None, None] * Cm
+                  + jnp.einsum("bjh,bjhd,bjhe->bhde", wr, kt, vt))
+        n_new = (jnp.exp(m + Ftot - m_new)[..., None] * n
+                 + jnp.einsum("bjh,bjhd->bhd", wr, kt))
+        return (Cm_new, n_new, m_new), h
+
+    _, hs = jax.lax.scan(step, init, (qc, kc, vc, igc, lfc),
+                         unroll=flags.scan_unroll())
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di).astype(x.dtype)
+    h = h * jax.nn.silu(x @ p["wz"])
+    return h @ p["w_down"]
+
+
+def init_mlstm_state(cfg: ModelConfig, B: int, dtype=jnp.float32):
+    di, H, hd = _mdims(cfg)
+    return {
+        "C": jnp.zeros((B, H, hd, hd), dtype),
+        "n": jnp.zeros((B, H, hd), dtype),
+        "m": jnp.full((B, H), -1e30, dtype),
+    }
+
+
+def decode_mlstm(cfg: ModelConfig, p, state, x):
+    """One-token recurrent mLSTM.  x: [B, 1, d]."""
+    B = x.shape[0]
+    di, H, hd = _mdims(cfg)
+    q, k, v, ig, fg = _mlstm_qkv(cfg, p, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]          # [B, H, hd]
+    ig, fg = ig[:, 0], fg[:, 0]                   # [B, H]
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + state["m"], ig)
+    fs = jnp.exp(logf + state["m"] - m_new)[..., None]
+    is_ = jnp.exp(ig - m_new)[..., None]
+    C = state["C"] * fs[..., None] + is_[..., None] * jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(state["C"].dtype), v.astype(state["C"].dtype))
+    n = state["n"] * fs + is_ * k.astype(state["n"].dtype)
+    num = jnp.einsum("bhkv,bhk->bhv", C, q.astype(C.dtype))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q.astype(n.dtype))),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, di).astype(x.dtype)
+    h = h * jax.nn.silu(x @ p["wz"])
+    out = h @ p["w_down"]
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 3)
+    s = d ** -0.5
+    return {
+        # fused input projection for (z, i, f, o)
+        "w_in": jax.random.normal(ks[0], (d, 4 * d), dtype) * s,
+        "b_in": jnp.zeros((4 * d,), jnp.float32),
+        # block-diagonal (per-head) recurrent matrices for (z, i, f, o)
+        "r": jax.random.normal(ks[1], (4, H, hd, hd), dtype) * hd ** -0.5,
+        "w_out": jax.random.normal(ks[2], (d, d), dtype) * s,
+    }
+
+
+def _slstm_cell(cfg, p, carry, u4):
+    """carry: (c, n, h, m) each [B, d]; u4: input pre-activations [B, 4d]."""
+    c, n, h, m = carry
+    B, d = c.shape
+    H = cfg.n_heads
+    hd = d // H
+    hh = h.reshape(B, H, hd)
+    rec = jnp.einsum("bhk,ghkl->gbhl", hh, p["r"]).reshape(4, B, d)
+    z_, i_, f_, o_ = jnp.split(u4, 4, axis=-1)
+    z = jnp.tanh(z_ + rec[0])
+    logi = (i_ + rec[1]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid((f_ + rec[2]).astype(jnp.float32))
+    o = jax.nn.sigmoid(o_ + rec[3])
+    m_new = jnp.maximum(logf + m, logi)
+    i_s = jnp.exp(logi - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * z.astype(jnp.float32)
+    n_new = jnp.maximum(f_s * n + i_s, 1e-6)
+    h_new = (o.astype(jnp.float32) * c_new / n_new).astype(h.dtype)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def apply_slstm(cfg: ModelConfig, p, x):
+    """Sequential sLSTM over [B, S, d] via lax.scan."""
+    B, S, d = x.shape
+    u = x @ p["w_in"] + p["b_in"].astype(x.dtype)  # [B, S, 4d]
+    carry = init_slstm_state(cfg, B, d)
+
+    def step(c, u_t):
+        return _slstm_cell(cfg, p, c, u_t)
+
+    _, hs = jax.lax.scan(step, carry, jnp.swapaxes(u, 0, 1))
+    return jnp.swapaxes(hs, 0, 1) @ p["w_out"]
+
+
+def init_slstm_state(cfg: ModelConfig, B: int, d: int = 0):
+    d = d or cfg.d_model
+    z = jnp.zeros((B, d), jnp.float32)
+    return (z, z + 1e-6, jnp.zeros((B, d), jnp.float32), z - 1e30)
+
+
+def decode_slstm(cfg: ModelConfig, p, state, x):
+    """One-token sLSTM.  x: [B, 1, d]."""
+    u = x[:, 0] @ p["w_in"] + p["b_in"].astype(x.dtype)
+    new_state, h = _slstm_cell(cfg, p, state, u)
+    return (h @ p["w_out"])[:, None], new_state

@@ -1,0 +1,3 @@
+from repro.serving import decode, engine  # noqa: F401
+from repro.serving.decode import cache_specs, init_cache, prefill, serve_step  # noqa: F401
+from repro.serving.engine import Request, ServingEngine  # noqa: F401

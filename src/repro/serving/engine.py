@@ -1,0 +1,112 @@
+"""A small-but-real batched serving engine on top of ``serve_step``.
+
+Continuous batching over a fixed number of slots: requests (prompt token
+lists) are admitted into free slots, prefilled token-by-token through the
+same jitted ``serve_step`` (cache-exact), then decoded greedily until EOS or
+``max_new_tokens``.  Finished slots are recycled.  This is the driver behind
+``examples/serve_requests.py`` and the serving integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving import decode as D
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: int = -1
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256, use_window: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.use_window = use_window
+        self.cache = D.init_cache(cfg, slots, max_len, use_window=use_window,
+                                  dtype=jnp.float32)
+        self.queue: deque[Request] = deque()
+        self.active: List[Optional[Request]] = [None] * slots
+        self.pos = np.zeros(slots, np.int64)        # next position per slot
+        self.pending = [deque() for _ in range(slots)]  # unconsumed prompt tokens
+        self._step = jax.jit(
+            lambda params, cache, tok, pos: D.serve_step(
+                cfg, params, cache, tok, pos, use_window=use_window))
+
+    def add_request(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[s] = req
+                self.pos[s] = 0
+                self.pending[s] = deque(req.prompt)
+                self.cache = self._reset_slot(s)
+
+    def _reset_slot(self, s: int):
+        fresh = D.init_cache(self.cfg, 1, self.max_len,
+                             use_window=self.use_window, dtype=jnp.float32)
+
+        def put(old, new):
+            return old.at[s:s + 1].set(new) if hasattr(old, "at") else old
+
+        return jax.tree_util.tree_map(put, self.cache, fresh)
+
+    def step(self) -> int:
+        """One engine tick: feeds every active slot one token (prompt token
+        during prefill, previously-sampled token during decode).  Returns the
+        number of active requests."""
+        self._admit()
+        tok = np.zeros((self.slots, 1), np.int32)
+        pos = np.zeros((self.slots,), np.int32)
+        feeding = [False] * self.slots
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            if self.pending[s]:
+                tok[s, 0] = self.pending[s].popleft()
+            elif req.generated:
+                tok[s, 0] = req.generated[-1]
+            else:
+                continue
+            pos[s] = self.pos[s]
+            feeding[s] = True
+        if not any(feeding):
+            return 0
+        logits, _, self.cache = self._step(self.params, self.cache,
+                                           jnp.asarray(tok), jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for s, req in enumerate(self.active):
+            if req is None or not feeding[s]:
+                continue
+            self.pos[s] += 1
+            if not self.pending[s]:  # decoding phase: the output token counts
+                req.generated.append(int(nxt[s]))
+                if (len(req.generated) >= req.max_new_tokens
+                        or int(nxt[s]) == req.eos_id
+                        or self.pos[s] >= self.max_len - 1):
+                    req.done = True
+                    self.active[s] = None
+        return sum(r is not None for r in self.active) + len(self.queue)
+
+    def run(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if self.step() == 0 and not self.queue:
+                return

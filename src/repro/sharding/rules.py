@@ -1,0 +1,188 @@
+"""Name-based sharding rules: parameter pytree → PartitionSpecs.
+
+Two policies (see DESIGN.md §4):
+  * "replica" — CoDA worker axis over (pod, data); tensor-parallel dims over
+    "model".  Used by every arch whose replica fits a 16-chip model group.
+  * "fsdp"    — giant MoE: worker axis over (pod) only; experts over "data",
+    tensor-parallel dims over "model", dense-weight d_model dims additionally
+    over "data" (FSDP-style), activations' batch over "data".
+
+Every rule is divisibility-guarded: an axis that does not divide the dim is
+dropped (replicated) rather than producing a lowering error — uneven vocab
+sizes (92553, 256206, 32001) simply fall back to replicated embedding rows.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import coda_worker_axes
+
+# weights whose LAST dim is the tensor-parallel output dim: [.., d_in, d_out]
+_OUT_PARALLEL = {"wq", "wk", "wv", "wz", "w_gate", "w_up", "w_in", "in_proj",
+                 "x_proj", "dt_proj", "lm_head"}
+# weights whose FIRST trailing dim is the tensor-parallel (contracted) dim
+_IN_PARALLEL = {"wo", "w_down", "w_out", "out_proj"}
+# 1-d vectors laid out along the tensor-parallel dim
+_VEC_PARALLEL = {"bq", "bk", "bv", "conv_b", "dt_bias", "D", "b_in"}
+
+
+def _fits(dim: int, axes, mesh) -> bool:
+    if axes is None:
+        return False
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    if not axes:
+        return False
+    n = 1
+    for a in axes:
+        if a not in mesh.axis_names:
+            return False
+        n *= mesh.shape[a]
+    return dim % n == 0 and dim >= n
+
+
+def _guard(shape, spec, mesh):
+    out = []
+    for dim, axes in zip(shape, spec):
+        out.append(axes if axes is not None and _fits(dim, axes, mesh) else None)
+    return out
+
+
+def _trailing_rule(name: str, nd: int, policy: str, in_moe_experts: bool):
+    """Spec for the trailing (per-layer, per-worker) dims of one leaf."""
+    fs = "data" if policy == "fsdp" else None  # FSDP weight-shard axis
+    if in_moe_experts:
+        # [E, d, ff] / [E, ff, d]: experts over "data" (expert parallelism)
+        ea = "data" if policy == "fsdp" else None
+        if name in ("w_gate", "w_up"):
+            return [ea, None, "model"]
+        if name == "w_down":
+            return [ea, "model", None]
+        return [None] * nd
+    if name == "table":          # embedding [V, d]
+        return ["model", fs]
+    if name == "A_log":          # [di, N]
+        return ["model", None]
+    if name == "conv_w":         # [K, di]
+        return [None, "model"]
+    if name == "r":              # sLSTM recurrent [4, H, hd, hd]
+        return [None] * nd
+    if name in ("projector", "enc_in"):
+        return [None, "model"]
+    if name in _OUT_PARALLEL and nd == 2:
+        return [fs, "model"]
+    if name in _IN_PARALLEL and nd == 2:
+        return ["model", fs]
+    if name in _VEC_PARALLEL and nd == 1:
+        return ["model"]
+    return [None] * nd
+
+
+def param_spec(path, leaf, mesh, policy: str, *, worker_axes=()):
+    """PartitionSpec for one parameter leaf given its pytree path."""
+    name = ""
+    keys = []
+    stacked_layers = False
+    for e in path:
+        if hasattr(e, "key") and isinstance(e.key, str):
+            keys.append(e.key)
+            name = e.key
+        elif hasattr(e, "idx") or hasattr(e, "index"):
+            keys.append("#")
+    in_layers = ("layers" in keys or "encoder" in keys)
+    # stacked iff inside layers/encoder and NOT a list entry (xlstm/resnet use
+    # per-layer lists whose leaves carry no leading L dim)
+    stacked_layers = in_layers and "#" not in keys
+    in_moe_experts = "moe" in keys and "dense" not in keys and name != "router"
+
+    shape = leaf.shape
+    spec = []
+    rest = list(shape)
+    if worker_axes:
+        wa = tuple(a for a in worker_axes if a in mesh.axis_names)
+        spec.append(wa or None)
+        rest = rest[1:]
+    if stacked_layers and rest:
+        spec.append(None)  # the L dim
+        rest = rest[1:]
+    spec += _trailing_rule(name, len(rest), policy,
+                           in_moe_experts and len(rest) >= 3)
+    return P(*_guard(shape, spec, mesh))
+
+
+def tree_shardings(tree, mesh, policy: str, *, worker_axes=()):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = [NamedSharding(mesh, param_spec(p, l, mesh, policy,
+                                            worker_axes=worker_axes))
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --------------------------------------------------------------------------
+# CoDA state + batches + serving
+# --------------------------------------------------------------------------
+def state_shardings(state_shapes, mesh, policy: str, multi_pod: bool):
+    wa = coda_worker_axes(policy, multi_pod)
+    out = {}
+    for k, v in state_shapes.items():
+        if k in ("params", "ref_params"):
+            out[k] = tree_shardings(v, mesh, policy, worker_axes=wa)
+        else:  # a, b, alpha, ref_a, ref_b: [K]
+            spec = P(wa) if wa and _fits(v.shape[0], tuple(wa), mesh) else P(None)
+            out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def batch_shardings(batch_shapes, mesh, policy: str, multi_pod: bool):
+    """Window batches [I, K, B, ...]: worker dim over the worker axes; under
+    fsdp the per-worker batch additionally shards over "data"."""
+    wa = coda_worker_axes(policy, multi_pod)
+    bax = "data" if policy == "fsdp" else None
+
+    def spec(l):
+        s = [None] * len(l.shape)
+        if len(l.shape) >= 2 and wa and _fits(l.shape[1], tuple(wa), mesh):
+            s[1] = tuple(wa)
+        if len(l.shape) >= 3 and bax and _fits(l.shape[2], (bax,), mesh):
+            s[2] = bax
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map(spec, batch_shapes)
+
+
+def serve_shardings(tree_shapes, mesh, cache_shard: str = "heads"):
+    """Serving activations/caches: batch over (pod, data) when divisible.
+
+    KV caches [B, S, KV, hd]:
+      * cache_shard="heads" — shard KV heads (or, failing divisibility,
+        head_dim) over "model".  Sharding head_dim makes every attention
+        contraction emit an all-reduce of [B,KV,G,S] scores — the §Perf
+        decode hillclimb measures exactly that pathology.
+      * cache_shard="seq"   — flash-decode style: shard the *sequence* dim
+        over "model"; the cross-shard reduction is only the softmax stats
+        and the [B,H,hd] partial outputs.
+    """
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def spec(l):
+        s = [None] * len(l.shape)
+        if len(l.shape) >= 1 and axes and _fits(l.shape[0], axes, mesh):
+            s[0] = axes
+        if len(l.shape) == 4:
+            if cache_shard == "seq" and _fits(l.shape[1], ("model",), mesh):
+                s[1] = "model"
+            elif _fits(l.shape[2], ("model",), mesh):
+                s[2] = "model"
+            elif _fits(l.shape[3], ("model",), mesh):
+                s[3] = "model"
+        if len(l.shape) == 3 and cache_shard == "seq" \
+                and _fits(l.shape[1], ("model",), mesh):
+            s[1] = "model"  # per-slot scale tensors [B, S, KV]
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map(spec, tree_shapes)
+
+
+def policy_for(arch_name: str) -> str:
+    """Giant MoEs cannot give every 16-chip group a replica (DESIGN.md §4)."""
+    return "fsdp" if arch_name in ("arctic-480b", "dbrx-132b") else "replica"

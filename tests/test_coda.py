@@ -1,0 +1,169 @@
+"""CoDA algorithm tests: structural equivalences (K=1 ⇒ PPD-SG, I=1 ⇒
+NP-PPD-SG), the paper's boundedness lemmas as hypothesis properties, and
+end-to-end convergence (AUC > 0.9 on separable synthetic data)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import mlp_config
+from repro.core import baselines, coda, objective, schedules
+from repro.data import DataConfig, ShardedDataset
+
+MCFG = mlp_config(n_features=16, d=32)
+
+
+def _ccfg(K, p=0.7):
+    return coda.CoDAConfig(n_workers=K, p_pos=p)
+
+
+def _window(key, I, K, B, p=0.7):
+    kx, ky = jax.random.split(key)
+    y = (jax.random.uniform(ky, (I, K, B)) < p).astype(jnp.float32)
+    x = jax.random.normal(kx, (I, K, B, 16)) + 0.3 * (y[..., None] * 2 - 1)
+    return {"features": x, "labels": y}
+
+
+def _spread(state):
+    leaves = jax.tree_util.tree_leaves(state["params"])
+    return max(float(jnp.max(jnp.abs(l - l[0:1]))) for l in leaves)
+
+
+def test_average_syncs_workers():
+    key = jax.random.PRNGKey(0)
+    st_ = coda.init_state(key, MCFG, _ccfg(4))
+    wb = _window(key, 3, 4, 8)
+    st2, _ = coda.window_step(MCFG, _ccfg(4), st_, wb, 0.1, communicate=False)
+    assert _spread(st2) > 1e-6  # local steps diverge across workers
+    st3 = coda.average(st2)
+    assert _spread(st3) < 1e-7
+    # averaging preserves the mean
+    m2 = jnp.mean(st2["params"]["score_head"]["w"], axis=0)
+    m3 = jnp.mean(st3["params"]["score_head"]["w"], axis=0)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(m3), atol=1e-7)
+
+
+def test_window_equals_manual_steps():
+    """window_step(I) must equal I explicit local_steps + one average."""
+    key = jax.random.PRNGKey(1)
+    ccfg = _ccfg(2)
+    st0 = coda.init_state(key, MCFG, ccfg)
+    wb = _window(key, 4, 2, 8)
+    out1, _ = coda.window_step(MCFG, ccfg, st0, wb, 0.05)
+    st_m = st0
+    for i in range(4):
+        st_m, _ = coda.local_step(MCFG, ccfg, st_m,
+                                  jax.tree_util.tree_map(lambda a: a[i], wb), 0.05)
+    st_m = coda.average(st_m)
+    for l1, l2 in zip(jax.tree_util.tree_leaves(out1),
+                      jax.tree_util.tree_leaves(st_m)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-6)
+
+
+def test_k1_is_ppd_sg():
+    """With K=1, averaging is a no-op: CoDA reduces to PPD-SG exactly."""
+    key = jax.random.PRNGKey(2)
+    ccfg = _ccfg(1)
+    st0 = coda.init_state(key, MCFG, ccfg)
+    wb = _window(key, 3, 1, 8)
+    with_avg, _ = coda.window_step(MCFG, ccfg, st0, wb, 0.05, communicate=True)
+    without, _ = coda.window_step(MCFG, ccfg, st0, wb, 0.05, communicate=False)
+    for l1, l2 in zip(jax.tree_util.tree_leaves(with_avg),
+                      jax.tree_util.tree_leaves(without)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-7)
+
+
+def test_i1_is_np_ppd_sg():
+    """I=1 must match the NP-PPD-SG baseline helper step-for-step."""
+    key = jax.random.PRNGKey(3)
+    ccfg = _ccfg(4)
+    st0 = coda.init_state(key, MCFG, ccfg)
+    wb = _window(key, 3, 4, 8)
+    # I=1 three times
+    s1 = st0
+    for i in range(3):
+        s1, _ = coda.window_step(
+            MCFG, ccfg, s1, jax.tree_util.tree_map(lambda a: a[i:i + 1], wb), 0.05)
+    s2, _ = baselines.np_ppd_sg_window(MCFG, ccfg, st0, wb, 0.05)
+    for l1, l2 in zip(jax.tree_util.tree_leaves(s1),
+                      jax.tree_util.tree_leaves(s2)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.floats(0.2, 0.8), eta=st.floats(0.01, 0.4),
+       seed=st.integers(0, 1000))
+def test_lemma7_8_bounds(p, eta, seed):
+    """Lemma 7: |α_t| ≤ max(p,1-p)/(p(1-p)); Lemma 8: |a_t|,|b_t| ≤ 1 —
+    under the update rules, given h ∈ [0,1] and step-size conditions."""
+    bound_alpha = max(p, 1 - p) / (p * (1 - p))
+    eta = min(eta, 1 / (2 * p * (1 - p)), 1 / (2 * p), 1 / (2 * (1 - p)))
+    key = jax.random.PRNGKey(seed)
+    gamma = 0.5
+    a = b = alpha = 0.0
+    ref_a = ref_b = 0.0
+    for t in range(30):
+        key, kh, ky = jax.random.split(key, 3)
+        h = jax.random.uniform(kh, (32,))
+        y = (jax.random.uniform(ky, (32,)) < p).astype(jnp.float32)
+        from repro.kernels.ref import auc_loss_ref
+        _, _, da, db, dal = auc_loss_ref(h, y, a, b, alpha, p)
+        da, db, dal = float(da), float(db), float(dal)
+        a = (gamma * (a - eta * da) + eta * ref_a) / (eta + gamma)
+        b = (gamma * (b - eta * db) + eta * ref_b) / (eta + gamma)
+        alpha = alpha + eta * dal
+        assert abs(a) <= 1 + 1e-5
+        assert abs(b) <= 1 + 1e-5
+        assert abs(alpha) <= bound_alpha + 1e-4
+
+
+def test_stage_end_sets_alpha_and_reference():
+    key = jax.random.PRNGKey(4)
+    ccfg = _ccfg(4)
+    st0 = coda.init_state(key, MCFG, ccfg)
+    wb = _window(key, 2, 4, 16)
+    st1, _ = coda.window_step(MCFG, ccfg, st0, wb, 0.1)
+    ab = jax.tree_util.tree_map(lambda a: a[0], wb)
+    st2 = coda.stage_end(MCFG, ccfg, st1, ab)
+    # alpha identical on all workers, reference moved to current params
+    assert float(jnp.max(jnp.abs(st2["alpha"] - st2["alpha"][0]))) == 0.0
+    for l1, l2 in zip(jax.tree_util.tree_leaves(st2["ref_params"]),
+                      jax.tree_util.tree_leaves(st2["params"])):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2))
+
+
+@pytest.mark.parametrize("K,I", [(1, 1), (4, 8)])
+def test_convergence_auc(K, I):
+    """End-to-end: CoDA reaches AUC > 0.9 on separable imbalanced data, for
+    both the PPD-SG special case and a communication-skipping setting."""
+    key = jax.random.PRNGKey(5)
+    dcfg = DataConfig(kind="features", n_features=16, signal=2.0)
+    ds = ShardedDataset(key, dcfg, 4096, K, target_p=0.71)
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=ds.p_pos)
+    sched = schedules.ScheduleConfig(n_workers=K, eta0=0.5, T0=48, I0=I)
+    res = coda.fit(key, MCFG, ccfg, sched, 2,
+                   sample_window=lambda k, i: ds.sample_window(k, i, 32),
+                   sample_alpha_batch=lambda k, m: ds.sample_alpha_batch(k, m))
+    test = ds.full(1024)
+    from repro.models import model as M
+    params0 = jax.tree_util.tree_map(lambda x: x[0], res.state["params"])
+    h, _ = M.score(MCFG, params0, {"features": test["features"]})
+    auc = float(objective.roc_auc(h, test["labels"]))
+    assert auc > 0.9, auc
+    assert res.comm_rounds == sum(-(-s.T // s.I) + 1
+                                  for s in schedules.stages(sched, 2))
+
+
+def test_loss_decreases():
+    key = jax.random.PRNGKey(6)
+    ccfg = _ccfg(4)
+    st_ = coda.init_state(key, MCFG, ccfg)
+    losses = []
+    for t in range(25):
+        key, sk = jax.random.split(key)
+        st_, ls = coda.window_step(MCFG, ccfg, st_, _window(sk, 2, 4, 32), 0.2)
+        losses.append(float(jnp.mean(ls)))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])

@@ -1,0 +1,130 @@
+"""Decode-vs-parallel consistency: feeding a sequence token-by-token through
+``serve_step`` (KV caches / recurrent states) must reproduce the hidden state
+of the parallel (train/prefill) forward — per family, including the ring
+buffer and the chunkwise-mLSTM/recurrent-mLSTM pair."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.models import model as M
+from repro.models import xlstm as xl
+from repro.serving import decode as D
+
+
+def _decode_last_logits(cfg, params, tokens, use_window):
+    B, S = tokens.shape
+    cache = D.init_cache(cfg, B, S, use_window=use_window, dtype=jnp.float32)
+    logits = None
+    for t in range(S):
+        logits, _, cache = D.serve_step(cfg, params, cache, tokens[:, t:t + 1],
+                                        jnp.full((B,), t, jnp.int32),
+                                        use_window=use_window)
+    return logits
+
+
+def _parallel_last_logits(cfg, params, tokens, use_window):
+    h, _ = M.backbone(cfg, params, {"tokens": tokens}, use_window=use_window)
+    return M.lm_logits(cfg, params, h[:, -1])
+
+
+@pytest.mark.parametrize("arch,use_window", [
+    ("qwen2.5-14b", False),
+    ("chatglm3-6b", False),       # 2d RoPE + GQA kv=2
+    ("stablelm-1.6b", False),     # partial rotary, layernorm, MHA
+    ("dbrx-132b", False),         # MoE top-2 of 4
+    ("hymba-1.5b", True),         # window rings + mamba state + global layers
+    ("xlstm-350m", False),        # mLSTM chunkwise vs recurrent + sLSTM scan
+])
+def test_decode_matches_parallel(arch, use_window):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    tokens = jax.random.randint(key, (2, 24), 0, cfg.vocab_size)
+    got = _decode_last_logits(cfg, params, tokens, use_window)
+    exp = _parallel_last_logits(cfg, params, tokens, use_window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ring_buffer_matches_windowed_attention():
+    """Sequence longer than the ring: decode through a W-slot ring must equal
+    the parallel forward with sliding-window masking."""
+    cfg = dataclasses.replace(get_smoke_config("qwen2.5-14b"), window=8,
+                              window_mode="optional")
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    tokens = jax.random.randint(key, (1, 24), 0, cfg.vocab_size)
+    got = _decode_last_logits(cfg, params, tokens, use_window=True)
+    exp = _parallel_last_logits(cfg, params, tokens, use_window=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_mlstm_chunkwise_equals_recurrent():
+    cfg = get_smoke_config("xlstm-350m")
+    key = jax.random.PRNGKey(2)
+    p = xl.init_mlstm(key, cfg)
+    x = jax.random.normal(key, (2, 32, cfg.d_model)) * 0.5
+    par = xl.apply_mlstm(cfg, p, x, chunk=8)
+    state = xl.init_mlstm_state(cfg, 2)
+    outs = []
+    for t in range(32):
+        o, state = xl.decode_mlstm(cfg, p, state, x[:, t:t + 1])
+        outs.append(o)
+    rec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(par), np.asarray(rec),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_mlstm_chunk_size_invariance():
+    cfg = get_smoke_config("xlstm-350m")
+    key = jax.random.PRNGKey(3)
+    p = xl.init_mlstm(key, cfg)
+    x = jax.random.normal(key, (1, 64, cfg.d_model)) * 0.5
+    a = xl.apply_mlstm(cfg, p, x, chunk=64)
+    b = xl.apply_mlstm(cfg, p, x, chunk=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4,
+                               rtol=2e-3)
+
+
+def test_ssm_decode_matches_parallel():
+    from repro.models.ssm import apply_ssm, decode_ssm, init_ssm, init_ssm_state
+    cfg = get_smoke_config("hymba-1.5b")
+    key = jax.random.PRNGKey(4)
+    p = init_ssm(key, cfg)
+    x = jax.random.normal(key, (2, 16, cfg.d_model)) * 0.5
+    par = apply_ssm(cfg, p, x)
+    state = init_ssm_state(cfg, 2)
+    outs = []
+    for t in range(16):
+        o, state = decode_ssm(cfg, p, state, x[:, t:t + 1])
+        outs.append(o)
+    rec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(par), np.asarray(rec),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_encdec_decode_matches_parallel():
+    cfg = get_smoke_config("seamless-m4t-medium")
+    key = jax.random.PRNGKey(5)
+    params = init_params(key, cfg)
+    B, Se = 2, 16
+    Sd = Se // cfg.decoder_fraction  # the decoder self-cache is sized S//4
+    frames = jax.random.normal(key, (B, Se, cfg.d_model))
+    tokens = jax.random.randint(key, (B, Sd), 0, cfg.vocab_size)
+    h, _ = M.backbone(cfg, params, {"frames": frames, "tokens": tokens})
+    exp = M.lm_logits(cfg, params, h[:, -1])
+
+    cache = D.init_cache(cfg, B, Se, use_window=False, dtype=jnp.float32)
+    cache = D.encode_for_decode(cfg, params, cache, frames)
+    logits = None
+    for t in range(Sd):
+        logits, _, cache = D.serve_step(cfg, params, cache, tokens[:, t:t + 1],
+                                        jnp.full((B,), t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(exp),
+                               atol=2e-3, rtol=2e-3)

@@ -1,0 +1,196 @@
+"""Substrate tests: data pipeline, checkpointing, schedules, objective
+metrics, serving engine."""
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint
+from repro.configs import get_smoke_config
+from repro.core import objective, schedules
+from repro.data import DataConfig, ShardedDataset, sample_online
+from repro.models import init_params
+from repro.serving import Request, ServingEngine
+
+
+# --------------------------------------------------------------------------
+# data
+# --------------------------------------------------------------------------
+def test_imbalance_targets_positive_ratio():
+    key = jax.random.PRNGKey(0)
+    ds = ShardedDataset(key, DataConfig(kind="features"), 20000, 4,
+                        target_p=0.71)
+    assert abs(ds.p_pos - 0.71) < 0.03
+
+
+def test_shards_are_disjoint_and_balanced():
+    key = jax.random.PRNGKey(1)
+    ds = ShardedDataset(key, DataConfig(kind="features"), 4096, 8)
+    all_idx = np.concatenate(ds.shards)
+    assert len(set(all_idx.tolist())) == len(all_idx)  # disjoint
+    sizes = {len(s) for s in ds.shards}
+    assert len(sizes) == 1  # evenly divided
+
+
+def test_window_shapes_and_worker_isolation():
+    key = jax.random.PRNGKey(2)
+    ds = ShardedDataset(key, DataConfig(kind="tokens", vocab_size=64,
+                                        seq_len=12), 1024, 4)
+    wb = ds.sample_window(key, 3, 8)
+    assert wb["tokens"].shape == (3, 4, 8, 12)
+    assert wb["labels"].shape == (3, 4, 8)
+
+
+def test_online_sampling_ratio():
+    key = jax.random.PRNGKey(3)
+    b = sample_online(key, DataConfig(kind="features", p_pos=0.71), (4096,))
+    assert abs(float(b["labels"].mean()) - 0.71) < 0.03
+
+
+def test_planted_signal_is_learnable_marker():
+    """Positive token sequences must contain more motif tokens."""
+    key = jax.random.PRNGKey(4)
+    dcfg = DataConfig(kind="tokens", vocab_size=100, seq_len=50, signal=1.0)
+    b = sample_online(key, dcfg, (2048,))
+    motif = b["tokens"] < 10
+    rate_pos = float(motif[b["labels"] > 0.5].mean())
+    rate_neg = float(motif[b["labels"] < 0.5].mean())
+    assert rate_pos > rate_neg + 0.1
+
+
+# --------------------------------------------------------------------------
+# checkpoint
+# --------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_smoke_config("qwen2.5-14b")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    p = checkpoint.save(str(tmp_path), 7, params, {"note": "x"})
+    assert os.path.isdir(p)
+    assert checkpoint.latest_step(str(tmp_path)) == 7
+    restored = checkpoint.restore(str(tmp_path), 7, params)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    checkpoint.save(str(tmp_path), 1, {"a": jnp.ones(3)})
+    with pytest.raises(ValueError):
+        checkpoint.restore(str(tmp_path), 1, {"b": jnp.ones(3)})
+
+
+# --------------------------------------------------------------------------
+# schedules (Theorem 1)
+# --------------------------------------------------------------------------
+def test_theorem1_schedule_shapes():
+    sc = schedules.ScheduleConfig(n_workers=16, eta0=0.01, T0=100,
+                                  mode="theorem1", mu_over_L=0.05, p_pos=0.7)
+    sts = schedules.stages(sc, 6)
+    etas = [s.eta for s in sts]
+    assert all(e1 > e2 for e1, e2 in zip(etas, etas[1:]))      # η decays
+    assert all(s1.T <= s2.T for s1, s2 in zip(sts, sts[1:]))    # T grows
+    assert all(s1.I <= s2.I for s1, s2 in zip(sts, sts[1:]))    # I grows
+    for s in sts:  # I_s = max(1, 1/sqrt(K η_s))
+        assert s.I == max(1, int(round(1 / math.sqrt(16 * s.eta))))
+
+
+@settings(max_examples=20, deadline=None)
+@given(K=st.integers(1, 64), eta0=st.floats(1e-3, 1.0))
+def test_more_workers_communicate_more_often(K, eta0):
+    """Theorem 1 remark (i): larger K ⇒ smaller I (more communication)."""
+    s1 = schedules.stage(schedules.ScheduleConfig(n_workers=K, eta0=eta0,
+                                                  mode="theorem1"), 1)
+    s2 = schedules.stage(schedules.ScheduleConfig(n_workers=4 * K, eta0=eta0,
+                                                  mode="theorem1"), 1)
+    assert s2.I <= s1.I
+
+
+def test_practical_matches_paper_experiments():
+    sc = schedules.ScheduleConfig(n_workers=16, eta0=0.1, T0=2000, I0=64)
+    sts = schedules.stages(sc, 3)
+    assert [s.T for s in sts] == [2000, 6000, 18000]
+    assert [s.eta for s in sts] == pytest.approx([0.1, 0.1 / 3, 0.1 / 9])
+    assert all(s.I == 64 for s in sts)
+    grow = schedules.ScheduleConfig(n_workers=16, eta0=0.1, T0=200, I0=4,
+                                    grow_I=True)
+    assert [s.I for s in schedules.stages(grow, 3)] == [4, 12, 36]
+
+
+# --------------------------------------------------------------------------
+# objective metrics
+# --------------------------------------------------------------------------
+def test_roc_auc_against_pairwise_count():
+    key = jax.random.PRNGKey(5)
+    s = jax.random.uniform(key, (200,))
+    y = (jax.random.uniform(jax.random.PRNGKey(6), (200,)) < 0.4).astype(jnp.float32)
+    auc = float(objective.roc_auc(s, y))
+    sp = np.asarray(s)[np.asarray(y) > 0.5]
+    sn = np.asarray(s)[np.asarray(y) < 0.5]
+    naive = np.mean((sp[:, None] > sn[None, :]) + 0.5 * (sp[:, None] == sn[None, :]))
+    assert abs(auc - naive) < 1e-5
+
+
+def test_roc_auc_with_ties():
+    s = jnp.array([0.5, 0.5, 0.5, 0.5])
+    y = jnp.array([1.0, 0.0, 1.0, 0.0])
+    assert abs(float(objective.roc_auc(s, y)) - 0.5) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_optimal_alpha_maximizes_batch_F(seed):
+    """α* from Alg.1 lines 4–7 maximizes the batch F when p matches the
+    batch composition."""
+    key = jax.random.PRNGKey(seed)
+    h = jax.random.uniform(key, (64,))
+    y = (jax.random.uniform(jax.random.PRNGKey(seed + 1), (64,)) < 0.5).astype(jnp.float32)
+    npos = float(y.sum())
+    if npos in (0.0, 64.0):
+        return
+    p = npos / 64
+    from repro.kernels.ref import auc_loss_ref
+    a_star = float(objective.optimal_alpha(h, y))
+    f_star = float(auc_loss_ref(h, y, 0.2, 0.3, a_star, p)[0])
+    for d in (-0.1, 0.1, 0.5):
+        assert f_star >= float(auc_loss_ref(h, y, 0.2, 0.3, a_star + d, p)[0]) - 1e-6
+
+
+# --------------------------------------------------------------------------
+# serving engine
+# --------------------------------------------------------------------------
+def test_engine_serves_batched_requests():
+    cfg = get_smoke_config("stablelm-1.6b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, slots=2, max_len=48)
+    reqs = [Request(uid=i, prompt=[3 + i, 7, 11], max_new_tokens=4)
+            for i in range(5)]
+    for r in reqs:
+        eng.add_request(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert all(len(r.generated) == 4 for r in reqs)
+
+
+def test_engine_matches_single_request_decode():
+    """Batched/continuous decoding must not change a request's tokens."""
+    cfg = get_smoke_config("stablelm-1.6b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompt = [5, 9, 2, 14]
+
+    def run(slots, extra):
+        eng = ServingEngine(cfg, params, slots=slots, max_len=48)
+        req = Request(uid=0, prompt=prompt, max_new_tokens=5)
+        eng.add_request(req)
+        for i, e in enumerate(extra):
+            eng.add_request(Request(uid=1 + i, prompt=e, max_new_tokens=5))
+        eng.run()
+        return req.generated
+
+    alone = run(1, [])
+    batched = run(2, [[8, 1], [4, 4, 4]])
+    assert alone == batched
