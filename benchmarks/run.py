@@ -9,10 +9,15 @@ deliverable.  Prints ``name,us_per_call,derived`` CSV rows.
   growing_i     — fixed I vs I_s = I0·3^{s-1}                  [Appendix H]
   kernels       — Pallas kernels (interpret) vs jnp oracles microbench
   window_step   — CoDA window step wall time vs I (CPU)
+  sharded_window— vmap oracle vs shard_map executor: wall-clock + HLO
+                  all-reduce bytes for I ∈ {1,4,16,64}; run with
+                  --force-host-devices 8 on a CPU host
   roofline      — per (arch × shape × mesh) three-term roofline from the
                   dry-run artifacts (run repro.launch.dryrun first)
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--only vary_k] [--fast]
+      PYTHONPATH=src python -m benchmarks.run --only sharded_window \
+          --force-host-devices 8
 """
 from __future__ import annotations
 
@@ -189,6 +194,49 @@ def bench_kernels(fast=False):
     emit("kernels/prox_pallas_interpret", _time(p_pal, vv, n=3), "N=1M")
 
 
+def bench_sharded_window(fast=False):
+    """The tentpole's measurement: communication is real under shard_map, so
+    comm-bytes come from the compiled HLO and wall-clock includes the actual
+    all-reduce — while the per-window wire bytes stay constant as I grows
+    (the paper's Theorem-1 point, now compiler-verified)."""
+    n = jax.device_count()
+    if n < 2:
+        emit("sharded_window/skipped", 0.0,
+             "needs >1 device; rerun with --force-host-devices 8")
+        return
+    from repro.launch import mesh as MESH
+    mesh = MESH.make_worker_mesh()
+    K = n
+    key = jax.random.PRNGKey(0)
+    dcfg = DataConfig(kind="features", n_features=32)
+    from repro.data.synthetic import sample_online
+    for compress in ("", "int8"):
+        ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, avg_compress=compress)
+        execs = {
+            "vmap": coda.make_executor(MCFG, ccfg, "vmap", donate=False),
+            "shard_map": coda.make_executor(MCFG, ccfg, "shard_map",
+                                            mesh=mesh, donate=False),
+        }
+        for I in ([1, 16] if fast else [1, 4, 16, 64]):
+            wb = sample_online(key, dcfg, (I, K, 32))
+            state0 = coda.init_state(key, MCFG, ccfg)
+            tag = f"sharded_window/{compress or 'fp32'}/I={I}"
+            for name, exe in execs.items():
+                st = exe.place(state0)
+                step = lambda s: exe.window_step(s, wb, 0.1)
+                us = _time(step, st, n=5)
+                emit(f"{tag}/{name}_us", us, f"us_per_iter={us / I:.0f}")
+            txt = execs["shard_map"].window_fn(state0, wb).lower(
+                state0, wb, jnp.float32(0.1)).compile().as_text()
+            coll = H.collective_bytes(txt)
+            emit(f"{tag}/hlo_comm", 0.0,
+                 f"all_reduce_ops={coll['all-reduce']['count']};"
+                 f"all_reduce_bytes={coll['all-reduce']['bytes']};"
+                 f"all_gather_ops={coll['all-gather']['count']};"
+                 f"all_gather_bytes={coll['all-gather']['bytes']};"
+                 f"model_bytes={coda.model_bytes(state0, compress or None)}")
+
+
 def bench_window_step(fast=False):
     key = jax.random.PRNGKey(0)
     K = 4
@@ -252,6 +300,7 @@ BENCHES = {
     "growing_i": bench_growing_i,
     "kernels": bench_kernels,
     "window_step": bench_window_step,
+    "sharded_window": bench_sharded_window,
     "roofline": bench_roofline,
 }
 
@@ -260,7 +309,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(BENCHES))
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    help="split the CPU host into N XLA devices before the "
+                         "backend initialises (for --only sharded_window)")
     args = ap.parse_args()
+    if args.force_host_devices:
+        from repro.launch import mesh as MESH
+        MESH.force_host_device_count(args.force_host_devices)
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and name != args.only:

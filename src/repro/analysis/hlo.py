@@ -2,13 +2,18 @@
 the three roofline terms (§Roofline of EXPERIMENTS.md).
 
 collective_bytes is NOT in cost_analysis(); we parse the optimized HLO and
-sum the result-shape bytes of every cross-device op.
+sum the result-shape bytes of every cross-device op.  ``collective_ops``
+keeps the per-op records (kind, per-dtype bytes, replica groups) so tests
+can verify the *count* and *payload dtype* of what actually crosses the
+wire — e.g. that one CoDA window lowers to exactly one all-reduce of
+``model_bytes`` operand bytes, or that the int8-compressed averaging ships
+an s8 payload (tests/test_coda_sharded.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict
+from typing import Dict, List
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -26,8 +31,11 @@ _OP_RE = re.compile(
     r"(?:-start)?\(")
 
 
-def _shape_bytes(type_str: str) -> int:
-    total = 0
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{.*?\}\}|\{[^{}]*\})")
+
+
+def _dtype_bytes(type_str: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
     for dt, dims in _SHAPE_RE.findall(type_str):
         if dt not in _DTYPE_BYTES:
             continue
@@ -35,17 +43,45 @@ def _shape_bytes(type_str: str) -> int:
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+        out[dt] = out.get(dt, 0) + n * _DTYPE_BYTES[dt]
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    return sum(_dtype_bytes(type_str).values())
+
+
+def collective_ops(hlo_text: str) -> List[dict]:
+    """One record per collective op in the optimized HLO:
+    {op, bytes, by_dtype, replica_groups}.  ``bytes`` are result-shape bytes
+    (== per-participant operand bytes for all-reduce; the gathered size for
+    all-gather).  ``replica_groups`` is the literal group string, so callers
+    can tell cross-worker reductions apart from any intra-group ones."""
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        g = _GROUPS_RE.search(line)
+        by_dtype = _dtype_bytes(m.group("type"))
+        ops.append({
+            "op": m.group("op"),
+            "bytes": sum(by_dtype.values()),
+            "by_dtype": by_dtype,
+            "replica_groups": g.group(1) if g else "",
+        })
+    return ops
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, dict]:
-    """Per-collective-kind {bytes, count} from optimized HLO text."""
-    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
-    for m in _OP_RE.finditer(hlo_text):
-        kind = m.group("op")
-        out[kind]["bytes"] += _shape_bytes(m.group("type"))
-        out[kind]["count"] += 1
+    """Per-collective-kind {bytes, count, by_dtype} from optimized HLO."""
+    out = {k: {"bytes": 0, "count": 0, "by_dtype": {}} for k in _COLLECTIVES}
+    for rec in collective_ops(hlo_text):
+        kind = out[rec["op"]]
+        kind["bytes"] += rec["bytes"]
+        kind["count"] += 1
+        for dt, b in rec["by_dtype"].items():
+            kind["by_dtype"][dt] = kind["by_dtype"].get(dt, 0) + b
     out["total_bytes"] = sum(v["bytes"] for v in out.values() if isinstance(v, dict))
     out["total_count"] = sum(v["count"] for v in out.values() if isinstance(v, dict))
     return out

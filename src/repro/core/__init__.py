@@ -2,4 +2,5 @@
 Theorem-1 schedules, and the paper's baselines (PPD-SG / NP-PPD-SG)."""
 from repro.core import baselines, coda, objective, schedules  # noqa: F401
 from repro.core.coda import (  # noqa: F401
-    CoDAConfig, average, fit, init_state, local_step, stage_end, window_step)
+    CoDAConfig, average, comm_bytes, comm_rounds, fit, init_state, local_step,
+    make_executor, model_bytes, stage_end, window_step)

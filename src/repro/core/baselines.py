@@ -28,8 +28,8 @@ def np_ppd_sg_window(mcfg, ccfg, state, window_batch, eta):
     the batch carries a window axis)."""
 
     def body(st, wb):
-        st, loss = coda.local_step(mcfg, ccfg, st, wb, eta)
-        return coda.average(st), loss
+        st, losses = coda.local_step(mcfg, ccfg, st, wb, eta)
+        return coda.average(st), jnp.mean(losses)
 
     return jax.lax.scan(body, state, window_batch)
 

@@ -4,13 +4,33 @@ Representation: every primal/dual variable carries a leading *worker* axis
 ``K`` (``params[k]`` is machine k's replica, ``a, b, alpha: [K]``).  Local
 primal-dual steps are ``vmap``-batched over that axis and therefore contain
 no cross-worker collectives; the periodic averaging is a mean over axis 0
-(+ broadcast back), which GSPMD lowers to exactly one all-reduce over the
-mesh axes the worker axis is sharded on.
+(+ broadcast back).
 
 ``window_step`` fuses ``I`` local steps (``lax.scan``) with the single
 averaging that follows them — one compiled unit per communication window, so
 the communication/computation ratio the paper's Theorem 1 is about is
 directly visible in the lowered HLO.
+
+Two executors run this algorithm (select with ``fit(..., executor=...)`` or
+``make_executor``):
+
+  * ``"vmap"`` (oracle) — this module: the worker axis is a plain batched
+    array axis on one device.  Semantically exact, nothing crosses a wire;
+    used as the correctness reference.
+  * ``"shard_map"`` (production) — ``core/coda_sharded.py``: the worker axis
+    is laid out over real mesh devices (``launch/mesh.coda_worker_axes`` +
+    ``sharding/rules.py``) with ``jax.shard_map``; the I local steps are
+    collective-free and the averaging is ONE bucketed ``lax.pmean``
+    all-reduce (or an int8 payload + fp32-scale all-gather pair under
+    ``avg_compress="int8"``).  On CPU hosts force a mesh with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; the flag must be
+    set before the jax backend initialises.
+
+The two paths are equivalence-tested against each other to fp32 tolerance
+(tests/test_coda_sharded.py), and the communication accounting below
+(``comm_rounds`` / ``model_bytes`` / ``comm_bytes``) is cross-checked
+against the all-reduce ops the compiler actually emitted
+(``analysis/hlo.collective_ops``).
 
 Primal update (proximal, footnote 1 of the paper):
     v ← (γ(v − η ∇̂_v F) + η v₀) / (η + γ)
@@ -50,13 +70,15 @@ def init_state(key, mcfg: ModelConfig, ccfg: CoDAConfig) -> CoDAState:
     params = M.init_params(key, mcfg, dtype=ccfg.param_dtype)
     K = ccfg.n_workers
     stack = lambda t: jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x[None], (K,) + x.shape), t)
-    z = jnp.zeros((K,), jnp.float32)
+        lambda x: jnp.broadcast_to(x[None], (K,) + x.shape).copy(), t)
+    # every field gets its own buffer — the jit-once executors donate the
+    # state, and donating one aliased buffer twice is a runtime error
+    z = lambda: jnp.zeros((K,), jnp.float32)
     return {
         "params": stack(params),
-        "a": z, "b": z, "alpha": z,
+        "a": z(), "b": z(), "alpha": z(),
         "ref_params": stack(params),
-        "ref_a": z, "ref_b": z,
+        "ref_a": z(), "ref_b": z(),
     }
 
 
@@ -76,7 +98,9 @@ def local_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch,
     """One local primal-dual update on every worker (no communication).
 
     ``batch``: pytree with leading [K, per_worker_batch, ...] axes.
-    Returns (new_state, mean_loss).
+    Returns (new_state, per_worker_losses [K]) — callers that want the
+    synchronous scalar take the mean; the sharded executor keeps the vector
+    (per-worker loss spread is the heterogeneity signal CODASCA studies).
     """
     vg = jax.value_and_grad(
         lambda p_, a_, b_, al_, bt_: _worker_loss(mcfg, ccfg, p_, a_, b_, al_, bt_),
@@ -94,7 +118,17 @@ def local_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch,
     new_state["a"] = prox(state["a"], ga, state["ref_a"])
     new_state["b"] = prox(state["b"], gb, state["ref_b"])
     new_state["alpha"] = state["alpha"] + eta * galpha  # dual ascent
-    return new_state, jnp.mean(losses)
+    return new_state, losses
+
+
+def int8_quantize(xf, red_axes):
+    """Max-abs int8 quantizer shared by both executors' compressed
+    averaging: per-tensor fp32 scale over ``red_axes``, payload in
+    [-127, 127].  Change it here and the vmap/shard_map paths stay
+    equivalent by construction."""
+    scale = jnp.max(jnp.abs(xf), axis=red_axes, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
 
 
 def average(state: CoDAState, compress: Optional[str] = None) -> CoDAState:
@@ -109,11 +143,9 @@ def average(state: CoDAState, compress: Optional[str] = None) -> CoDAState:
     if compress == "int8":
         def avg(x):
             xf = x.astype(jnp.float32)
-            red = tuple(range(1, x.ndim))
-            scale = jnp.max(jnp.abs(xf), axis=red, keepdims=True) / 127.0 + 1e-12
-            q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
             # the int8 tensor is what crosses the worker axis (all-gather);
             # scales are K fp32 scalars
+            q, scale = int8_quantize(xf, tuple(range(1, x.ndim)))
             deq = q.astype(jnp.float32) * scale
             m = jnp.mean(deq, axis=0, keepdims=True)
             return jnp.broadcast_to(m, x.shape).astype(x.dtype)
@@ -144,25 +176,40 @@ def window_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState,
                                  unroll=flags.scan_unroll())
     if communicate:
         state = average(state, compress=ccfg.avg_compress or None)
-    return state, losses
+    return state, jnp.mean(losses, axis=1)
 
 
 # --------------------------------------------------------------------------
 # stage boundary (Algorithm 1, lines 4–7 + proximal reference update)
 # --------------------------------------------------------------------------
-def stage_end(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch):
+def estimate_alpha(mcfg: ModelConfig, ccfg: CoDAConfig, params, batch):
+    """One worker's α_s re-estimate from a fresh minibatch (Alg. 1 lines
+    4–7).  Shared by both executors so the production shard_map path cannot
+    silently diverge from the oracle."""
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    h, _ = M.score(mcfg, params, inputs, use_window=ccfg.use_window,
+                   train=False, impl=ccfg.impl)
+    return objective.optimal_alpha(h, batch["labels"])
+
+
+def stage_end(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch,
+              *, resync: bool = True):
     """Re-estimate the dual α_s from a fresh minibatch on every machine
     (one all-reduce of one scalar) and move the proximal reference v₀ to the
-    averaged primal iterate."""
-    state = average(state)
+    averaged primal iterate.
 
-    def est(params, wb):
-        inputs = {k: v for k, v in wb.items() if k != "labels"}
-        h, _ = M.score(mcfg, params, inputs, use_window=ccfg.use_window,
-                       train=False, impl=ccfg.impl)
-        return objective.optimal_alpha(h, wb["labels"])
+    ``resync=False`` skips the re-averaging: every window already ends in an
+    averaging, so the state entering a stage boundary is synced and the
+    re-average is a mathematical no-op that only ships redundant bytes.  The
+    jit-once drivers pass False; the default keeps the defensive seed
+    behavior for ad-hoc callers.
+    """
+    if resync:
+        state = average(state)
 
-    alphas = jax.vmap(est)(state["params"], batch)         # [K]
+    alphas = jax.vmap(
+        lambda p, wb: estimate_alpha(mcfg, ccfg, p, wb))(
+        state["params"], batch)                            # [K]
     alpha = jnp.broadcast_to(jnp.mean(alphas, keepdims=True), alphas.shape)
     new = dict(state)
     new["alpha"] = alpha
@@ -175,9 +222,18 @@ def stage_end(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch):
 # --------------------------------------------------------------------------
 # accounting + driver
 # --------------------------------------------------------------------------
-def model_bytes(state: CoDAState) -> int:
-    """Bytes one worker ships per averaging round (params + a, b, α)."""
+def model_bytes(state: CoDAState, compress: Optional[str] = None) -> int:
+    """Bytes one worker ships per averaging round (params + a, b, α).
+
+    ``compress="int8"``: 1 byte/element payload + one fp32 scale per tensor
+    (the wire format of the compressed averaging, matching the int8
+    all-gather the sharded executor emits).
+    """
     leaves = jax.tree_util.tree_leaves(state["params"])
+    if compress == "int8":
+        per_worker = sum(l.size // l.shape[0] for l in leaves)  # 1 B/elem
+        scales = (len(leaves) + 3) * 4                          # fp32 scales
+        return per_worker + 3 * 1 + scales
     per_worker = sum(l.size // l.shape[0] * l.dtype.itemsize for l in leaves)
     return per_worker + 3 * 4
 
@@ -185,6 +241,17 @@ def model_bytes(state: CoDAState) -> int:
 def comm_rounds(stage_list) -> int:
     """Averaging rounds + one α all-reduce per stage."""
     return sum(-(-st.T // st.I) + 1 for st in stage_list)
+
+
+def comm_bytes(stage_list, state: CoDAState,
+               compress: Optional[str] = None) -> int:
+    """Total bytes one worker ships over a schedule: one model payload per
+    averaging round plus one fp32 scalar per stage-end α round.  Verified
+    against the compiler in tests/test_coda_sharded.py: the window's lowered
+    HLO contains exactly one cross-worker all-reduce whose operand bytes are
+    ``model_bytes(state)``, and the stage boundary ships one f32 scalar."""
+    mb = model_bytes(state, compress)
+    return sum((-(-st.T // st.I)) * mb + 4 for st in stage_list)
 
 
 @dataclasses.dataclass
@@ -195,38 +262,89 @@ class FitResult:
     iterations: int
 
 
+class VmapExecutor:
+    """The single-device oracle: worker axis = a vmap'd array axis.
+
+    Both executors expose the same surface — ``place(state)``,
+    ``window_step(state, wb, eta)``, ``stage_end(state, ab)`` — with the
+    step functions jitted exactly once (per window length I, which is a
+    shape) and the state buffer donated, so the training loop never
+    re-traces and never holds two copies of the model.
+    """
+
+    def __init__(self, mcfg: ModelConfig, ccfg: CoDAConfig, *,
+                 donate: bool = True):
+        self.mcfg, self.ccfg = mcfg, ccfg
+        dn = (0,) if donate else ()
+        self._wstep = jax.jit(
+            lambda st, wb, eta: window_step(mcfg, ccfg, st, wb, eta),
+            donate_argnums=dn)
+        self._send = jax.jit(
+            lambda st, ab: stage_end(mcfg, ccfg, st, ab, resync=False),
+            donate_argnums=dn)
+
+    def place(self, state: CoDAState) -> CoDAState:
+        return state  # default device placement
+
+    def window_step(self, state: CoDAState, wb, eta):
+        return self._wstep(state, wb, eta)
+
+    def stage_end(self, state: CoDAState, ab) -> CoDAState:
+        return self._send(state, ab)
+
+
+def make_executor(mcfg: ModelConfig, ccfg: CoDAConfig, executor: str = "vmap",
+                  *, mesh=None, policy: str = "replica", donate: bool = True):
+    """The one flag that selects the execution path.
+
+    ``"vmap"`` — single-device oracle (above).  ``"shard_map"`` — the real
+    mesh-parallel executor (core/coda_sharded.py); requires ``mesh``.
+    """
+    if executor == "vmap":
+        return VmapExecutor(mcfg, ccfg, donate=donate)
+    if executor == "shard_map":
+        if mesh is None:
+            raise ValueError("executor='shard_map' needs a mesh "
+                             "(see launch/mesh.py)")
+        from repro.core import coda_sharded
+        return coda_sharded.ShardedExecutor(mcfg, ccfg, mesh, policy=policy,
+                                            donate=donate)
+    raise ValueError(f"unknown executor {executor!r}")
+
+
 def fit(key, mcfg: ModelConfig, ccfg: CoDAConfig, sched: schedules.ScheduleConfig,
         n_stages: int, sample_window: Callable[[Any, int], Any],
         sample_alpha_batch: Callable[[Any, int], Any],
         eval_every: int = 0,
-        eval_fn: Optional[Callable[[CoDAState], float]] = None) -> FitResult:
+        eval_fn: Optional[Callable[[CoDAState], float]] = None,
+        executor: Any = "vmap", mesh=None, policy: str = "replica") -> FitResult:
     """Run CoDA for ``n_stages`` proximal-point stages.
 
     ``sample_window(key, I)`` must return a batch pytree with leading
     [I, K, B, ...]; ``sample_alpha_batch(key, m)`` one with [K, m, ...].
+    ``executor`` is ``"vmap"`` | ``"shard_map"`` or an already-built
+    executor object (see ``make_executor``).
     """
-    state = init_state(key, mcfg, ccfg)
+    exe = executor if hasattr(executor, "window_step") else \
+        make_executor(mcfg, ccfg, executor, mesh=mesh, policy=policy)
+    state = exe.place(init_state(key, mcfg, ccfg))
     stage_list = schedules.stages(sched, n_stages)
     history = []
     rounds = 0
     iters = 0
-
-    wstep = jax.jit(
-        lambda st, wb, eta: window_step(mcfg, ccfg, st, wb, eta))
-    send = jax.jit(lambda st, ab: stage_end(mcfg, ccfg, st, ab))
 
     for st in stage_list:
         n_windows = -(-st.T // st.I)
         for w in range(n_windows):
             key, sk = jax.random.split(key)
             wb = sample_window(sk, st.I)
-            state, losses = wstep(state, wb, st.eta)
+            state, losses = exe.window_step(state, wb, st.eta)
             rounds += 1
             iters += st.I
             history.append((st.s, iters, float(jnp.mean(losses))))
             if eval_fn is not None and eval_every and (w + 1) % eval_every == 0:
                 history.append((st.s, iters, float(eval_fn(state))))
         key, sk = jax.random.split(key)
-        state = send(state, sample_alpha_batch(sk, st.m))
+        state = exe.stage_end(state, sample_alpha_batch(sk, st.m))
         rounds += 1
     return FitResult(state, history, rounds, iters)

@@ -5,6 +5,12 @@
                runs and tests never trace the Mosaic path).
   * "ref"    — force the pure-jnp oracle.
   * "pallas" — force the kernel (on CPU this uses interpret mode).
+
+These wrappers are also what the shard_map CoDA executor
+(core/coda_sharded.py) traces inside its manual-mesh region: "auto" never
+selects interpret-mode Pallas off-TPU, so the per-worker local steps lower
+to plain XLA on forced-host-device CPU meshes and to Mosaic kernels on real
+TPU meshes, with no collective ops in either case.
 """
 from __future__ import annotations
 

@@ -20,6 +20,56 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_worker_mesh(n_devices: int = 0, *, multi_pod: bool = False):
+    """A mesh for the shard_map CoDA executor on whatever devices exist.
+
+    All available devices (or the first ``n_devices``) go to the worker-
+    carrying axes: ``(data, model=1)`` single-pod, ``(2, n/2, 1)`` multi-pod.
+    On CPU hosts, set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (or use ``force_host_device_count``) *before* jax initialises its
+    backend to get N > 1.
+    """
+    n = n_devices or len(jax.devices())
+    if multi_pod:
+        if n % 2:
+            raise ValueError(f"multi_pod needs an even device count, got {n}")
+        return jax.make_mesh((2, n // 2, 1), ("pod", "data", "model"))
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def force_host_device_count(n: int) -> None:
+    """Ask XLA for ``n`` host (CPU) devices.  Must run before the first
+    backend touch — jax locks the device count on first init, so drivers
+    call this at the top of main() (see launch/train.py, benchmarks/run.py).
+    """
+    import os
+    import re
+    import sys
+
+    flags = os.environ.get("XLA_FLAGS", "")
+    flag = f"--xla_force_host_platform_device_count={n}"
+    if "--xla_force_host_platform_device_count" in flags:
+        new = re.sub(r"--xla_force_host_platform_device_count=\d+", flag,
+                     flags)
+        if new != flags:
+            print(f"warning: XLA_FLAGS already forced a host device count; "
+                  f"overriding to {n}", file=sys.stderr)
+            os.environ["XLA_FLAGS"] = new
+    else:
+        os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
+
+
+def abstract_mesh(shape, axis_names):
+    """Version-portable AbstractMesh: jax 0.4.x takes a tuple of
+    (name, size) pairs, 0.5+ takes (axis_sizes, axis_names)."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(zip(axis_names, shape)))   # 0.4.x
+    except TypeError:
+        return AbstractMesh(tuple(shape), tuple(axis_names))  # 0.5+
+
+
 def coda_worker_axes(policy: str, multi_pod: bool):
     """Which mesh axes the CoDA worker (replica) axis is sharded over.
 

@@ -2,11 +2,22 @@
 
 CPU-scale end-to-end run (reduced configs) or the production mesh layout.
 
+Executor selection (--executor):
+  * vmap       — single-device oracle: the K-worker axis is a batched array
+                 axis; exact semantics, nothing crosses a wire.
+  * shard_map  — production path (core/coda_sharded.py): workers laid over
+                 real mesh devices, I local steps collective-free, one
+                 bucketed all-reduce per window.  On a CPU host pass
+                 --force-host-devices N to split the host into N XLA
+                 devices (the flag must take effect before jax initialises,
+                 which is why it is a CLI arg and not ambient config).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b --smoke \
       --workers 4 --stages 2 --t0 30 --interval 8
   PYTHONPATH=src python -m repro.launch.train --arch mlp --workers 8 \
-      --stages 3 --t0 100 --interval 16 --p-pos 0.71
+      --stages 3 --t0 100 --interval 16 --p-pos 0.71 \
+      --executor shard_map --force-host-devices 8 --compress int8
 """
 from __future__ import annotations
 
@@ -22,6 +33,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.configs.base import mlp_config
 from repro.core import coda, objective, schedules
 from repro.data import DataConfig, ShardedDataset
+from repro.launch import mesh as mesh_mod
 
 
 def data_config_for(mcfg, p_pos: float) -> DataConfig:
@@ -69,7 +81,26 @@ def main():
     ap.add_argument("--n-data", type=int, default=8192)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--executor", choices=["vmap", "shard_map"],
+                    default="vmap",
+                    help="vmap = single-device oracle; shard_map = workers "
+                         "on real mesh devices with one all-reduce/window")
+    ap.add_argument("--policy", choices=["replica", "fsdp"], default="replica",
+                    help="worker placement: replica = workers over the data "
+                         "axis; fsdp = workers over the pod axis only")
+    ap.add_argument("--compress", choices=["", "int8"], default="",
+                    help="int8 = compressed averaging: only the int8 payload "
+                         "+ per-tensor fp32 scales cross the wire")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    help="split the CPU host into N XLA devices (needed for "
+                         "--executor shard_map on CPU; must be a fresh "
+                         "process — jax locks the device count on first use)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 3-axis (pod, data, model) mesh layout")
     args = ap.parse_args()
+
+    if args.force_host_devices:
+        mesh_mod.force_host_device_count(args.force_host_devices)
 
     if args.arch == "mlp":
         mcfg = mlp_config()
@@ -85,10 +116,17 @@ def main():
     adapt = make_batch_adapters(mcfg, ds, key)
     print(f"dataset: n={ds.n} p_pos={ds.p_pos:.3f} workers={args.workers}")
 
-    ccfg = coda.CoDAConfig(n_workers=args.workers, p_pos=ds.p_pos)
+    ccfg = coda.CoDAConfig(n_workers=args.workers, p_pos=ds.p_pos,
+                           avg_compress=args.compress)
     sched = schedules.ScheduleConfig(n_workers=args.workers, eta0=args.eta0,
                                      T0=args.t0, I0=args.interval,
                                      p_pos=ds.p_pos)
+
+    mesh = None
+    if args.executor == "shard_map":
+        mesh = mesh_mod.make_worker_mesh(multi_pod=args.multi_pod)
+        print(f"mesh: {dict(mesh.shape)} policy={args.policy} "
+              f"devices={len(mesh.devices.flat)}")
 
     test = adapt(ds.full(2048))
 
@@ -103,12 +141,16 @@ def main():
     res = coda.fit(
         key, mcfg, ccfg, sched, args.stages,
         sample_window=lambda k, i: adapt(ds.sample_window(k, i, args.batch)),
-        sample_alpha_batch=lambda k, m: adapt(ds.sample_alpha_batch(k, m)))
+        sample_alpha_batch=lambda k, m: adapt(ds.sample_alpha_batch(k, m)),
+        executor=args.executor, mesh=mesh, policy=args.policy)
     dt = time.time() - t0
     auc = eval_auc(res.state)
     print(f"done: {res.iterations} iters, {res.comm_rounds} comm rounds, "
           f"{dt:.1f}s, test AUC={auc:.4f}")
-    print(f"bytes/round/worker={coda.model_bytes(res.state):,}")
+    compress = args.compress or None
+    print(f"bytes/round/worker={coda.model_bytes(res.state, compress):,} "
+          f"(schedule total "
+          f"{coda.comm_bytes(schedules.stages(sched, args.stages), res.state, compress):,})")
     if args.ckpt_dir:
         path = checkpoint.save(args.ckpt_dir, res.iterations, res.state,
                                {"auc": auc, "arch": mcfg.name})

@@ -186,3 +186,48 @@ def serve_shardings(tree_shapes, mesh, cache_shard: str = "heads"):
 def policy_for(arch_name: str) -> str:
     """Giant MoEs cannot give every 16-chip group a replica (DESIGN.md §4)."""
     return "fsdp" if arch_name in ("arctic-480b", "dbrx-132b") else "replica"
+
+
+# --------------------------------------------------------------------------
+# shard_map executor specs (core/coda_sharded.py)
+# --------------------------------------------------------------------------
+def worker_partition(mesh, policy: str, K: int):
+    """The mesh axes the CoDA worker axis is *actually* laid over.
+
+    Applies the same divisibility guard as the parameter rules: when K does
+    not divide the worker axes' extent (e.g. K=1 on an 8-way data axis —
+    the PPD-SG degenerate case) the worker axis is replicated instead, which
+    keeps the manual executor correct (redundant compute, zero collectives)
+    rather than failing to lower.
+    """
+    wa = coda_worker_axes(policy, multi_pod="pod" in mesh.axis_names)
+    wa = tuple(a for a in wa if a in mesh.axis_names)
+    return wa if wa and _fits(K, wa, mesh) else ()
+
+
+def shardmap_state_specs(state, mesh, policy: str):
+    """shard_map in/out specs for the CoDA state: leading worker dim over
+    ``worker_partition``, all trailing dims replicated.  (Within-worker
+    tensor/FSDP parallelism inside the manual region is the multi-host
+    follow-on tracked in ROADMAP.md — jax 0.4.x cannot nest auto-GSPMD
+    subgroups under a manual worker axis.)"""
+    K = jax.tree_util.tree_leaves(state)[0].shape[0]
+    wa = worker_partition(mesh, policy, K)
+    lead = wa if wa else None
+    return jax.tree_util.tree_map(
+        lambda l: P(lead, *([None] * (l.ndim - 1))), state)
+
+
+def shardmap_batch_specs(batch, mesh, policy: str, K: int, *,
+                         worker_dim: int = 1):
+    """Specs for batches: window batches [I, K, B, ...] (worker_dim=1) and
+    stage-end α batches [K, m, ...] (worker_dim=0)."""
+    wa = worker_partition(mesh, policy, K)
+    lead = wa if wa else None
+
+    def spec(l):
+        s = [None] * l.ndim
+        s[worker_dim] = lead
+        return P(*s)
+
+    return jax.tree_util.tree_map(spec, batch)

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.analysis import hlo as H
 from repro.configs import get_config, get_smoke_config
@@ -38,7 +38,7 @@ def _specs_for(arch, mesh, policy, worker_axes=()):
 
 def test_known_specs_serving_layout():
     """Params without a worker axis (the serving path)."""
-    mesh = AbstractMesh((1, 4, 2), ("pod", "data", "model"))
+    mesh = MESH.abstract_mesh((1, 4, 2), ("pod", "data", "model"))
     specs, _ = _specs_for("qwen2.5-14b", mesh, "replica")
     assert specs["['layers']['attn']['wq']"] == P(None, None, "model")
     assert specs["['layers']['attn']['wo']"] == P(None, "model", None)
@@ -49,7 +49,7 @@ def test_known_specs_serving_layout():
 
 def test_known_specs_coda_state_layout():
     """The stacked-worker CoDA state: leading K over the worker axes."""
-    mesh = AbstractMesh((2, 4, 2), ("pod", "data", "model"))
+    mesh = MESH.abstract_mesh((2, 4, 2), ("pod", "data", "model"))
     mcfg = get_smoke_config("qwen2.5-14b")
     ccfg = coda.CoDAConfig(n_workers=8)
     state_shapes = jax.eval_shape(lambda k: coda.init_state(k, mcfg, ccfg),
@@ -62,7 +62,7 @@ def test_known_specs_coda_state_layout():
 
 
 def test_moe_expert_parallel_specs():
-    mesh = AbstractMesh((2, 4, 2), ("pod", "data", "model"))
+    mesh = MESH.abstract_mesh((2, 4, 2), ("pod", "data", "model"))
     specs, _ = _specs_for("arctic-480b", mesh, "fsdp")
     # experts [L, E, d, ff]: E over data, ff over model
     assert specs["['layers']['moe']['w_gate']"] == P(None, "data", None, "model")
@@ -74,7 +74,7 @@ def test_moe_expert_parallel_specs():
 
 def test_divisibility_guard_drops_axes():
     """internvl2's vocab 92553 is not divisible by 16 — must replicate."""
-    mesh = AbstractMesh((1, 4, 4), ("pod", "data", "model"))
+    mesh = MESH.abstract_mesh((1, 4, 4), ("pod", "data", "model"))
     specs, shapes = _specs_for("internvl2-2b", mesh, "replica")
     assert specs["['embed']['table']"][0] is None  # 92553 % 4 != 0
     # while attention stays sharded
@@ -82,8 +82,8 @@ def test_divisibility_guard_drops_axes():
 
 
 def test_worker_count_policy():
-    mesh1 = AbstractMesh((16, 16), ("data", "model"))
-    mesh2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh1 = MESH.abstract_mesh((16, 16), ("data", "model"))
+    mesh2 = MESH.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     assert MESH.n_workers(mesh1, "replica") == 16
     assert MESH.n_workers(mesh2, "replica") == 32
     assert MESH.n_workers(mesh1, "fsdp") == 1
@@ -103,8 +103,7 @@ _LOWERING_SCRIPT = textwrap.dedent("""
     from repro.core import coda
     from repro.sharding import rules as R
 
-    mesh = jax.make_mesh((2, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((2, 1), ("data", "model"))
     mcfg = get_smoke_config("stablelm-1.6b")
     ccfg = coda.CoDAConfig(n_workers=2, p_pos=0.7)
 
@@ -125,6 +124,8 @@ _LOWERING_SCRIPT = textwrap.dedent("""
                 state_shapes, batch, jax.ShapeDtypeStruct((), jnp.float32))
         comp = lowered.compile()
         ca = comp.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # jax 0.4.x: one dict per partition
+            ca = ca[0]
         coll = H.collective_bytes(comp.as_text())
         return float(ca.get("flops", 0)), coll["total_bytes"]
 
