@@ -12,12 +12,20 @@ deliverable.  Prints ``name,us_per_call,derived`` CSV rows.
   sharded_window— vmap oracle vs shard_map executor: wall-clock + HLO
                   all-reduce bytes for I ∈ {1,4,16,64}; run with
                   --force-host-devices 8 on a CPU host
+  hetero_window — heterogeneous shards: CoDA vs CODASCA final AUC at EQUAL
+                  comm rounds for Dirichlet α ∈ {0.1, 1, ∞} × I ∈ {4,16,64},
+                  plus the per-round payload each algorithm ships
   roofline      — per (arch × shape × mesh) three-term roofline from the
                   dry-run artifacts (run repro.launch.dryrun first)
 
+Flags: --fast trims the sweep lists; --smoke is the CI tier (tiny T/I/batch,
+fixed seed, < 2 min on a CPU host — the bench-smoke job and local sanity
+checks share this one entry point); --json PATH dumps every emitted row
+plus the structured comm-accounting records (the CI artifact).
+
 Run:  PYTHONPATH=src python -m benchmarks.run [--only vary_k] [--fast]
       PYTHONPATH=src python -m benchmarks.run --only sharded_window \
-          --force-host-devices 8
+          --force-host-devices 8 --smoke --json comm.json
 """
 from __future__ import annotations
 
@@ -29,6 +37,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.analysis import hlo as H
 from repro.configs.base import mlp_config
@@ -39,6 +48,7 @@ from repro.models import model as M
 MCFG = mlp_config(n_features=32, d=64)
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
 ROWS = []
+COMM = {}  # structured comm-accounting records (--json artifact)
 
 
 def emit(name: str, us_per_call: float, derived):
@@ -46,15 +56,21 @@ def emit(name: str, us_per_call: float, derived):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
+def emit_comm(name: str, record: dict):
+    COMM[name] = record
+
+
 # --------------------------------------------------------------------------
 # shared convergence runner
 # --------------------------------------------------------------------------
 def _run(K, I, *, stages=3, T0=64, batch=32, seed=0, eta0=0.5, grow_I=False,
-         target=0.88, eval_every_windows=2):
+         target=0.88, eval_every_windows=2, algorithm="coda",
+         dirichlet_alpha=None, n_data=8192):
     key = jax.random.PRNGKey(seed)
     dcfg = DataConfig(kind="features", n_features=32, signal=1.5)
-    ds = ShardedDataset(key, dcfg, 8192, K, target_p=0.71)
-    ccfg = coda.CoDAConfig(n_workers=K, p_pos=ds.p_pos)
+    ds = ShardedDataset(key, dcfg, n_data, K, target_p=0.71,
+                        dirichlet_alpha=dirichlet_alpha)
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=ds.p_pos, algorithm=algorithm)
     test = ds.full(1024)
 
     def auc(state):
@@ -64,9 +80,8 @@ def _run(K, I, *, stages=3, T0=64, batch=32, seed=0, eta0=0.5, grow_I=False,
 
     sched = schedules.ScheduleConfig(n_workers=K, eta0=eta0, T0=T0, I0=I,
                                      grow_I=grow_I)
-    state = coda.init_state(key, MCFG, ccfg)
-    wstep = jax.jit(lambda st, wb, eta: coda.window_step(MCFG, ccfg, st, wb, eta))
-    send = jax.jit(lambda st, ab: coda.stage_end(MCFG, ccfg, st, ab))
+    exe = coda.make_executor(MCFG, ccfg, "vmap", donate=False)
+    state = exe.place(coda.init_state(key, MCFG, ccfg))
 
     iters = rounds = 0
     iters_to_target = None
@@ -74,26 +89,29 @@ def _run(K, I, *, stages=3, T0=64, batch=32, seed=0, eta0=0.5, grow_I=False,
     for st in schedules.stages(sched, stages):
         for w in range(-(-st.T // st.I)):
             key, sk = jax.random.split(key)
-            state, _ = wstep(state, ds.sample_window(sk, st.I, batch),
-                             jnp.float32(st.eta))
+            state, _ = exe.window_step(state, ds.sample_window(sk, st.I, batch),
+                                       jnp.float32(st.eta))
             iters += st.I
             rounds += 1
             if iters_to_target is None and w % eval_every_windows == 0:
                 if auc(state) >= target:
                     iters_to_target = iters
         key, sk = jax.random.split(key)
-        state = send(state, ds.sample_alpha_batch(sk, st.m))
+        state = exe.stage_end(state, ds.sample_alpha_batch(sk, st.m))
         rounds += 1
     wall = time.time() - t0
+    stage_list = schedules.stages(sched, stages)
     return dict(auc=auc(state), iters=iters, rounds=rounds, wall=wall,
                 iters_to_target=iters_to_target or iters,
-                us_per_iter=wall / iters * 1e6)
+                us_per_iter=wall / iters * 1e6,
+                payload_bytes=coda.window_payload_bytes(state),
+                comm_bytes=coda.comm_bytes(stage_list, state))
 
 
 # --------------------------------------------------------------------------
 # paper experiments
 # --------------------------------------------------------------------------
-def bench_vary_k(fast=False):
+def bench_vary_k(fast=False, smoke=False):
     """Fig 1-3(a): fixing I, larger K needs fewer iterations (linear speedup)."""
     for K in ([1, 4] if fast else [1, 2, 4, 8]):
         r = _run(K, 8, stages=2 if fast else 3)
@@ -102,7 +120,7 @@ def bench_vary_k(fast=False):
         emit(f"vary_k/K={K}/final_auc", r["us_per_iter"], round(r["auc"], 4))
 
 
-def bench_vary_i(fast=False):
+def bench_vary_i(fast=False, smoke=False):
     """Fig 1-3(b): fixing K, skipping communication up to a threshold I does
     not hurt AUC but slashes communication rounds."""
     for I in ([1, 32] if fast else [1, 8, 32, 64]):
@@ -111,7 +129,7 @@ def bench_vary_i(fast=False):
         emit(f"vary_i/I={I}/comm_rounds", r["us_per_iter"], r["rounds"])
 
 
-def bench_tradeoff(fast=False):
+def bench_tradeoff(fast=False, smoke=False):
     """Fig 4-5: smaller K tolerates a larger I before AUC degrades."""
     for K in [2, 8]:
         base = _run(K, 1, stages=2)["auc"]
@@ -123,7 +141,7 @@ def bench_tradeoff(fast=False):
         emit(f"tradeoff/K={K}/max_harmless_I", 0.0, max_ok)
 
 
-def bench_growing_i(fast=False):
+def bench_growing_i(fast=False, smoke=False):
     """Appendix H: growing I_s = I0·3^(s-1) matches fixed-I accuracy with
     fewer rounds (later stages have smaller η ⇒ less drift)."""
     fixed = _run(4, 8, stages=2 if fast else 3)
@@ -134,7 +152,7 @@ def bench_growing_i(fast=False):
     emit("growing_i/grow_rounds", 0.0, grow["rounds"])
 
 
-def bench_table1(fast=False):
+def bench_table1(fast=False, smoke=False):
     """Table 1: measured iteration + communication counts to the SAME AUC
     target for the three algorithms."""
     tgt = 0.88
@@ -161,7 +179,7 @@ def _time(fn, *args, n=20):
     return (time.time() - t0) / n * 1e6
 
 
-def bench_kernels(fast=False):
+def bench_kernels(fast=False, smoke=False):
     from repro.kernels import ref
     from repro.kernels.auc_loss import auc_loss
     from repro.kernels.flash_attention import flash_attention
@@ -194,7 +212,7 @@ def bench_kernels(fast=False):
     emit("kernels/prox_pallas_interpret", _time(p_pal, vv, n=3), "N=1M")
 
 
-def bench_sharded_window(fast=False):
+def bench_sharded_window(fast=False, smoke=False):
     """The tentpole's measurement: communication is real under shard_map, so
     comm-bytes come from the compiled HLO and wall-clock includes the actual
     all-reduce — while the per-window wire bytes stay constant as I grows
@@ -210,34 +228,86 @@ def bench_sharded_window(fast=False):
     key = jax.random.PRNGKey(0)
     dcfg = DataConfig(kind="features", n_features=32)
     from repro.data.synthetic import sample_online
-    for compress in ("", "int8"):
-        ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, avg_compress=compress)
-        execs = {
-            "vmap": coda.make_executor(MCFG, ccfg, "vmap", donate=False),
-            "shard_map": coda.make_executor(MCFG, ccfg, "shard_map",
-                                            mesh=mesh, donate=False),
-        }
-        for I in ([1, 16] if fast else [1, 4, 16, 64]):
-            wb = sample_online(key, dcfg, (I, K, 32))
-            state0 = coda.init_state(key, MCFG, ccfg)
-            tag = f"sharded_window/{compress or 'fp32'}/I={I}"
-            for name, exe in execs.items():
-                st = exe.place(state0)
-                step = lambda s: exe.window_step(s, wb, 0.1)
-                us = _time(step, st, n=5)
-                emit(f"{tag}/{name}_us", us, f"us_per_iter={us / I:.0f}")
-            txt = execs["shard_map"].window_fn(state0, wb).lower(
-                state0, wb, jnp.float32(0.1)).compile().as_text()
-            coll = H.collective_bytes(txt)
-            emit(f"{tag}/hlo_comm", 0.0,
-                 f"all_reduce_ops={coll['all-reduce']['count']};"
-                 f"all_reduce_bytes={coll['all-reduce']['bytes']};"
-                 f"all_gather_ops={coll['all-gather']['count']};"
-                 f"all_gather_bytes={coll['all-gather']['bytes']};"
-                 f"model_bytes={coda.model_bytes(state0, compress or None)}")
+    compresses = ("",) if smoke else ("", "int8")
+    for compress in compresses:
+        for algorithm in ("coda", "codasca"):
+            ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7,
+                                   avg_compress=compress, algorithm=algorithm)
+            execs = {
+                "vmap": coda.make_executor(MCFG, ccfg, "vmap", donate=False),
+                "shard_map": coda.make_executor(MCFG, ccfg, "shard_map",
+                                                mesh=mesh, donate=False),
+            }
+            Is = [1, 4] if smoke else ([1, 16] if fast else [1, 4, 16, 64])
+            for I in Is:
+                wb = sample_online(key, dcfg, (I, K, 16 if smoke else 32))
+                state0 = coda.init_state(key, MCFG, ccfg)
+                tag = f"sharded_window/{algorithm}/{compress or 'fp32'}/I={I}"
+                for name, exe in execs.items():
+                    st = exe.place(state0)
+                    step = lambda s: exe.window_step(s, wb, 0.1)
+                    us = _time(step, st, n=2 if smoke else 5)
+                    emit(f"{tag}/{name}_us", us, f"us_per_iter={us / I:.0f}")
+                txt = execs["shard_map"].window_fn(state0, wb).lower(
+                    state0, wb, jnp.float32(0.1)).compile().as_text()
+                coll = H.collective_bytes(txt)
+                payload = coda.window_payload_bytes(state0, compress or None)
+                emit(f"{tag}/hlo_comm", 0.0,
+                     f"all_reduce_ops={coll['all-reduce']['count']};"
+                     f"all_reduce_bytes={coll['all-reduce']['bytes']};"
+                     f"all_gather_ops={coll['all-gather']['count']};"
+                     f"all_gather_bytes={coll['all-gather']['bytes']};"
+                     f"payload_bytes={payload}")
+                emit_comm(tag, {
+                    "algorithm": algorithm, "compress": compress or "fp32",
+                    "I": I, "K": K,
+                    "payload_bytes": payload,
+                    "model_bytes": coda.model_bytes(state0, compress or None),
+                    "hlo": {k: {"count": coll[k]["count"],
+                                "bytes": coll[k]["bytes"]}
+                            for k in ("all-reduce", "all-gather")},
+                })
+                if not compress:
+                    # the acceptance invariant, enforced at bench time too:
+                    # ONE all-reduce, operand bytes == documented payload
+                    H.verify_window_payload(txt, payload)
 
 
-def bench_window_step(fast=False):
+def bench_hetero_window(fast=False, smoke=False):
+    """Heterogeneous shards (the regime the paper's analysis excludes):
+    Dirichlet(α) label-skewed partitions, CoDA vs CODASCA at the SAME
+    schedule — equal comm rounds, CODASCA shipping 2x the payload per round
+    and buying back the drift the skew induces.  α = ∞ is the IID control
+    where both algorithms must agree."""
+    inf = float("inf")
+    alphas = (0.1, inf) if (fast or smoke) else (0.1, 1.0, inf)
+    Is = (4, 16) if (fast or smoke) else (4, 16, 64)
+    kw = dict(stages=2, T0=24, batch=16, n_data=2048) if smoke else {}
+    for alpha in alphas:
+        for I in Is:
+            res = {}
+            for algorithm in ("coda", "codasca"):
+                r = _run(8, I, algorithm=algorithm,
+                         dirichlet_alpha=None if np.isinf(alpha) else alpha,
+                         **kw)
+                res[algorithm] = r
+                tag = f"hetero_window/alpha={alpha:g}/I={I}/{algorithm}"
+                emit(f"{tag}/final_auc", r["us_per_iter"], round(r["auc"], 4))
+                emit(f"{tag}/comm", 0.0,
+                     f"rounds={r['rounds']};payload={r['payload_bytes']};"
+                     f"total_bytes={r['comm_bytes']}")
+            emit(f"hetero_window/alpha={alpha:g}/I={I}/codasca_auc_gain", 0.0,
+                 round(res["codasca"]["auc"] - res["coda"]["auc"], 4))
+            emit_comm(f"hetero_window/alpha={alpha:g}/I={I}", {
+                "alpha": None if np.isinf(alpha) else alpha, "I": I,
+                **{a: {"auc": res[a]["auc"], "rounds": res[a]["rounds"],
+                       "payload_bytes": res[a]["payload_bytes"],
+                       "comm_bytes": res[a]["comm_bytes"]}
+                   for a in ("coda", "codasca")},
+            })
+
+
+def bench_window_step(fast=False, smoke=False):
     key = jax.random.PRNGKey(0)
     K = 4
     ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7)
@@ -260,7 +330,7 @@ def bench_window_step(fast=False):
 # --------------------------------------------------------------------------
 # roofline (deliverable g — reads the dry-run artifacts)
 # --------------------------------------------------------------------------
-def bench_roofline(fast=False):
+def bench_roofline(fast=False, smoke=False):
     files = sorted(glob.glob(os.path.join(ARTIFACTS, "*.json")))
     if not files:
         emit("roofline/no_artifacts", 0.0,
@@ -301,6 +371,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "window_step": bench_window_step,
     "sharded_window": bench_sharded_window,
+    "hetero_window": bench_hetero_window,
     "roofline": bench_roofline,
 }
 
@@ -309,6 +380,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(BENCHES))
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI tier: tiny T/I/batch, fixed seed, < 2 min on "
+                         "CPU (implies --fast)")
+    ap.add_argument("--json", default="",
+                    help="dump emitted rows + structured comm-accounting "
+                         "records to this path (the CI artifact)")
     ap.add_argument("--force-host-devices", type=int, default=0,
                     help="split the CPU host into N XLA devices before the "
                          "backend initialises (for --only sharded_window)")
@@ -320,7 +397,13 @@ def main() -> None:
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
             continue
-        fn(fast=args.fast)
+        fn(fast=args.fast or args.smoke, smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": [{"name": n, "us_per_call": u, "derived": d}
+                                for n, u, d in ROWS],
+                       "comm": COMM}, f, indent=2, default=str)
+        print(f"wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

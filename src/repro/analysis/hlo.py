@@ -73,6 +73,35 @@ def collective_ops(hlo_text: str) -> List[dict]:
     return ops
 
 
+def verify_window_payload(hlo_text: str, expected_bytes: int, *,
+                          op: str = "all-reduce",
+                          count: int = 1) -> List[dict]:
+    """Assert a compiled CoDA/CODASCA window's wire traffic: exactly
+    ``count`` collectives, all of kind ``op``, totalling ``expected_bytes``
+    result-shape bytes — and *no other* collective of any kind.
+
+    The expected payload comes from ``coda.window_payload_bytes``:
+    ``model_bytes`` for a CoDA window, ``2 ×`` that for CODASCA (state +
+    control variates in one bucket).  Returns the op records on success so
+    callers can additionally inspect dtypes / replica groups.
+    """
+    ops = collective_ops(hlo_text)
+    stray = [o for o in ops if o["op"] != op]
+    if stray:
+        raise AssertionError(
+            f"expected only {op} ops, found {[(o['op'], o['bytes']) for o in stray]}")
+    if len(ops) != count:
+        raise AssertionError(
+            f"expected exactly {count} {op} op(s), found "
+            f"{[(o['op'], o['bytes']) for o in ops]}")
+    total = sum(o["bytes"] for o in ops)
+    if total != expected_bytes:
+        raise AssertionError(
+            f"window payload mismatch: HLO ships {total} bytes, accounting "
+            f"says {expected_bytes} ({[(o['op'], o['bytes']) for o in ops]})")
+    return ops
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, dict]:
     """Per-collective-kind {bytes, count, by_dtype} from optimized HLO."""
     out = {k: {"bytes": 0, "count": 0, "by_dtype": {}} for k in _COLLECTIVES}

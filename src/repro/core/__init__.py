@@ -1,6 +1,7 @@
 """The paper's primary contribution: CoDA (Alg. 1+2), its objective, the
-Theorem-1 schedules, and the paper's baselines (PPD-SG / NP-PPD-SG)."""
-from repro.core import baselines, coda, objective, schedules  # noqa: F401
+Theorem-1 schedules, the paper's baselines (PPD-SG / NP-PPD-SG), and the
+beyond-paper CODASCA variant for heterogeneous shards."""
+from repro.core import baselines, coda, codasca, objective, schedules  # noqa: F401
 from repro.core.coda import (  # noqa: F401
     CoDAConfig, average, comm_bytes, comm_rounds, fit, init_state, local_step,
-    make_executor, model_bytes, stage_end, window_step)
+    make_executor, model_bytes, stage_end, window_payload_bytes, window_step)

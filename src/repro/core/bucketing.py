@@ -1,0 +1,159 @@
+"""Bucketed cross-worker averaging shared by the executors.
+
+Both the vmap oracle (``wa=()``: plain axis-0 means, nothing crosses a
+wire) and the shard_map executor (``wa=("data",)`` etc.: one ``lax.pmean``
+per dtype bucket) run *these* functions, so the two paths cannot drift:
+the oracle's arithmetic is the sharded executor's arithmetic with the
+collective removed.
+
+Two payload layouts:
+
+  * ``average_state`` — plain CoDA: the state tensors (params + a, b, α)
+    form one concatenated bucket per dtype; fp32 default = exactly one
+    all-reduce of ``coda.model_bytes(state)`` operand bytes.
+  * ``average_and_refresh`` — CODASCA: the freshly computed per-worker
+    control variates ride the SAME bucket as the state tensors, so the
+    global control variate c = mean_k c_k costs zero extra rounds — the
+    window still lowers to exactly ONE all-reduce, now of
+    ``2 × model_bytes`` (state + control payload, HLO-asserted in
+    tests/test_codasca.py).
+
+``compress="int8"`` swaps the fp32 pmean for an s8-payload + fp32-scale
+all-gather pair (see ``coda.int8_quantize``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pmean_buckets(mats, wa):
+    """Mean the [K_loc, n_i] matrices over the global worker axis, shipping
+    one concatenated bucket per dtype (one all-reduce each; exactly one for
+    the default all-fp32 state).  Returns the [n_i] means."""
+    by_dtype = {}
+    for i, m in enumerate(mats):
+        by_dtype.setdefault(jnp.dtype(m.dtype), []).append(i)
+    out = [None] * len(mats)
+    for idxs in by_dtype.values():
+        buf = jnp.concatenate([mats[i] for i in idxs], axis=1)
+        mean = jnp.mean(buf, axis=0)
+        if wa:
+            mean = jax.lax.pmean(mean, wa)
+        offs = np.cumsum([0] + [mats[i].shape[1] for i in idxs])
+        for j, i in enumerate(idxs):
+            out[i] = mean[offs[j]:offs[j + 1]]
+    return out
+
+
+def int8_average(mats, wa):
+    """Compressed averaging: per-(worker, tensor) max-abs fp32 scales, int8
+    payload.  Only the s8 bucket and the fp32 scales cross the wire (one
+    all-gather each); dequantize + mean happen on every shard."""
+    from repro.core import coda
+
+    qs, scales = [], []
+    for m in mats:
+        q, scale = coda.int8_quantize(m.astype(jnp.float32), (1,))
+        qs.append(q)
+        scales.append(scale)
+    qbuf = jnp.concatenate(qs, axis=1)       # [K_loc, N] int8 payload
+    sbuf = jnp.concatenate(scales, axis=1)   # [K_loc, L] fp32 scales
+    if wa:
+        qbuf = jax.lax.all_gather(qbuf, wa, axis=0, tiled=True)
+        sbuf = jax.lax.all_gather(sbuf, wa, axis=0, tiled=True)
+    out, off = [], 0
+    for i, m in enumerate(mats):
+        n = m.shape[1]
+        deq = qbuf[:, off:off + n].astype(jnp.float32) * sbuf[:, i:i + 1]
+        out.append(jnp.mean(deq, axis=0).astype(m.dtype))
+        off += n
+    return out
+
+
+def _state_mats(state):
+    """The CoDA state as a flat list of [K_loc, n_i] matrices + treedef."""
+    flat_p, tdef = jax.tree_util.tree_flatten(state["params"])
+    kloc = flat_p[0].shape[0]
+    mats = [l.reshape(kloc, -1) for l in flat_p] + \
+           [state[k].reshape(kloc, 1) for k in ("a", "b", "alpha")]
+    return mats, flat_p, tdef, kloc
+
+
+def _unmats(flat_p, tdef, kloc, means, *, broadcast=True):
+    """Means back into a params tree + (a, b, α) scalars."""
+    outs = []
+    for m, mean in zip(flat_p, means[:len(flat_p)]):
+        trail = m.shape[1:]
+        r = mean.reshape(trail)
+        if broadcast:
+            r = jnp.broadcast_to(r, (kloc,) + trail)
+        outs.append(r.astype(m.dtype))
+    tree = jax.tree_util.tree_unflatten(tdef, outs)
+    scalars = []
+    for i, mean in enumerate(means[len(flat_p):len(flat_p) + 3]):
+        s = jnp.broadcast_to(mean, (kloc,)) if broadcast else mean
+        scalars.append(s.astype(jnp.float32))
+    return tree, scalars
+
+
+def average_state(state, wa, compress: Optional[str]):
+    """``coda.average`` semantics on a local worker shard: mean over the
+    K_loc local workers, then over the worker mesh axes."""
+    mats, flat_p, tdef, kloc = _state_mats(state)
+    means = int8_average(mats, wa) if compress == "int8" \
+        else pmean_buckets(mats, wa)
+    tree, (a, b, alpha) = _unmats(flat_p, tdef, kloc, means)
+    new = dict(state)
+    new["params"] = tree
+    new["a"], new["b"], new["alpha"] = a, b, alpha
+    return new
+
+
+def average_and_refresh(state, cv_new, wa, compress: Optional[str]):
+    """CODASCA window end: average the state tensors AND the per-worker
+    control variates in one bucket.  The state mean is broadcast back (all
+    workers restart from the synced iterate), the control mean becomes the
+    new global variate ``cg_*``, and each worker keeps its OWN ``cv_new``
+    as ``cv_*`` — c_k never crosses the wire except through its mean.
+
+    ``cv_new``: dict with the same layout as the state's averaged slice
+    ({"params": tree, "a", "b", "alpha": [K_loc]}).
+
+    Under ``compress="int8"`` the *dequantized* variates are stored as
+    ``cv_*`` — c and c_k must share the quantizer, or the corrections
+    ``c − c_k`` pick up a common bias of one quantization step per window
+    and the K=1 / homogeneous CODASCA ≡ CoDA equivalences break.
+    """
+    mats, flat_p, tdef, kloc = _state_mats(state)
+    cmats, cflat, _, _ = _state_mats(cv_new)
+    if compress == "int8":
+        from repro.core import coda
+
+        means = int8_average(mats + cmats, wa)
+        # each worker re-applies the wire quantizer to its OWN variate rows
+        # (locally — nothing extra crosses the wire), so cg == mean_k cv_k
+        # holds exactly under quantization
+        stored = []
+        for m in cmats:
+            q, s = coda.int8_quantize(m.astype(jnp.float32), (1,))
+            stored.append((q.astype(jnp.float32) * s).astype(m.dtype))
+        cmats = stored
+    else:
+        means = pmean_buckets(mats + cmats, wa)
+    n = len(mats)
+    tree, (a, b, alpha) = _unmats(flat_p, tdef, kloc, means[:n])
+    ctree, (ca, cb, calpha) = _unmats(cflat, tdef, kloc, means[n:])
+    new = dict(state)
+    new["params"] = tree
+    new["a"], new["b"], new["alpha"] = a, b, alpha
+    new["cg_params"], new["cg_a"], new["cg_b"], new["cg_alpha"] = \
+        ctree, ca, cb, calpha
+    stored_flat = [m.reshape(l.shape) for m, l in zip(cmats[:len(cflat)], cflat)]
+    new["cv_params"] = jax.tree_util.tree_unflatten(tdef, stored_flat)
+    for mat, k in zip(cmats[len(cflat):], ("cv_a", "cv_b", "cv_alpha")):
+        new[k] = mat.reshape(kloc)
+    return new

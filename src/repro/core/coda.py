@@ -35,6 +35,10 @@ against the all-reduce ops the compiler actually emitted
 Primal update (proximal, footnote 1 of the paper):
     v ← (γ(v − η ∇̂_v F) + η v₀) / (η + γ)
 Dual update (ascent):  α ← α + η ∇̂_α F.
+
+``CoDAConfig(algorithm="codasca")`` swaps the local step for the control-
+variate corrected CODASCA variant (core/codasca.py) on either executor —
+the heterogeneous-shard regime the paper's analysis excludes.
 """
 from __future__ import annotations
 
@@ -59,7 +63,17 @@ class CoDAConfig:
     use_window: bool = False    # sliding-window attention (long-context)
     impl: str = "auto"          # kernel dispatch (see kernels.ops)
     avg_compress: str = ""      # "" | "int8": compressed worker averaging
+    algorithm: str = "coda"     # "coda" | "codasca" (control variates for
+                                # heterogeneous shards, core/codasca.py)
     param_dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        # validate once here: the sharded executor dispatches on these with
+        # equality checks, and a typo must not silently train plain CoDA
+        if self.algorithm not in ("coda", "codasca"):
+            raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if self.avg_compress not in ("", "int8"):
+            raise ValueError(f"unknown avg_compress {self.avg_compress!r}")
 
 
 # The training state is a plain dict pytree (stacked worker axis throughout).
@@ -74,12 +88,16 @@ def init_state(key, mcfg: ModelConfig, ccfg: CoDAConfig) -> CoDAState:
     # every field gets its own buffer — the jit-once executors donate the
     # state, and donating one aliased buffer twice is a runtime error
     z = lambda: jnp.zeros((K,), jnp.float32)
-    return {
+    state = {
         "params": stack(params),
         "a": z(), "b": z(), "alpha": z(),
         "ref_params": stack(params),
         "ref_a": z(), "ref_b": z(),
     }
+    if ccfg.algorithm == "codasca":
+        from repro.core import codasca
+        state = codasca.extend_state(state)
+    return state
 
 
 # --------------------------------------------------------------------------
@@ -93,22 +111,22 @@ def _worker_loss(mcfg, ccfg, params, a, b, alpha, batch):
     return f + ccfg.moe_aux_coef * aux
 
 
-def local_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch,
-               eta) -> tuple:
-    """One local primal-dual update on every worker (no communication).
+def grad_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch):
+    """Per-worker losses [K] + raw primal/dual gradients (gp, ga, gb, gα).
 
-    ``batch``: pytree with leading [K, per_worker_batch, ...] axes.
-    Returns (new_state, per_worker_losses [K]) — callers that want the
-    synchronous scalar take the mean; the sharded executor keeps the vector
-    (per-worker loss spread is the heterogeneity signal CODASCA studies).
-    """
+    Shared by CoDA (applies them directly) and CODASCA (applies them with
+    the control-variate correction and accumulates the raw values for the
+    window-end variate refresh, core/codasca.py)."""
     vg = jax.value_and_grad(
         lambda p_, a_, b_, al_, bt_: _worker_loss(mcfg, ccfg, p_, a_, b_, al_, bt_),
         argnums=(0, 1, 2, 3))
-    losses, grads = jax.vmap(vg)(state["params"], state["a"], state["b"],
-                                 state["alpha"], batch)
-    gp, ga, gb, galpha = grads
+    return jax.vmap(vg)(state["params"], state["a"], state["b"],
+                        state["alpha"], batch)
 
+
+def apply_grads(ccfg: CoDAConfig, state: CoDAState, grads, eta) -> CoDAState:
+    """Proximal primal descent + dual ascent with the given gradients."""
+    gp, ga, gb, galpha = grads
     new_params = kops.prox_update_tree(state["params"], gp,
                                        state["ref_params"], eta, ccfg.gamma,
                                        impl=ccfg.impl)
@@ -118,7 +136,20 @@ def local_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch,
     new_state["a"] = prox(state["a"], ga, state["ref_a"])
     new_state["b"] = prox(state["b"], gb, state["ref_b"])
     new_state["alpha"] = state["alpha"] + eta * galpha  # dual ascent
-    return new_state, losses
+    return new_state
+
+
+def local_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch,
+               eta) -> tuple:
+    """One local primal-dual update on every worker (no communication).
+
+    ``batch``: pytree with leading [K, per_worker_batch, ...] axes.
+    Returns (new_state, per_worker_losses [K]) — callers that want the
+    synchronous scalar take the mean; the sharded executor keeps the vector
+    (per-worker loss spread is the heterogeneity signal CODASCA corrects).
+    """
+    losses, grads = grad_step(mcfg, ccfg, state, batch)
+    return apply_grads(ccfg, state, grads, eta), losses
 
 
 def int8_quantize(xf, red_axes):
@@ -238,6 +269,18 @@ def model_bytes(state: CoDAState, compress: Optional[str] = None) -> int:
     return per_worker + 3 * 4
 
 
+def window_payload_bytes(state: CoDAState,
+                         compress: Optional[str] = None) -> int:
+    """Bytes one worker ships in the single window all-reduce.
+
+    CoDA: exactly ``model_bytes``.  CODASCA (detected by the control-
+    variate fields in the state): the per-worker variates ride the same
+    bucket, doubling the payload — 2 × model_bytes, still ONE all-reduce
+    (asserted against the compiled HLO in tests/test_codasca.py)."""
+    mult = 2 if "cv_params" in state else 1
+    return mult * model_bytes(state, compress)
+
+
 def comm_rounds(stage_list) -> int:
     """Averaging rounds + one α all-reduce per stage."""
     return sum(-(-st.T // st.I) + 1 for st in stage_list)
@@ -245,12 +288,13 @@ def comm_rounds(stage_list) -> int:
 
 def comm_bytes(stage_list, state: CoDAState,
                compress: Optional[str] = None) -> int:
-    """Total bytes one worker ships over a schedule: one model payload per
+    """Total bytes one worker ships over a schedule: one window payload per
     averaging round plus one fp32 scalar per stage-end α round.  Verified
     against the compiler in tests/test_coda_sharded.py: the window's lowered
     HLO contains exactly one cross-worker all-reduce whose operand bytes are
-    ``model_bytes(state)``, and the stage boundary ships one f32 scalar."""
-    mb = model_bytes(state, compress)
+    ``window_payload_bytes(state)`` (model_bytes for CoDA, 2× for CODASCA),
+    and the stage boundary ships one f32 scalar."""
+    mb = window_payload_bytes(state, compress)
     return sum((-(-st.T // st.I)) * mb + 4 for st in stage_list)
 
 
@@ -276,8 +320,13 @@ class VmapExecutor:
                  donate: bool = True):
         self.mcfg, self.ccfg = mcfg, ccfg
         dn = (0,) if donate else ()
+        if ccfg.algorithm == "codasca":  # validated by CoDAConfig
+            from repro.core import codasca
+            wstep = codasca.window_step
+        else:
+            wstep = window_step
         self._wstep = jax.jit(
-            lambda st, wb, eta: window_step(mcfg, ccfg, st, wb, eta),
+            lambda st, wb, eta: wstep(mcfg, ccfg, st, wb, eta),
             donate_argnums=dn)
         self._send = jax.jit(
             lambda st, ab: stage_end(mcfg, ccfg, st, ab, resync=False),

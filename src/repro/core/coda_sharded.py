@@ -33,14 +33,16 @@ donated; ``place(state)`` device_puts the state onto the mesh so the loop
 steps are pure buffer-in/buffer-out.  Equivalence with the vmap oracle is
 tested to fp32 tolerance for both policies and the K=1 / I=1 degenerate
 cases on 8 forced host devices.
+
+``CoDAConfig(algorithm="codasca")`` swaps the window body for the control-
+variate corrected variant (core/codasca.py): still zero collectives inside
+the I local steps, still ONE all-reduce per window — the variate refresh
+rides the same bucket, doubling its payload (tests/test_codasca.py).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 
 try:  # jax >= 0.6 promotes shard_map out of experimental
@@ -49,74 +51,13 @@ except ImportError:
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from repro.configs.base import ModelConfig
-from repro.core import coda
+from repro.core import bucketing, coda
 from repro.sharding import rules
 
-
-# --------------------------------------------------------------------------
-# bucketed cross-worker averaging (the one all-reduce per window)
-# --------------------------------------------------------------------------
-def _pmean_buckets(mats, wa):
-    """Mean the [K_loc, n_i] matrices over the global worker axis, shipping
-    one concatenated bucket per dtype (one all-reduce each; exactly one for
-    the default all-fp32 state).  Returns the [n_i] means."""
-    by_dtype = {}
-    for i, m in enumerate(mats):
-        by_dtype.setdefault(jnp.dtype(m.dtype), []).append(i)
-    out = [None] * len(mats)
-    for idxs in by_dtype.values():
-        buf = jnp.concatenate([mats[i] for i in idxs], axis=1)
-        mean = jnp.mean(buf, axis=0)
-        if wa:
-            mean = jax.lax.pmean(mean, wa)
-        offs = np.cumsum([0] + [mats[i].shape[1] for i in idxs])
-        for j, i in enumerate(idxs):
-            out[i] = mean[offs[j]:offs[j + 1]]
-    return out
-
-
-def _int8_average(mats, wa):
-    """Compressed averaging: per-(worker, tensor) max-abs fp32 scales, int8
-    payload.  Only the s8 bucket and the fp32 scales cross the wire (one
-    all-gather each); dequantize + mean happen on every shard."""
-    qs, scales = [], []
-    for m in mats:
-        q, scale = coda.int8_quantize(m.astype(jnp.float32), (1,))
-        qs.append(q)
-        scales.append(scale)
-    qbuf = jnp.concatenate(qs, axis=1)       # [K_loc, N] int8 payload
-    sbuf = jnp.concatenate(scales, axis=1)   # [K_loc, L] fp32 scales
-    if wa:
-        qbuf = jax.lax.all_gather(qbuf, wa, axis=0, tiled=True)
-        sbuf = jax.lax.all_gather(sbuf, wa, axis=0, tiled=True)
-    out, off = [], 0
-    for i, m in enumerate(mats):
-        n = m.shape[1]
-        deq = qbuf[:, off:off + n].astype(jnp.float32) * sbuf[:, i:i + 1]
-        out.append(jnp.mean(deq, axis=0).astype(m.dtype))
-        off += n
-    return out
-
-
-def _bucketed_average(state, wa, compress: Optional[str]):
-    """``coda.average`` semantics on a local worker shard: mean over the
-    K_loc local workers, then over the worker mesh axes."""
-    flat_p, tdef = jax.tree_util.tree_flatten(state["params"])
-    kloc = flat_p[0].shape[0]
-    mats = [l.reshape(kloc, -1) for l in flat_p] + \
-           [state[k].reshape(kloc, 1) for k in ("a", "b", "alpha")]
-    means = _int8_average(mats, wa) if compress == "int8" \
-        else _pmean_buckets(mats, wa)
-    outs = []
-    for m, mean in zip(flat_p, means[:len(flat_p)]):
-        trail = m.shape[1:]
-        outs.append(jnp.broadcast_to(mean.reshape(trail), (kloc,) + trail)
-                    .astype(m.dtype))
-    new = dict(state)
-    new["params"] = jax.tree_util.tree_unflatten(tdef, outs)
-    for mean, k in zip(means[len(flat_p):], ("a", "b", "alpha")):
-        new[k] = jnp.broadcast_to(mean, (kloc,)).astype(state[k].dtype)
-    return new
+# The bucketed cross-worker averaging (the one all-reduce per window) lives
+# in core/bucketing.py so the vmap oracle and this executor run the same
+# arithmetic; the alias keeps the historical test surface.
+_bucketed_average = bucketing.average_state
 
 
 # --------------------------------------------------------------------------
@@ -164,6 +105,11 @@ class ShardedExecutor:
         lead = wa if wa else None
 
         def body(st, bt, eta):
+            if ccfg.algorithm == "codasca":
+                from repro.core import codasca
+                return codasca.run_window(mcfg, ccfg, st, bt, eta, wa=wa,
+                                          communicate=communicate)
+
             def step(s, b):
                 return coda.local_step(mcfg, ccfg, s, b, eta)
 
@@ -171,7 +117,8 @@ class ShardedExecutor:
             st, losses = jax.lax.scan(step, st, bt,
                                       unroll=flags.scan_unroll())
             if communicate:
-                st = _bucketed_average(st, wa, ccfg.avg_compress or None)
+                st = bucketing.average_state(st, wa,
+                                             ccfg.avg_compress or None)
             return st, losses  # losses: [I, K_loc]
 
         st_specs = rules.shardmap_state_specs(state, self.mesh, self.policy)

@@ -1,0 +1,120 @@
+"""CODASCA — CoDA with stochastic controlled averaging for heterogeneous
+data (Yuan et al., "Federated Deep AUC Maximization for Heterogeneous Data
+with a Constant Communication Complexity", ICML 2021).
+
+CoDA's analysis assumes every worker draws from the same distribution.  The
+batch setting already violates that: a fixed dataset is *partitioned*, so
+machine k's empirical distribution P_k drifts from P — and over the I
+communication-free local steps each worker walks toward its own shard's
+optimum, biasing the primal-dual updates (the per-worker loss spread that
+``ShardedExecutor.window_step`` surfaces is exactly this signal).
+
+CODASCA cancels the drift SCAFFOLD-style with per-worker control variates.
+Every primal/dual variable v gets a worker-local variate c_k(v) and a
+global variate c(v); each of the I local steps applies the corrected
+gradient
+
+    g̃ = g + (c − c_k)
+
+so the *expected* local direction matches the global one even when the
+shards differ.  At the window end c_k is refreshed to the worker's mean
+raw gradient over the window (1/I · Σ_t g_t) and c to the worker-mean of
+the fresh c_k — and because the refresh is just one more mean over the
+worker axis, it rides the SAME bucketed all-reduce as the model averaging:
+
+  * communication stays ONE all-reduce per window (``comm_rounds``
+    unchanged vs CoDA);
+  * the payload doubles to ``2 × coda.model_bytes(state)`` — state tensors
+    + control variates in one concatenated bucket, asserted against the
+    compiled HLO in tests/test_codasca.py via
+    ``analysis.hlo.verify_window_payload``.
+
+State layout (on top of ``coda.init_state``): ``cv_params/cv_a/cv_b/
+cv_alpha`` are worker k's variates (leading [K] axis, *never* shipped
+except through their mean) and ``cg_params/cg_a/cg_b/cg_alpha`` the global
+variates (replicated over the [K] axis so every sharding rule stays
+uniform).  All start at zero, so the first window — and, with homogeneous
+per-worker batches, every window — is bit-for-bit a CoDA window: the
+correction is computed as ``g + (c − c_k)``, and ``c − c_k`` is an exact
+floating-point zero whenever the two variates are equal.  That is the
+α = ∞ equivalence tier-1 checks.
+
+Both executors run the one ``run_window`` below: the vmap oracle passes
+``wa=()`` (plain axis-0 means), the shard_map executor its worker mesh
+axes — the two paths share every arithmetic op by construction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import bucketing, coda
+
+def extend_state(state: coda.CoDAState) -> coda.CoDAState:
+    """Add zero control variates to a CoDA state (all fields get their own
+    buffers — the jit-once executors donate the state)."""
+    zt = lambda: jax.tree_util.tree_map(jnp.zeros_like, state["params"])
+    zk = lambda: jnp.zeros_like(state["a"])
+    new = dict(state)
+    new["cv_params"], new["cg_params"] = zt(), zt()
+    new["cv_a"], new["cv_b"], new["cv_alpha"] = zk(), zk(), zk()
+    new["cg_a"], new["cg_b"], new["cg_alpha"] = zk(), zk(), zk()
+    return new
+
+
+def local_step(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, batch, eta):
+    """One control-variate-corrected primal-dual update on every worker.
+
+    Returns (new_state, per_worker_losses [K], raw_grads) — the *raw*
+    (uncorrected) gradients feed the window's variate refresh.
+    """
+    losses, grads = coda.grad_step(mcfg, ccfg, state, batch)
+    gp, ga, gb, galpha = grads
+    # g + (c − c_k): the difference is computed FIRST so equal variates
+    # contribute an exact fp zero (the homogeneous-data equivalence).
+    corr = lambda g, c, ck: g + (c - ck)
+    gp_c = jax.tree_util.tree_map(corr, gp, state["cg_params"],
+                                  state["cv_params"])
+    corrected = (gp_c,
+                 corr(ga, state["cg_a"], state["cv_a"]),
+                 corr(gb, state["cg_b"], state["cv_b"]),
+                 corr(galpha, state["cg_alpha"], state["cv_alpha"]))
+    return coda.apply_grads(ccfg, state, corrected, eta), losses, grads
+
+
+def run_window(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, window_batch,
+               eta, *, wa=(), communicate: bool = True):
+    """I corrected local steps + the single combined all-reduce.
+
+    ``wa``: worker mesh axes ((),) for the vmap oracle.  Returns
+    (new_state, losses [I, K_loc]).
+    """
+    from repro import flags
+
+    def step(carry, b):
+        st, acc = carry
+        st, losses, (gp, ga, gb, galpha) = local_step(mcfg, ccfg, st, b, eta)
+        gd = {"params": gp, "a": ga, "b": gb, "alpha": galpha}
+        return (st, jax.tree_util.tree_map(jnp.add, acc, gd)), losses
+
+    acc0 = {"params": jax.tree_util.tree_map(jnp.zeros_like, state["params"]),
+            "a": jnp.zeros_like(state["a"]),
+            "b": jnp.zeros_like(state["b"]),
+            "alpha": jnp.zeros_like(state["alpha"])}
+    (state, acc), losses = jax.lax.scan(step, (state, acc0), window_batch,
+                                        unroll=flags.scan_unroll())
+    if communicate:
+        I = jax.tree_util.tree_leaves(window_batch)[0].shape[0]
+        cv_new = jax.tree_util.tree_map(lambda g: g / I, acc)
+        state = bucketing.average_and_refresh(state, cv_new, wa,
+                                              ccfg.avg_compress or None)
+    return state, losses
+
+
+def window_step(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, window_batch,
+                eta, *, communicate: bool = True):
+    """Vmap-oracle window: same surface as ``coda.window_step``."""
+    state, losses = run_window(mcfg, ccfg, state, window_batch, eta,
+                               wa=(), communicate=communicate)
+    return state, jnp.mean(losses, axis=1)

@@ -14,6 +14,18 @@ Both of the paper's settings are supported:
                negatives to reach p = 0.71), then *partitioned* across the K
                workers so machine k only ever sees shard k (P_k = empirical
                distribution of its shard).
+
+The batch partition has two modes:
+  * IID (``dirichlet_alpha=None`` / ∞) — shuffle and split evenly, the
+    paper's setting: every shard's label ratio matches the global p.
+  * non-IID (``dirichlet_alpha=α``) — Dirichlet(α) label skew, the standard
+    federated-learning recipe: for each class, a Dir(α·1_K) draw decides
+    what fraction of that class each worker receives.  Small α ⇒ extreme
+    skew (some workers see almost no positives), α → ∞ ⇒ IID.  Every
+    sample — in particular every positive — is assigned to exactly one
+    shard; shard sizes become unequal, and the per-shard positive ratios
+    (``shard_p_pos``) spread around the global p.  This is the
+    heterogeneous regime CODASCA (core/codasca.py) corrects for.
 """
 from __future__ import annotations
 
@@ -71,11 +83,40 @@ def sample_online(key, dcfg: DataConfig, shape) -> dict:
 # --------------------------------------------------------------------------
 # batch setting: fixed dataset, imbalance by dropping negatives, shard by K
 # --------------------------------------------------------------------------
+def dirichlet_partition(rng: np.random.RandomState, labels: np.ndarray,
+                        n_workers: int, alpha: float):
+    """Dirichlet(α) label-skew partition: per class c, q_c ~ Dir(α·1_K)
+    decides the fraction of class-c samples each worker gets.
+
+    Returns K index arrays that tile [0, n) exactly (every sample — every
+    positive — lands in exactly one shard).  Empty shards are topped up
+    from the largest shard so every worker can draw minibatches.
+    """
+    shards = [[] for _ in range(n_workers)]
+    for c in np.unique(labels):
+        idx = rng.permutation(np.nonzero(labels == c)[0])
+        q = rng.dirichlet(np.full(n_workers, alpha))
+        cuts = np.round(np.cumsum(q)[:-1] * len(idx)).astype(int)
+        for k, part in enumerate(np.split(idx, cuts)):
+            shards[k].append(part)
+    shards = [np.concatenate(s) for s in shards]
+    for k in range(n_workers):  # no worker may starve
+        while len(shards[k]) == 0:
+            donor = int(np.argmax([len(s) for s in shards]))
+            shards[k], shards[donor] = shards[donor][-1:], shards[donor][:-1]
+    return [rng.permutation(s) for s in shards]
+
+
 class ShardedDataset:
-    """Fixed dataset partitioned across K workers (machine k sees shard k)."""
+    """Fixed dataset partitioned across K workers (machine k sees shard k).
+
+    ``dirichlet_alpha=None`` (or ∞): the paper's IID even split.  A finite
+    value turns on Dirichlet(α) label-skew — see the module docstring.
+    """
 
     def __init__(self, key, dcfg: DataConfig, n: int, n_workers: int,
-                 target_p: Optional[float] = None):
+                 target_p: Optional[float] = None,
+                 dirichlet_alpha: Optional[float] = None):
         self.dcfg = dcfg
         kl, kx, kp = jax.random.split(key, 3)
         labels = (jax.random.uniform(kl, (n,)) < 0.5).astype(jnp.float32)
@@ -94,11 +135,21 @@ class ShardedDataset:
         self.n = n
         self.K = n_workers
         self.p_pos = float(self.labels.mean())
-        # shuffle then partition evenly (paper: "shuffled and evenly divided")
+        self.dirichlet_alpha = dirichlet_alpha
         rng = np.random.RandomState(0)
-        perm = rng.permutation(n)
-        per = n // n_workers
-        self.shards = [perm[k * per:(k + 1) * per] for k in range(n_workers)]
+        if dirichlet_alpha is None or not np.isfinite(dirichlet_alpha):
+            # shuffle then partition evenly (paper: "shuffled and evenly
+            # divided") — the IID / α = ∞ limit
+            perm = rng.permutation(n)
+            per = n // n_workers
+            self.shards = [perm[k * per:(k + 1) * per]
+                           for k in range(n_workers)]
+        else:
+            self.shards = dirichlet_partition(rng, self.labels, n_workers,
+                                              dirichlet_alpha)
+        self.shard_sizes = [len(s) for s in self.shards]
+        self.shard_p_pos = [float(self.labels[s].mean()) if len(s) else 0.0
+                            for s in self.shards]
 
     def sample_window(self, key, I: int, B: int) -> dict:
         """[I, K, B, ...] minibatches; worker k draws only from shard k."""
@@ -111,7 +162,9 @@ class ShardedDataset:
         return out
 
     def sample_alpha_batch(self, key, m: int) -> dict:
-        m = min(m, min(len(s) for s in self.shards))
+        # no clamping to the smallest shard: draws are with replacement, and
+        # under Dirichlet skew one starved shard must not collapse every
+        # worker's stage-end α re-estimate to a single sample
         rng = np.random.RandomState(int(jax.random.randint(key, (), 0, 2 ** 31 - 1)))
         idx = np.stack([rng.choice(self.shards[k], size=m) for k in range(self.K)])
         out = {k: jnp.asarray(v[idx]) for k, v in self.inputs.items()}

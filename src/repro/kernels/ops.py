@@ -14,8 +14,6 @@ TPU meshes, with no collective ops in either case.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -12,8 +12,6 @@ implementation masks with it directly, so hybrid stacks stay scannable.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -101,8 +99,8 @@ def init_xlstm_layers(key, cfg: ModelConfig, dtype=jnp.float32):
 # apply
 # --------------------------------------------------------------------------
 def apply_layer(cfg: ModelConfig, p, x, positions, window, *, kind: str,
-                causal: bool, enc_out=None, impl: str = "auto",
-                return_kv: bool = False):
+                causal: bool, enc_out=None, train: bool = False,
+                impl: str = "auto", return_kv: bool = False):
     """One block.  ``window``: traced int32 scalar, -1 = full attention.
 
     Returns (x, aux, kv) where aux is the MoE load-balance loss (0 otherwise)
@@ -126,7 +124,7 @@ def apply_layer(cfg: ModelConfig, p, x, positions, window, *, kind: str,
         x = x + cx
     h2 = apply_norm(cfg, p["norm2"], x)
     if "moe" in p:
-        y, aux = apply_moe(cfg, p["moe"], h2)
+        y, aux = apply_moe(cfg, p["moe"], h2, train=train)
     else:
         y = apply_mlp(cfg, p["mlp"], h2)
     return x + y, aux, kv
@@ -144,8 +142,8 @@ def apply_stack(cfg: ModelConfig, stacked, x, positions, windows, *,
         xc, aux = carry
         lp, w = layer
         xn, a, kv = apply_layer(cfg, lp, xc, positions, w, kind=kind,
-                                causal=causal, enc_out=enc_out, impl=impl,
-                                return_kv=return_kv)
+                                causal=causal, enc_out=enc_out, train=train,
+                                impl=impl, return_kv=return_kv)
         return (xn, aux + a), kv
 
     if train:

@@ -7,8 +7,6 @@ by the serving path.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

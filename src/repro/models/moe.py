@@ -46,19 +46,32 @@ def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
     return p
 
 
-def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+def capacity(cfg: ModelConfig, n_tokens: int, *, train: bool = True) -> int:
+    """Per-expert buffer slots.  Training uses the capacity-factor bound
+    (over-capacity tokens are DROPPED — the standard load-shedding
+    regularizer, and what keeps expert FLOPs at the *active* count).
+    Eval/decode use the dropless bound C = T: dropping depends on the token
+    count of the forward pass, so a capacity-limited parallel scoring pass
+    and a token-by-token decode would route the same sequence differently
+    (tests/test_decode_consistency.py caught exactly that divergence on
+    dbrx's top-2-of-4 router).  C = T is the only *static* dropless bound,
+    and it is E/top_k-fold oversized in expectation — decode (T = B) and
+    the repo's scoring passes are small, but a long-sequence eval on a
+    large-E arch pays an [E, T, d] dispatch buffer; a sort-based dropless
+    dispatch would remove that waste (see ROADMAP)."""
     m = cfg.moe
-    c = math.ceil(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    c = math.ceil(n_tokens * m.top_k * m.capacity_factor / m.n_experts) \
+        if train else n_tokens
     return max(4, c + (-c) % 4)  # pad to a multiple of 4
 
 
-def apply_moe(cfg: ModelConfig, p, x):
+def apply_moe(cfg: ModelConfig, p, x, *, train: bool = False):
     """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
     m = cfg.moe
     B, S, d = x.shape
     T = B * S
     E, k = m.n_experts, m.top_k
-    C = capacity(cfg, T)
+    C = capacity(cfg, T, train=train)
     xf = x.reshape(T, d)
 
     logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)  # [T, E]

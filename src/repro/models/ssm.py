@@ -99,7 +99,6 @@ def decode_ssm(cfg: ModelConfig, p, state, x):
     xz = x[:, 0] @ p["in_proj"]
     di = p["in_proj"].shape[1] // 2
     xi, z = xz[:, :di], xz[:, di:]
-    K = p["conv_w"].shape[0]
     hist = jnp.concatenate([state["conv"], xi[:, None]], axis=1)  # [B, K, di]
     xi = jax.nn.silu(jnp.einsum("bkd,kd->bd", hist, p["conv_w"]) + p["conv_b"])
     dA, dBx, Cc = _ssm_inputs(cfg, p, xi)  # [B, di, N] x2, [B, N]

@@ -12,8 +12,6 @@ that heterogeneous per-layer cache shapes are possible:
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

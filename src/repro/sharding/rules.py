@@ -122,12 +122,16 @@ def tree_shardings(tree, mesh, policy: str, *, worker_axes=()):
 # CoDA state + batches + serving
 # --------------------------------------------------------------------------
 def state_shardings(state_shapes, mesh, policy: str, multi_pod: bool):
+    """Shardings for every CoDA-state field.  Params-like subtrees (params,
+    ref_params, and CODASCA's cv_params/cg_params control variates) get the
+    full name-based rules; [K] scalar fields (a, b, α, their refs and
+    variates) shard their worker axis when it fits."""
     wa = coda_worker_axes(policy, multi_pod)
     out = {}
     for k, v in state_shapes.items():
-        if k in ("params", "ref_params"):
+        if not hasattr(v, "shape"):  # params / ref_params / cv_* / cg_* trees
             out[k] = tree_shardings(v, mesh, policy, worker_axes=wa)
-        else:  # a, b, alpha, ref_a, ref_b: [K]
+        else:  # a, b, alpha + refs/variates: [K]
             spec = P(wa) if wa and _fits(v.shape[0], tuple(wa), mesh) else P(None)
             out[k] = NamedSharding(mesh, spec)
     return out

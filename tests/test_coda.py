@@ -1,7 +1,6 @@
 """CoDA algorithm tests: structural equivalences (K=1 ⇒ PPD-SG, I=1 ⇒
 NP-PPD-SG), the paper's boundedness lemmas as hypothesis properties, and
 end-to-end convergence (AUC > 0.9 on separable synthetic data)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,350 @@
+"""CODASCA tests: the non-IID Dirichlet partitioner, control-variate
+algebra on the vmap oracle (α = ∞ / homogeneous shards must reduce
+CODASCA to CoDA *exactly*), shard_map equivalence on 8 forced host
+devices, and the acceptance invariant — one compiled CODASCA window =
+exactly ONE cross-worker all-reduce of the documented state +
+control-variate payload (2 × model_bytes), checked against the HLO.
+
+Mesh-parallel checks run in subprocesses because
+``--xla_force_host_platform_device_count`` must be set before jax
+initialises its backend (same pattern as tests/test_coda_sharded.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import mlp_config
+from repro.core import coda, codasca, schedules
+from repro.data import DataConfig, ShardedDataset
+from repro.data.synthetic import dirichlet_partition
+
+MCFG = mlp_config(n_features=16, d=32)
+
+
+def _case(K, I, B=8, seed=0, algorithm="codasca", compress=""):
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, algorithm=algorithm,
+                           avg_compress=compress)
+    key = jax.random.PRNGKey(seed)
+    st0 = coda.init_state(key, MCFG, ccfg)
+    ky, kx = jax.random.split(key)
+    y = (jax.random.uniform(ky, (I, K, B)) < 0.7).astype(jnp.float32)
+    x = jax.random.normal(kx, (I, K, B, 16)) + 0.3 * (y[..., None] * 2 - 1)
+    return ccfg, st0, {"features": x, "labels": y}
+
+
+def _max_err(a, b):
+    return max(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda x, y: float(jnp.max(jnp.abs(x - y))), a, b)))
+
+
+def _state_only(state):
+    return {k: state[k] for k in ("params", "a", "b", "alpha")}
+
+
+# --------------------------------------------------------------------------
+# non-IID partitioner
+# --------------------------------------------------------------------------
+def test_dirichlet_partition_exact_and_keeps_every_positive():
+    """The shards tile [0, n) exactly — every sample, in particular every
+    positive, lands in exactly one shard; no worker starves."""
+    rng = np.random.RandomState(0)
+    labels = (rng.uniform(size=977) < 0.71).astype(np.float32)
+    for alpha in (0.05, 0.5, 5.0):
+        shards = dirichlet_partition(np.random.RandomState(1), labels, 8, alpha)
+        allidx = np.sort(np.concatenate(shards))
+        np.testing.assert_array_equal(allidx, np.arange(len(labels)))
+        assert all(len(s) > 0 for s in shards)
+        n_pos = sum(int(labels[s].sum()) for s in shards)
+        assert n_pos == int(labels.sum())  # every positive retained
+
+
+def test_dirichlet_skew_tracks_alpha():
+    """Small α ⇒ large spread of per-shard positive ratios; large α ⇒ the
+    IID limit; α=None/∞ keeps the paper's even split."""
+    key = jax.random.PRNGKey(0)
+    dcfg = DataConfig(kind="features", n_features=8)
+
+    def spread(alpha):
+        ds = ShardedDataset(key, dcfg, 2048, 8, target_p=0.71,
+                            dirichlet_alpha=alpha)
+        return float(np.std(ds.shard_p_pos)), ds
+
+    s_skew, ds_skew = spread(0.1)
+    s_mid, _ = spread(1.0)
+    s_iid, _ = spread(1000.0)
+    assert s_skew > s_mid > s_iid, (s_skew, s_mid, s_iid)
+    assert s_skew > 0.2 and s_iid < 0.05
+    # skewed shards are unequal but complete
+    assert sum(ds_skew.shard_sizes) == ds_skew.n
+    # the ∞/None path is the historical even split
+    ds_inf = ShardedDataset(key, dcfg, 2048, 8, target_p=0.71,
+                            dirichlet_alpha=float("inf"))
+    ds_none = ShardedDataset(key, dcfg, 2048, 8, target_p=0.71)
+    assert ds_inf.shard_sizes == ds_none.shard_sizes
+    for a, b in zip(ds_inf.shards, ds_none.shards):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_dirichlet_sampling_stays_in_shard():
+    key = jax.random.PRNGKey(3)
+    dcfg = DataConfig(kind="features", n_features=8)
+    ds = ShardedDataset(key, dcfg, 1024, 4, target_p=0.71, dirichlet_alpha=0.2)
+    wb = ds.sample_window(key, 3, 8)
+    assert wb["labels"].shape == (3, 4, 8)
+    ab = ds.sample_alpha_batch(key, 16)
+    assert ab["labels"].shape[0] == 4
+
+
+# --------------------------------------------------------------------------
+# vmap-oracle algebra: the homogeneous limit IS CoDA
+# --------------------------------------------------------------------------
+def test_codasca_first_window_is_coda_bitwise():
+    """Zero-initialised variates make the correction an exact fp zero, so
+    window 1 must equal CoDA bit for bit."""
+    K, I = 4, 3
+    ccfg, st0, wb = _case(K, I)
+    c0 = coda.CoDAConfig(n_workers=K, p_pos=0.7)
+    s1, l1 = codasca.window_step(MCFG, ccfg, st0, wb, 0.1)
+    s2, l2 = coda.window_step(MCFG, c0, _state_only(st0) | {
+        k: st0[k] for k in ("ref_params", "ref_a", "ref_b")}, wb, 0.1)
+    assert _max_err(_state_only(s1), _state_only(s2)) == 0.0
+    assert float(jnp.max(jnp.abs(l1 - l2))) == 0.0
+
+
+def test_codasca_homogeneous_equals_coda_step_for_step():
+    """Identical per-worker batches (the α = ∞ limit taken to its extreme):
+    every worker computes the same gradients, so c_k == c forever and the
+    correction stays an exact zero — CODASCA must track CoDA exactly over
+    many windows, not just the first."""
+    K, I = 4, 2
+    ccfg, st_s, wb = _case(K, I)
+    c0 = coda.CoDAConfig(n_workers=K, p_pos=0.7)
+    wb_h = {k: jnp.broadcast_to(v[:, :1], v.shape).copy()
+            for k, v in wb.items()}
+    st_c = {k: st_s[k] for k in
+            ("params", "a", "b", "alpha", "ref_params", "ref_a", "ref_b")}
+    for _ in range(4):
+        st_s, _ = codasca.window_step(MCFG, ccfg, st_s, wb_h, 0.1)
+        st_c, _ = coda.window_step(MCFG, c0, st_c, wb_h, 0.1)
+    assert _max_err(_state_only(st_s), _state_only(st_c)) == 0.0
+
+
+def test_codasca_k1_equals_coda_over_windows():
+    """K = 1 (PPD-SG degenerate): the worker mean of one worker is itself,
+    so c_1 == c after every refresh and CODASCA ≡ CoDA exactly — even with
+    fresh (different) batches per window."""
+    ccfg, st_s, _ = _case(1, 2)
+    c0 = coda.CoDAConfig(n_workers=1, p_pos=0.7)
+    st_c = {k: st_s[k] for k in
+            ("params", "a", "b", "alpha", "ref_params", "ref_a", "ref_b")}
+    for seed in range(3):
+        _, _, wb = _case(1, 2, seed=seed)
+        st_s, _ = codasca.window_step(MCFG, ccfg, st_s, wb, 0.1)
+        st_c, _ = coda.window_step(MCFG, c0, st_c, wb, 0.1)
+    assert _max_err(_state_only(st_s), _state_only(st_c)) == 0.0
+
+
+def test_codasca_variate_invariant_and_payload():
+    """After a heterogeneous window: cg == mean_k cv (the SCAFFOLD server
+    invariant, maintained here by the shared all-reduce), corrections are
+    mean-zero across workers, and the accounted payload doubles."""
+    ccfg, st0, wb = _case(8, 4)
+    s1, _ = codasca.window_step(MCFG, ccfg, st0, wb, 0.1)
+    err = jax.tree_util.tree_map(
+        lambda cg, cv: float(jnp.max(jnp.abs(cg - jnp.mean(cv, axis=0)))),
+        s1["cg_params"], s1["cv_params"])
+    assert max(jax.tree_util.tree_leaves(err)) < 1e-6
+    assert float(jnp.max(jnp.abs(s1["cg_a"] - jnp.mean(s1["cv_a"])))) < 1e-6
+    # the variates are not trivially zero on heterogeneous batches
+    assert max(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda cv: float(jnp.max(jnp.abs(cv))), s1["cv_params"]))) > 0
+    assert coda.window_payload_bytes(s1) == 2 * coda.model_bytes(s1)
+    assert coda.window_payload_bytes(_state_only(s1)) == \
+        coda.model_bytes(s1)
+
+
+def test_codasca_int8_shares_quantizer_between_c_and_ck():
+    """Under int8 averaging, cg must equal mean_k cv (both in wire format):
+    the stored per-worker variates are the dequantized payload, so the
+    SCAFFOLD invariant — and hence the K=1 equivalence with int8 CoDA —
+    survives quantization."""
+    ccfg, st0, wb = _case(8, 3, compress="int8")
+    s1, _ = codasca.window_step(MCFG, ccfg, st0, wb, 0.1)
+    err = jax.tree_util.tree_map(
+        lambda cg, cv: float(jnp.max(jnp.abs(cg - jnp.mean(cv, axis=0)))),
+        s1["cg_params"], s1["cv_params"])
+    assert max(jax.tree_util.tree_leaves(err)) < 1e-6
+    # K=1: int8 CODASCA ≡ int8 CoDA over multiple windows (corrections
+    # cancel exactly because c and c_1 share the quantizer)
+    ccfg1, st_s, _ = _case(1, 2, compress="int8")
+    c0 = coda.CoDAConfig(n_workers=1, p_pos=0.7, avg_compress="int8")
+    st_c = {k: st_s[k] for k in
+            ("params", "a", "b", "alpha", "ref_params", "ref_a", "ref_b")}
+    for seed in range(3):
+        _, _, wb1 = _case(1, 2, seed=seed, compress="int8")
+        st_s, _ = codasca.window_step(MCFG, ccfg1, st_s, wb1, 0.1)
+        st_c, _ = coda.window_step(MCFG, c0, st_c, wb1, 0.1)
+    assert _max_err(_state_only(st_s), _state_only(st_c)) == 0.0
+
+
+def test_config_rejects_unknown_algorithm():
+    """A typo'd algorithm must fail loudly at config time — the sharded
+    executor dispatches on equality and would otherwise silently train
+    plain CoDA."""
+    import pytest
+    with pytest.raises(ValueError):
+        coda.CoDAConfig(n_workers=2, algorithm="CODASCA")
+    with pytest.raises(ValueError):
+        coda.CoDAConfig(n_workers=2, avg_compress="int4")
+
+
+def test_codasca_fit_accounting():
+    """fit() with the codasca vmap executor: runs multi-stage with donation,
+    and comm_bytes charges the doubled window payload."""
+    key = jax.random.PRNGKey(0)
+    K = 4
+    ds = ShardedDataset(key, DataConfig(kind="features", n_features=16),
+                        1024, K, target_p=0.7, dirichlet_alpha=0.3)
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=ds.p_pos, algorithm="codasca")
+    sched = schedules.ScheduleConfig(n_workers=K, eta0=0.5, T0=8, I0=4)
+    res = coda.fit(key, MCFG, ccfg, sched, 2,
+                   sample_window=lambda k, i: ds.sample_window(k, i, 16),
+                   sample_alpha_batch=lambda k, m: ds.sample_alpha_batch(k, m),
+                   executor="vmap")
+    sl = schedules.stages(sched, 2)
+    assert res.comm_rounds == coda.comm_rounds(sl)
+    assert all(np.isfinite(h[2]) for h in res.history)
+    n_windows = sum(-(-s.T // s.I) for s in sl)
+    assert coda.comm_bytes(sl, res.state) == \
+        n_windows * 2 * coda.model_bytes(res.state) + 2 * 4
+
+
+# --------------------------------------------------------------------------
+# shard_map equivalence + the compiled-payload acceptance invariant
+# --------------------------------------------------------------------------
+_PRELUDE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs.base import mlp_config
+    from repro.core import coda, codasca
+    from repro.analysis import hlo as H
+
+    mcfg = mlp_config(n_features=16, d=32)
+
+    def make_case(K, I, B=8, compress="", seed=0):
+        ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, avg_compress=compress,
+                               algorithm="codasca")
+        key = jax.random.PRNGKey(seed)
+        st0 = coda.init_state(key, mcfg, ccfg)
+        ky, kx = jax.random.split(key)
+        y = (jax.random.uniform(ky, (I, K, B)) < 0.7).astype(jnp.float32)
+        x = jax.random.normal(kx, (I, K, B, 16)) + 0.3 * (y[..., None] * 2 - 1)
+        wb = {"features": x, "labels": y}
+        ab = {"features": x[0], "labels": y[0]}
+        return ccfg, st0, wb, ab
+
+    def assert_trees_close(got, want, tol, label):
+        for (p, a), (_, b) in zip(jax.tree_util.tree_flatten_with_path(got)[0],
+                                  jax.tree_util.tree_flatten_with_path(want)[0]):
+            err = float(jnp.max(jnp.abs(a - b)))
+            assert err < tol, (label, jax.tree_util.keystr(p), err)
+""")
+
+
+def _run(script: str, timeout=900):
+    r = subprocess.run([sys.executable, "-c", _PRELUDE + textwrap.dedent(script)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env={**os.environ, "PYTHONPATH": "src"},
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "ALL OK" in r.stdout, r.stdout[-2000:]
+
+
+def test_codasca_shard_map_matches_vmap_oracle():
+    """Multi-window CODASCA through shard_map (control variates riding the
+    window all-reduce) must match the oracle to fp32 tolerance — fp32 and
+    int8 buckets, plus the K=1 degenerate case."""
+    _run("""
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    for label, K, I, compress in [("fp32 K=8", 8, 4, ""),
+                                  ("int8 K=8", 8, 2, "int8"),
+                                  ("fp32 K=1", 1, 3, "")]:
+        ccfg, st0, wb, ab = make_case(K, I, compress=compress)
+        exe = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh,
+                                 donate=False)
+        st = exe.place(st0)
+        rt = st0
+        for _ in range(2):  # two windows: variates are live in window 2
+            st, losses = exe.window_step(st, wb, 0.1)
+            rt, rl = codasca.window_step(mcfg, ccfg, rt, wb, 0.1)
+        st2 = exe.stage_end(st, ab)
+        rt2 = coda.stage_end(mcfg, ccfg, rt, ab, resync=False)
+        assert losses.shape == (I, K), (label, losses.shape)
+        assert_trees_close(st, rt, 1e-5, label + "/window")
+        assert_trees_close(st2, rt2, 1e-5, label + "/stage")
+        np.testing.assert_allclose(np.asarray(jnp.mean(losses, axis=1)),
+                                   np.asarray(rl), atol=1e-5)
+        print("OK", label)
+    print("ALL OK")
+    """)
+
+
+def test_codasca_window_is_one_allreduce_of_double_payload():
+    """THE acceptance invariant: the compiled CODASCA window contains
+    exactly ONE cross-worker all-reduce whose operand bytes equal the
+    documented state + control-variate payload (2 × model_bytes); with
+    communicate=False the window is collective-silent; the stage boundary
+    still ships one f32 scalar."""
+    _run("""
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    K, B = 8, 8
+    ccfg, st0, _, ab = make_case(K, 1, B=B)
+    exe = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh, donate=False)
+
+    def window_txt(I, communicate=True):
+        wb = {"features": jax.ShapeDtypeStruct((I, K, B, 16), jnp.float32),
+              "labels": jax.ShapeDtypeStruct((I, K, B), jnp.float32)}
+        sts = jax.eval_shape(lambda s: s, st0)
+        return exe.window_fn(sts, wb, communicate=communicate).lower(
+            sts, wb, jax.ShapeDtypeStruct((), jnp.float32)).compile().as_text()
+
+    payload = coda.window_payload_bytes(st0)
+    assert payload == 2 * coda.model_bytes(st0)
+    for I in (1, 4, 8):
+        ops = H.verify_window_payload(window_txt(I), payload)
+        assert "0,1,2,3,4,5,6,7" in ops[0]["replica_groups"], ops[0]
+    assert H.collective_ops(window_txt(4, communicate=False)) == []
+
+    sts = jax.eval_shape(lambda s: s, st0)
+    stage_ops = H.collective_ops(
+        exe.stage_fn(sts, ab).lower(sts, ab).compile().as_text())
+    assert len(stage_ops) == 1 and stage_ops[0]["bytes"] == 4
+
+    # and the CoDA window still ships exactly model_bytes — the helper
+    # flags any drift either way
+    ccfg0, st0c, _, _ = make_case(K, 1, B=B)
+    import dataclasses
+    ccfg0 = dataclasses.replace(ccfg0, algorithm="coda")
+    st0c = {k: v for k, v in st0c.items() if not k.startswith(("cv_", "cg_"))}
+    exe0 = coda.make_executor(mcfg, ccfg0, "shard_map", mesh=mesh,
+                              donate=False)
+    wb = {"features": jax.ShapeDtypeStruct((4, K, B, 16), jnp.float32),
+          "labels": jax.ShapeDtypeStruct((4, K, B), jnp.float32)}
+    sts = jax.eval_shape(lambda s: s, st0c)
+    txt = exe0.window_fn(sts, wb).lower(
+        sts, wb, jax.ShapeDtypeStruct((), jnp.float32)).compile().as_text()
+    H.verify_window_payload(txt, coda.model_bytes(st0c))
+    try:
+        H.verify_window_payload(txt, 2 * coda.model_bytes(st0c))
+        raise SystemExit("verify_window_payload missed a byte mismatch")
+    except AssertionError:
+        pass
+    print("ALL OK")
+    """)

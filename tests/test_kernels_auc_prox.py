@@ -64,8 +64,6 @@ def test_auc_strong_concavity_in_alpha(p, alpha, seed):
     if float(y.sum()) in (0.0, 128.0):
         return
     f = lambda al: ref.auc_loss_ref(h, y, 0.1, 0.2, al, p)[0]
-    from repro.core.objective import optimal_alpha
-    a_star = optimal_alpha(h, y)
     # NOTE F uses prior p while α* uses the batch composition; with the exact
     # gradient condition: dF/dα(α_opt)=0 where α_opt solves the p-weighted
     # problem.  Check concavity + stationarity of the p-weighted optimum.
@@ -74,7 +72,6 @@ def test_auc_strong_concavity_in_alpha(p, alpha, seed):
                       (2 * p * (1 - p) * h.shape[0]))
     assert abs(float(g(alpha_opt))) < 1e-4
     assert float(f(alpha_opt)) >= float(f(alpha)) - 1e-5
-    del a_star
 
 
 @pytest.mark.parametrize("N,block", [(128, 64), (1000, 256), (5, 8)])
