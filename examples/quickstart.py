@@ -22,6 +22,22 @@ window (2x payload).  The full launcher exposes both:
 
 and ``python -m benchmarks.run --only hetero_window`` sweeps CoDA vs
 CODASCA over α ∈ {0.1, 1, ∞} × I ∈ {4, 16, 64} at equal comm rounds.
+
+Overlapped averaging
+--------------------
+On the shard_map executor the per-window all-reduce normally blocks the
+critical path.  ``--overlap`` (``CoDAConfig(overlap_chunks=C)``) reschedules
+it: windows run as fused pairs and each averaging lowers as C ppermute
+ring chains per dtype bucket, so the first window's wire time can hide
+under the second window's compute — same mean, same bytes, asserted
+against the compiled HLO:
+
+    PYTHONPATH=src python -m repro.launch.train --arch mlp --workers 8 \\
+        --executor shard_map --force-host-devices 8 --overlap \\
+        --overlap-chunks 4 --stages 2 --interval 4
+
+``python -m benchmarks.run --only overlap_window --force-host-devices 8``
+compares the overlapped and blocking schedules at equal comm bytes.
 """
 import sys
 

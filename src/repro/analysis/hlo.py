@@ -75,30 +75,249 @@ def collective_ops(hlo_text: str) -> List[dict]:
 
 def verify_window_payload(hlo_text: str, expected_bytes: int, *,
                           op: str = "all-reduce",
-                          count: int = 1) -> List[dict]:
-    """Assert a compiled CoDA/CODASCA window's wire traffic: exactly
-    ``count`` collectives, all of kind ``op``, totalling ``expected_bytes``
-    result-shape bytes — and *no other* collective of any kind.
+                          count: int = None,
+                          by_dtype: Dict[str, int] = None) -> List[dict]:
+    """Assert a compiled CoDA/CODASCA window's wire traffic: all collectives
+    are of kind ``op``, totalling ``expected_bytes`` result-shape bytes —
+    and *no other* collective of any kind.
 
-    The expected payload comes from ``coda.window_payload_bytes``:
-    ``model_bytes`` for a CoDA window, ``2 ×`` that for CODASCA (state +
-    control variates in one bucket).  Returns the op records on success so
-    callers can additionally inspect dtypes / replica groups.
+    The bucketed averaging ships ONE collective per payload *dtype bucket*
+    (core/bucketing.pmean_buckets).  ``expected_bytes`` is always the
+    LOGICAL payload (``coda.window_payload_bytes``: ``model_bytes`` for a
+    CoDA window, ``2 ×`` that for CODASCA — state + control variates in
+    one bucket).
+
+    Three modes:
+      * default (``count=None``, no ``by_dtype``) — every payload dtype
+        appears in exactly one op and the wire bytes equal
+        ``expected_bytes``.  The right check for single-dtype states (one
+        all-reduce, exactly).
+      * ``count=N`` — pin the op count instead, wire bytes still equal
+        ``expected_bytes``.
+      * ``by_dtype={hlo tag: bytes}`` (``coda.window_payload_by_dtype``) —
+        the mixed-dtype check: each logical bucket must map to exactly one
+        op, either verbatim or *float-normalized* (backends without native
+        low-precision collectives, e.g. the CPU host backend, widen a
+        bf16/f16 all-reduce to f32 — same element count, doubled wire
+        bytes), no op may be left over, and the buckets must sum to
+        ``expected_bytes``.
+
+    Returns the op records on success so callers can additionally inspect
+    dtypes / replica groups.
     """
     ops = collective_ops(hlo_text)
     stray = [o for o in ops if o["op"] != op]
     if stray:
         raise AssertionError(
             f"expected only {op} ops, found {[(o['op'], o['bytes']) for o in stray]}")
-    if len(ops) != count:
+    if count is not None:
+        if len(ops) != count:
+            raise AssertionError(
+                f"expected exactly {count} {op} op(s), found "
+                f"{[(o['op'], o['bytes']) for o in ops]}")
+    elif by_dtype is None:
+        seen: Dict[str, int] = {}
+        for o in ops:
+            for dt in o["by_dtype"]:
+                seen[dt] = seen.get(dt, 0) + 1
+        dup = {dt: n for dt, n in seen.items() if n > 1}
+        if dup or not ops:
+            raise AssertionError(
+                f"expected one {op} per payload dtype bucket, found "
+                f"{[(o['op'], o['by_dtype']) for o in ops]}")
+    if by_dtype is not None:
+        if sum(by_dtype.values()) != expected_bytes:
+            raise AssertionError(
+                f"by_dtype buckets sum to {sum(by_dtype.values())}, "
+                f"expected_bytes says {expected_bytes}")
+        unmatched = list(ops)
+        for tag, b in sorted(by_dtype.items()):
+            hit = None
+            for o in unmatched:
+                if o["by_dtype"] == {tag: b}:
+                    hit = o          # verbatim wire dtype
+                    break
+                if tag in ("bf16", "f16") and o["by_dtype"] == {"f32": 2 * b}:
+                    hit = o          # float-normalized to f32, same elements
+                    break
+            if hit is None:
+                raise AssertionError(
+                    f"no {op} carries the {tag} bucket of {b} bytes "
+                    f"(ops: {[(o['op'], o['by_dtype']) for o in ops]})")
+            unmatched.remove(hit)
+        if unmatched:
+            raise AssertionError(
+                f"stray {op} beyond the accounted dtype buckets: "
+                f"{[(o['op'], o['by_dtype']) for o in unmatched]}")
+    else:
+        total = sum(o["bytes"] for o in ops)
+        if total != expected_bytes:
+            raise AssertionError(
+                f"window payload mismatch: HLO ships {total} bytes, "
+                f"accounting says {expected_bytes} "
+                f"({[(o['op'], o['bytes']) for o in ops]})")
+    return ops
+
+
+_DOT_RE = re.compile(r"\b(dot|convolution)\(")
+_CALLEE_RE = re.compile(r"(?:calls|body|condition|to_apply)=(%?[\w.\-]+)")
+# computation headers: "%name (params...) -> type {" / "ENTRY %name (...)";
+# the param list may nest parens (tuple types), so don't try to match it
+_COMPUTATION_HDR_RE = re.compile(
+    r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*->.*\{\s*$")
+
+
+def _dot_bearing_computations(hlo_text: str):
+    """Names of HLO computations that contain a dot/convolution, directly or
+    through any computation they call (fusions, while bodies — the scanned
+    local steps live inside a while loop).  This is how 'real model
+    compute' is told apart from the ring's own index arithmetic."""
+    direct, calls, cur = set(), {}, None
+    for line in hlo_text.splitlines():
+        m = _COMPUTATION_HDR_RE.match(line)
+        if m and "{" in line:
+            cur = m.group(1).lstrip("%")
+            continue
+        if cur is None:
+            continue
+        if _DOT_RE.search(line):
+            direct.add(cur)
+        for callee in _CALLEE_RE.findall(line):
+            calls.setdefault(cur, set()).add(callee.lstrip("%"))
+    # propagate dot-ness up the call graph to a fixed point
+    changed = True
+    while changed:
+        changed = False
+        for name, callees in calls.items():
+            if name not in direct and callees & direct:
+                direct.add(name)
+                changed = True
+    return direct
+
+
+_SSA_NAME_RE = re.compile(r"(%[\w.\-]+)")
+
+
+def permute_chain_components(hlo_text: str) -> int:
+    """Number of INDEPENDENT collective-permute dependency chains in the
+    entry computation — the falsifiable core of the overlap claim.
+
+    Two permutes belong to one chain when one's result feeds the other
+    through entry-computation dataflow (adds, fusions, slices — the ring's
+    glue ops); propagation is cut at ``while``/``conditional`` calls, which
+    are the window boundaries (the next window's scan consumes the whole
+    averaged state, so every ring of the next window would otherwise
+    spuriously merge with every ring of the previous one).  The chunked
+    ring lowering must produce exactly ``bucketing.ring_chain_count``
+    components per ring: a de-chunked lowering collapses them to one per
+    bucket, and an artificial cross-chunk dependency (which would
+    serialize the chunks and kill the overlap) merges components.
+
+    Only meaningful when the local steps lower as a loop (I ≥ 2): an I=1
+    window inlines its compute into the entry computation, and the ring-
+    to-ring dependency through the inlined (dot-free, elementwise) prox
+    updates legitimately merges every component into one — callers skip
+    the chain check there (``verify_overlapped_window(n_chains=None)``).
+    """
+    lines = hlo_text.splitlines()
+    start = next((i for i, ln in enumerate(lines)
+                  if ln.startswith("ENTRY ")), None)
+    if start is None:
+        raise AssertionError("no ENTRY computation in HLO text")
+    carried: Dict[str, frozenset] = {}
+    parent: Dict[int, int] = {}
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    n_roots = 0
+    for raw in lines[start + 1:]:
+        s = raw.strip()
+        if s == "}":
+            break
+        if not s.startswith("%") or "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        name = lhs.strip().split()[0]
+        ancestors = set()
+        if " while(" not in s and " conditional(" not in s:
+            for ref in _SSA_NAME_RE.findall(rhs):
+                ancestors |= carried.get(ref, frozenset())
+        if _OP_RE.search(s):                  # a collective-permute hop
+            if not ancestors:
+                rid = n_roots
+                parent[rid] = rid
+                n_roots += 1
+            else:
+                ids = {find(i) for i in ancestors}
+                rid = ids.pop()
+                for other in ids:
+                    parent[find(other)] = find(rid)
+            carried[name] = frozenset({rid})
+        elif ancestors:
+            carried[name] = frozenset(ancestors)
+    return len({find(r) for r in range(n_roots)})
+
+
+def verify_overlapped_window(hlo_text: str, *, n_hops: int,
+                             n_chains: int = None,
+                             require_compute_between: bool = True) -> List[dict]:
+    """Assert the overlapped window-pair module's wire schedule: NO blocking
+    all-reduce (or any other collective kind); the averaging is exactly
+    ``n_hops`` ``collective-permute`` ops (C chunk chains × 2·(R−1) hops ×
+    the rings in the module, from ``bucketing.ring_hop_count``); and, with
+    ``n_chains`` (rings × ``bucketing.ring_chain_count``), that the hops
+    form exactly that many INDEPENDENT dependency chains — the property
+    that lets an async scheduler run late chunks' wire time under the
+    compute consuming early chunks.  A de-chunked or artificially
+    serialized lowering fails the chain check even though its hop count
+    may survive.
+
+    ``require_compute_between`` additionally checks that dot-bearing
+    compute (the second window's matmuls) is scheduled between the first
+    and last hop.  For a two-ring pair module this is a structural sanity
+    check (it confirms both windows really were fused into one module
+    around the averaging) rather than a scheduling guarantee — the
+    falsifiable overlap invariants are the chain/hop/no-barrier checks
+    above.  Returns the permute op records.
+    """
+    ops = collective_ops(hlo_text)
+    stray = [o for o in ops if o["op"] != "collective-permute"]
+    if stray:
         raise AssertionError(
-            f"expected exactly {count} {op} op(s), found "
-            f"{[(o['op'], o['bytes']) for o in ops]}")
-    total = sum(o["bytes"] for o in ops)
-    if total != expected_bytes:
+            "overlapped window must not contain blocking collectives, found "
+            f"{[(o['op'], o['bytes']) for o in stray]}")
+    if len(ops) != n_hops:
         raise AssertionError(
-            f"window payload mismatch: HLO ships {total} bytes, accounting "
-            f"says {expected_bytes} ({[(o['op'], o['bytes']) for o in ops]})")
+            f"expected {n_hops} collective-permute hops, found {len(ops)}")
+    if n_chains is not None:
+        got = permute_chain_components(hlo_text)
+        if got != n_chains:
+            raise AssertionError(
+                f"expected {n_chains} independent permute chains, found "
+                f"{got} — the chunked ring degenerated (de-chunked or "
+                "cross-chunk serialized)")
+    if require_compute_between and ops:
+        dotted = _dot_bearing_computations(hlo_text)
+        lines = hlo_text.splitlines()
+        hop_idx = [i for i, ln in enumerate(lines) if _OP_RE.search(ln)]
+        found = False
+        for ln in lines[hop_idx[0] + 1:hop_idx[-1]]:
+            if _DOT_RE.search(ln):          # an unfused dot right there
+                found = True
+                break
+            if any(c.lstrip("%") in dotted
+                   for c in _CALLEE_RE.findall(ln)):
+                found = True
+                break
+        if not found:
+            raise AssertionError(
+                "no dot-bearing compute scheduled between the first and last "
+                "ring hop — the two windows were not fused around the "
+                "averaging")
     return ops
 
 

@@ -20,14 +20,146 @@ Two payload layouts:
 
 ``compress="int8"`` swaps the fp32 pmean for an s8-payload + fp32-scale
 all-gather pair (see ``coda.int8_quantize``).
+
+Overlapped (ring) averaging
+---------------------------
+``ring=RingSpec(...)`` lowers the same per-dtype-bucket mean as C
+independent reduce-scatter / all-gather rings built from ``lax.ppermute``
+hops instead of one blocking ``lax.pmean``.  The mean is bit-for-the-same-
+tolerance identical (sum over the ring, divide by the ring size); what
+changes is the *schedule*: each chunk's 2·(R−1) hops form their own
+dependency chain, so when the averaging sits inside a fused two-window
+step (core/coda_sharded.window_pair_fn) XLA's async collective-permute
+scheduling can hide the wire time of late chunks under the next window's
+compute on early chunks.  Small buckets (fewer than R elements per chunk)
+collapse to one chunk so the hop count stays proportional to real payload.
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RingSpec:
+    """How to lower a cross-worker mean as ppermute rings.
+
+    ``axis``: the ONE mesh axis the ring runs over (multi-axis worker
+    partitions are rejected by the executor — a ring needs a total order).
+    ``size``: number of ring participants (the axis extent).
+    ``chunks``: C, how many independent ring chains each dtype bucket is
+    split into (more chunks = finer overlap granularity, more hops).
+    """
+    axis: str
+    size: int
+    chunks: int
+
+    def __post_init__(self):
+        if self.size < 1 or self.chunks < 1:
+            raise ValueError(f"bad RingSpec {self}")
+
+
+def _n_chunks(n: int, ring: RingSpec) -> int:
+    """Chunks actually used for an n-element bucket: each chunk must hold at
+    least one element per ring shard, else it degenerates to padding."""
+    return max(1, min(ring.chunks, n // max(ring.size, 1) or 1))
+
+
+def _chunk_offsets(n: int, c: int):
+    """c+1 split points tiling [0, n) into c chunks whose sizes differ by at
+    most one (the first n % c chunks get the extra element)."""
+    base, rem = divmod(n, c)
+    offs = [0]
+    for i in range(c):
+        offs.append(offs[-1] + base + (1 if i < rem else 0))
+    return offs
+
+
+def ring_chain_count(sizes: Dict, ring: RingSpec) -> int:
+    """Independent ppermute chains one ring-averaging forms: one per chunk
+    per dtype bucket (small buckets collapse to a single chunk)."""
+    if ring.size == 1:
+        return 0
+    return sum(_n_chunks(n, ring) for n in sizes.values())
+
+
+def ring_hop_count(sizes: Dict, ring: RingSpec) -> int:
+    """collective-permute ops one ring-averaging emits: per dtype bucket,
+    C chains of 2·(R−1) hops (reduce-scatter + all-gather)."""
+    return ring_chain_count(sizes, ring) * 2 * (ring.size - 1)
+
+
+def bucket_sizes(mats) -> Dict:
+    """Element count per dtype bucket (the ring/pmean payload layout)."""
+    out: Dict = {}
+    for m in mats:
+        d = jnp.dtype(m.dtype)
+        out[d] = out.get(d, 0) + m.shape[1]
+    return out
+
+
+def _ring_chunk_mean(chunk, ring: RingSpec):
+    """Mean of a [m] chunk over the ring: reduce-scatter (R−1 ppermute
+    hops, each shard ends fully summed on one device) then all-gather
+    (R−1 more hops).  Returns the [m] mean."""
+    R, axis = ring.size, ring.axis
+    m = chunk.shape[0]
+    s = -(-m // R)                       # ring shard length (padded)
+    buf = jnp.zeros((R * s,), chunk.dtype).at[:m].set(chunk)
+    shards = buf.reshape(R, s)
+    idx = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % R) for i in range(R)]
+
+    # reduce-scatter: at hop t device i forwards its partial of shard
+    # (i−t+1) and folds its own contribution into the one it receives;
+    # after R−1 hops device i holds the full sum of shard (i−R+2) mod R.
+    send = jnp.take(shards, (idx + 1) % R, axis=0)
+    for t in range(R - 1):
+        recvd = jax.lax.ppermute(send, axis, perm)
+        send = jnp.take(shards, (idx - t) % R, axis=0) + recvd
+    own = (idx - (R - 2)) % R
+
+    # all-gather: circulate the completed shards around the same ring.
+    out = jnp.zeros((R, s), chunk.dtype)
+    out = jax.lax.dynamic_update_slice(out, send[None], (own, 0))
+    cur = send
+    for t in range(R - 1):
+        cur = jax.lax.ppermute(cur, axis, perm)
+        out = jax.lax.dynamic_update_slice(out, cur[None],
+                                           ((own - 1 - t) % R, 0))
+    return out.reshape(-1)[:m] / R
+
+
+def ring_mean_buckets(mats, ring: RingSpec):
+    """``pmean_buckets`` semantics lowered as chunked ppermute rings: per
+    dtype bucket, local mean over the K_loc rows, then C independent
+    reduce-scatter/all-gather chains over the ring axis."""
+    by_dtype = {}
+    for i, m in enumerate(mats):
+        by_dtype.setdefault(jnp.dtype(m.dtype), []).append(i)
+    out = [None] * len(mats)
+    for idxs in by_dtype.values():
+        buf = jnp.concatenate([mats[i] for i in idxs], axis=1)
+        local = jnp.mean(buf, axis=0)          # [N] this shard's average
+        n = local.shape[0]
+        if ring.size == 1:
+            mean = local                       # degenerate: no wire
+        else:
+            # near-even split (sizes differ by ≤ 1, never 0): a ceil-based
+            # split could leave empty trailing chunks whose zero-byte
+            # permute chains XLA may DCE, breaking ring_hop_count
+            offs = _chunk_offsets(n, _n_chunks(n, ring))
+            mean = jnp.concatenate([
+                _ring_chunk_mean(local[lo:hi], ring)
+                for lo, hi in zip(offs[:-1], offs[1:])])
+        offs = np.cumsum([0] + [mats[i].shape[1] for i in idxs])
+        for j, i in enumerate(idxs):
+            out[i] = mean[offs[j]:offs[j + 1]]
+    return out
 
 
 def pmean_buckets(mats, wa):
@@ -100,12 +232,18 @@ def _unmats(flat_p, tdef, kloc, means, *, broadcast=True):
     return tree, scalars
 
 
-def average_state(state, wa, compress: Optional[str]):
+def average_state(state, wa, compress: Optional[str], *,
+                  ring: Optional[RingSpec] = None):
     """``coda.average`` semantics on a local worker shard: mean over the
-    K_loc local workers, then over the worker mesh axes."""
+    K_loc local workers, then over the worker mesh axes.  ``ring`` swaps
+    the blocking pmean for the chunked ppermute rings (fp32 buckets only —
+    int8 + ring is rejected at config time)."""
     mats, flat_p, tdef, kloc = _state_mats(state)
+    if ring is not None and compress:
+        raise ValueError("ring averaging does not support compressed buckets")
     means = int8_average(mats, wa) if compress == "int8" \
-        else pmean_buckets(mats, wa)
+        else (ring_mean_buckets(mats, ring) if ring is not None
+              else pmean_buckets(mats, wa))
     tree, (a, b, alpha) = _unmats(flat_p, tdef, kloc, means)
     new = dict(state)
     new["params"] = tree
@@ -113,7 +251,8 @@ def average_state(state, wa, compress: Optional[str]):
     return new
 
 
-def average_and_refresh(state, cv_new, wa, compress: Optional[str]):
+def average_and_refresh(state, cv_new, wa, compress: Optional[str], *,
+                        ring: Optional[RingSpec] = None):
     """CODASCA window end: average the state tensors AND the per-worker
     control variates in one bucket.  The state mean is broadcast back (all
     workers restart from the synced iterate), the control mean becomes the
@@ -130,7 +269,12 @@ def average_and_refresh(state, cv_new, wa, compress: Optional[str]):
     """
     mats, flat_p, tdef, kloc = _state_mats(state)
     cmats, cflat, _, _ = _state_mats(cv_new)
-    if compress == "int8":
+    if ring is not None:
+        if compress:
+            raise ValueError("ring averaging does not support compressed "
+                             "buckets")
+        means = ring_mean_buckets(mats + cmats, ring)
+    elif compress == "int8":
         from repro.core import coda
 
         means = int8_average(mats + cmats, wa)

@@ -65,6 +65,11 @@ class CoDAConfig:
     avg_compress: str = ""      # "" | "int8": compressed worker averaging
     algorithm: str = "coda"     # "coda" | "codasca" (control variates for
                                 # heterogeneous shards, core/codasca.py)
+    overlap_chunks: int = 0     # >0: sharded executor lowers the window
+                                # averaging as this many ppermute ring
+                                # chains per dtype bucket and fit() feeds
+                                # fused window PAIRS so the first window's
+                                # ring hides under the second's compute
     param_dtype: Any = jnp.float32
 
     def __post_init__(self):
@@ -74,6 +79,13 @@ class CoDAConfig:
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
         if self.avg_compress not in ("", "int8"):
             raise ValueError(f"unknown avg_compress {self.avg_compress!r}")
+        if self.overlap_chunks < 0:
+            raise ValueError(f"overlap_chunks must be >= 0, got "
+                             f"{self.overlap_chunks}")
+        if self.overlap_chunks and self.avg_compress:
+            raise ValueError("overlapped ring averaging ships plain dtype "
+                             "buckets; it cannot be combined with "
+                             f"avg_compress={self.avg_compress!r}")
 
 
 # The training state is a plain dict pytree (stacked worker axis throughout).
@@ -269,6 +281,30 @@ def model_bytes(state: CoDAState, compress: Optional[str] = None) -> int:
     return per_worker + 3 * 4
 
 
+# jnp dtype name → the short dtype tag optimized-HLO shapes use
+_HLO_DTYPE = {"float32": "f32", "bfloat16": "bf16", "float16": "f16",
+              "float64": "f64", "int8": "s8", "int32": "s32"}
+
+
+def window_payload_by_dtype(state: CoDAState,
+                            compress: Optional[str] = None) -> Dict[str, int]:
+    """Window-payload bytes per HLO dtype tag — the per-dtype-bucket view of
+    ``window_payload_bytes`` (bucketing ships one collective per dtype, so a
+    bf16-param state splits into a bf16 bucket and the f32 a/b/α bucket).
+    Only meaningful for the uncompressed layouts (fp-dtype pmean or ring)."""
+    if compress:
+        raise ValueError("per-dtype payload is only defined for "
+                         "uncompressed averaging")
+    mult = 2 if "cv_params" in state else 1
+    out: Dict[str, int] = {}
+    for leaf in jax.tree_util.tree_leaves(state["params"]):
+        tag = _HLO_DTYPE[jnp.dtype(leaf.dtype).name]
+        per = leaf.size // leaf.shape[0] * leaf.dtype.itemsize
+        out[tag] = out.get(tag, 0) + mult * per
+    out["f32"] = out.get("f32", 0) + mult * 3 * 4   # a, b, alpha
+    return out
+
+
 def window_payload_bytes(state: CoDAState,
                          compress: Optional[str] = None) -> int:
     """Bytes one worker ships in the single window all-reduce.
@@ -304,6 +340,15 @@ class FitResult:
     history: list          # (stage, iteration, loss)
     comm_rounds: int
     iterations: int
+    # per-worker window-payload bytes split by schedule position: a round
+    # whose averaging sits in the first half of a fused window pair is
+    # *overlapped* (its ring hops can hide under the second window's
+    # compute); every other round — second halves, unpaired trailing
+    # windows, and all rounds of the non-overlapped executors — is
+    # *exposed* latency on the critical path.  The sum is the classical
+    # ``comm_bytes`` total; the split is what the overlap buys.
+    exposed_bytes: int = 0
+    overlapped_bytes: int = 0
 
 
 class VmapExecutor:
@@ -373,6 +418,13 @@ def fit(key, mcfg: ModelConfig, ccfg: CoDAConfig, sched: schedules.ScheduleConfi
     [I, K, B, ...]; ``sample_alpha_batch(key, m)`` one with [K, m, ...].
     ``executor`` is ``"vmap"`` | ``"shard_map"`` or an already-built
     executor object (see ``make_executor``).
+
+    When the executor overlaps (``CoDAConfig(overlap_chunks > 0)`` on the
+    sharded executor) the loop feeds fused window PAIRS: one jit call runs
+    2·I local steps with the first window's ring averaging scheduled under
+    the second window's compute.  An odd trailing window falls back to the
+    single-window step; the first-half payloads are accounted as
+    ``overlapped_bytes``, everything else as ``exposed_bytes``.
     """
     exe = executor if hasattr(executor, "window_step") else \
         make_executor(mcfg, ccfg, executor, mesh=mesh, policy=policy)
@@ -381,19 +433,44 @@ def fit(key, mcfg: ModelConfig, ccfg: CoDAConfig, sched: schedules.ScheduleConfi
     history = []
     rounds = 0
     iters = 0
+    exposed = overlapped = 0
+    payload = window_payload_bytes(state, ccfg.avg_compress or None)
+    pairs = getattr(exe, "overlap_pairs", False)
 
     for st in stage_list:
         n_windows = -(-st.T // st.I)
-        for w in range(n_windows):
+        w = 0
+        while w < n_windows:
             key, sk = jax.random.split(key)
-            wb = sample_window(sk, st.I)
-            state, losses = exe.window_step(state, wb, st.eta)
-            rounds += 1
-            iters += st.I
+            if pairs and w + 1 < n_windows:
+                wb = sample_window(sk, 2 * st.I)
+                wb = jax.tree_util.tree_map(
+                    lambda l: l.reshape((2, st.I) + l.shape[1:]), wb)
+                state, losses = exe.window_pair_step(state, wb, st.eta)
+                rounds += 2
+                iters += 2 * st.I
+                overlapped += payload
+                exposed += payload
+                done = 2
+                w += 2
+            else:
+                wb = sample_window(sk, st.I)
+                state, losses = exe.window_step(state, wb, st.eta)
+                rounds += 1
+                iters += st.I
+                exposed += payload
+                done = 1
+                w += 1
             history.append((st.s, iters, float(jnp.mean(losses))))
-            if eval_fn is not None and eval_every and (w + 1) % eval_every == 0:
+            # a pair completes TWO windows in one step: honor the per-window
+            # eval cadence if either of them hits it (a mid-pair state does
+            # not exist to evaluate, so the pair evals at most once)
+            if eval_fn is not None and eval_every and any(
+                    j % eval_every == 0 for j in range(w - done + 1, w + 1)):
                 history.append((st.s, iters, float(eval_fn(state))))
         key, sk = jax.random.split(key)
         state = exe.stage_end(state, sample_alpha_batch(sk, st.m))
         rounds += 1
-    return FitResult(state, history, rounds, iters)
+        exposed += 4                       # the stage-end f32 α scalar
+    return FitResult(state, history, rounds, iters,
+                     exposed_bytes=exposed, overlapped_bytes=overlapped)

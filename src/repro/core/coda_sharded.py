@@ -38,6 +38,19 @@ cases on 8 forced host devices.
 variate corrected variant (core/codasca.py): still zero collectives inside
 the I local steps, still ONE all-reduce per window — the variate refresh
 rides the same bucket, doubling its payload (tests/test_codasca.py).
+
+``CoDAConfig(overlap_chunks=C > 0)`` adds the OVERLAPPED schedule: fit()
+feeds fused two-window pairs (``window_pair_fn``) in which each averaging
+lowers as C ppermute ring chains per dtype bucket
+(core/bucketing.ring_mean_buckets) instead of a blocking pmean.  Inside
+the fused module the first window's ring hops have only chunk-level data
+dependencies against the second window's local steps, so XLA's async
+collective-permute scheduling can hide the first averaging's wire time
+under compute — the compiled artifact is asserted to be exactly C·2·(R−1)
+``collective-permute`` chains per ring interleaved with dot compute and
+NO all-reduce (tests/test_overlap.py, analysis/hlo.verify_overlapped_
+window).  The ring mean is the same mean; the blocking path stays the
+default and the two agree to fp32 tolerance.
 """
 from __future__ import annotations
 
@@ -78,6 +91,28 @@ class ShardedExecutor:
         self.worker_axes = rules.worker_partition(mesh, policy, ccfg.n_workers)
         self._donate = (0,) if donate else ()
         self._fns = {}
+        if ccfg.overlap_chunks and len(self.worker_axes) > 1:
+            raise ValueError(
+                "overlap_chunks needs the worker axis on ONE mesh axis (a "
+                f"ppermute ring has a single total order); partition "
+                f"{self.worker_axes} spans {len(self.worker_axes)} axes — "
+                "use the fsdp policy or a single-pod mesh")
+
+    def _ring_spec(self):
+        """The RingSpec the overlapped averaging runs with, or None when
+        overlap is off / there is no wire (replicated K=1 degenerate)."""
+        if not self.ccfg.overlap_chunks or not self.worker_axes:
+            return None
+        ax = self.worker_axes[0]
+        return bucketing.RingSpec(ax, self.mesh.shape[ax],
+                                  self.ccfg.overlap_chunks)
+
+    @property
+    def overlap_pairs(self) -> bool:
+        """True when fit() should feed fused window pairs (the overlapped
+        schedule).  False on the degenerate no-wire partitions, where a
+        ring would be pure overhead."""
+        return self._ring_spec() is not None
 
     # -- spec plumbing ----------------------------------------------------
     def state_shardings(self, state):
@@ -95,35 +130,42 @@ class ShardedExecutor:
             for t in trees)
 
     # -- window -----------------------------------------------------------
+    def _one_window(self, st, bt, eta, *, communicate, ring):
+        """One window's worth of per-shard work: I local steps + (optionally)
+        the combined averaging — blocking pmean bucket by default, chunked
+        ppermute rings when ``ring`` is given.  Runs INSIDE shard_map."""
+        mcfg, ccfg, wa = self.mcfg, self.ccfg, self.worker_axes
+        if ccfg.algorithm == "codasca":
+            from repro.core import codasca
+            return codasca.run_window(mcfg, ccfg, st, bt, eta, wa=wa,
+                                      communicate=communicate, ring=ring)
+
+        def step(s, b):
+            return coda.local_step(mcfg, ccfg, s, b, eta)
+
+        from repro import flags
+        st, losses = jax.lax.scan(step, st, bt, unroll=flags.scan_unroll())
+        if communicate:
+            st = bucketing.average_state(st, wa, ccfg.avg_compress or None,
+                                         ring=ring)
+        return st, losses  # losses: [I, K_loc]
+
     def window_fn(self, state, wb, *, communicate: bool = True):
         """The jitted window step for these arg structures (also the hook
         the HLO tests use: ``.lower(state, wb, eta)``)."""
         key = self._key(("window", communicate), state, wb)
         if key in self._fns:
             return self._fns[key]
-        mcfg, ccfg, wa = self.mcfg, self.ccfg, self.worker_axes
-        lead = wa if wa else None
+        lead = self.worker_axes if self.worker_axes else None
 
         def body(st, bt, eta):
-            if ccfg.algorithm == "codasca":
-                from repro.core import codasca
-                return codasca.run_window(mcfg, ccfg, st, bt, eta, wa=wa,
-                                          communicate=communicate)
-
-            def step(s, b):
-                return coda.local_step(mcfg, ccfg, s, b, eta)
-
-            from repro import flags
-            st, losses = jax.lax.scan(step, st, bt,
-                                      unroll=flags.scan_unroll())
-            if communicate:
-                st = bucketing.average_state(st, wa,
-                                             ccfg.avg_compress or None)
-            return st, losses  # losses: [I, K_loc]
+            return self._one_window(st, bt, eta, communicate=communicate,
+                                    ring=None)
 
         st_specs = rules.shardmap_state_specs(state, self.mesh, self.policy)
         bt_specs = rules.shardmap_batch_specs(wb, self.mesh, self.policy,
-                                              ccfg.n_workers, worker_dim=1)
+                                              self.ccfg.n_workers,
+                                              worker_dim=1)
         from jax.sharding import PartitionSpec as P
         sm = _shard_map(body, mesh=self.mesh,
                         in_specs=(st_specs, bt_specs, P()),
@@ -136,6 +178,52 @@ class ShardedExecutor:
     def window_step(self, state, wb, eta, *, communicate: bool = True):
         return self.window_fn(state, wb, communicate=communicate)(
             state, wb, eta)
+
+    # -- fused window pair (the overlapped schedule) ----------------------
+    def window_pair_fn(self, state, wb2, *, communicate: bool = True):
+        """Two windows fused into ONE compiled unit, with every averaging
+        lowered as chunked ppermute rings (``CoDAConfig.overlap_chunks``).
+
+        ``wb2`` leaves carry a leading pair axis: [2, I, K, B, ...].  Inside
+        the fused module the first window's ring chains have no barrier
+        against the second window's local-step compute — only chunk-level
+        data dependencies — so XLA's async collective-permute scheduling
+        can hide the first averaging's wire time entirely (that is the
+        ``overlapped_bytes`` half of the fit accounting; the second
+        window's ring, with nothing after it, stays exposed).  The math is
+        the blocking path's math: same bucket, same mean, asserted to fp32
+        tolerance in tests/test_overlap.py.
+        """
+        key = self._key(("pair", communicate), state, wb2)
+        if key in self._fns:
+            return self._fns[key]
+        ring = self._ring_spec()
+        lead = self.worker_axes if self.worker_axes else None
+
+        def body(st, bt2, eta):
+            take = lambda i: jax.tree_util.tree_map(lambda l: l[i], bt2)
+            st, l1 = self._one_window(st, take(0), eta,
+                                      communicate=communicate, ring=ring)
+            st, l2 = self._one_window(st, take(1), eta,
+                                      communicate=communicate, ring=ring)
+            return st, jnp.concatenate([l1, l2], axis=0)  # [2I, K_loc]
+
+        st_specs = rules.shardmap_state_specs(state, self.mesh, self.policy)
+        bt_specs = rules.shardmap_batch_specs(wb2, self.mesh, self.policy,
+                                              self.ccfg.n_workers,
+                                              worker_dim=2)
+        from jax.sharding import PartitionSpec as P
+        sm = _shard_map(body, mesh=self.mesh,
+                        in_specs=(st_specs, bt_specs, P()),
+                        out_specs=(st_specs, P(None, lead)),
+                        check_rep=False)
+        fn = jax.jit(sm, donate_argnums=self._donate)
+        self._fns[key] = fn
+        return fn
+
+    def window_pair_step(self, state, wb2, eta, *, communicate: bool = True):
+        return self.window_pair_fn(state, wb2, communicate=communicate)(
+            state, wb2, eta)
 
     # -- stage boundary ---------------------------------------------------
     def stage_fn(self, state, ab):

@@ -84,11 +84,20 @@ def local_step(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, batch, eta):
 
 
 def run_window(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, window_batch,
-               eta, *, wa=(), communicate: bool = True):
+               eta, *, wa=(), communicate: bool = True, ring=None):
     """I corrected local steps + the single combined all-reduce.
 
-    ``wa``: worker mesh axes ((),) for the vmap oracle.  Returns
-    (new_state, losses [I, K_loc]).
+    ``wa``: worker mesh axes ((),) for the vmap oracle.  ``ring``: a
+    ``bucketing.RingSpec`` to lower the combined averaging as chunked
+    ppermute rings instead of the blocking pmean (the overlapped path).
+    Returns (new_state, losses [I, K_loc]).
+
+    The raw-gradient accumulator feeding the variate refresh runs in fp32
+    regardless of ``param_dtype``: a bf16 accumulator loses a bit of the
+    window mean per doubling of I (the drift the bf16 regression test in
+    tests/test_codasca.py pins down), and the variates are exactly the
+    quantity that must stay an unbiased window mean.  The refresh casts
+    back to the wire dtype so c and c_k keep sharing one bucket layout.
     """
     from repro import flags
 
@@ -96,19 +105,26 @@ def run_window(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, window_batch,
         st, acc = carry
         st, losses, (gp, ga, gb, galpha) = local_step(mcfg, ccfg, st, b, eta)
         gd = {"params": gp, "a": ga, "b": gb, "alpha": galpha}
-        return (st, jax.tree_util.tree_map(jnp.add, acc, gd)), losses
+        acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), acc, gd)
+        return (st, acc), losses
 
-    acc0 = {"params": jax.tree_util.tree_map(jnp.zeros_like, state["params"]),
-            "a": jnp.zeros_like(state["a"]),
-            "b": jnp.zeros_like(state["b"]),
-            "alpha": jnp.zeros_like(state["alpha"])}
+    f32z = lambda l: jnp.zeros(l.shape, jnp.float32)
+    acc0 = {"params": jax.tree_util.tree_map(f32z, state["params"]),
+            "a": f32z(state["a"]),
+            "b": f32z(state["b"]),
+            "alpha": f32z(state["alpha"])}
     (state, acc), losses = jax.lax.scan(step, (state, acc0), window_batch,
                                         unroll=flags.scan_unroll())
     if communicate:
         I = jax.tree_util.tree_leaves(window_batch)[0].shape[0]
-        cv_new = jax.tree_util.tree_map(lambda g: g / I, acc)
+        wire = {"params": state["params"], "a": state["a"], "b": state["b"],
+                "alpha": state["alpha"]}
+        cv_new = jax.tree_util.tree_map(
+            lambda g, w: (g / I).astype(w.dtype), acc, wire)
         state = bucketing.average_and_refresh(state, cv_new, wa,
-                                              ccfg.avg_compress or None)
+                                              ccfg.avg_compress or None,
+                                              ring=ring)
     return state, losses
 
 

@@ -1,10 +1,16 @@
 """Public jit'd wrappers over the Pallas kernels with XLA fallbacks.
 
-``impl`` semantics everywhere:
-  * "auto"   — Pallas on TPU backends; pure-jnp fallback elsewhere (CPU dry
-               runs and tests never trace the Mosaic path).
+``impl`` semantics everywhere (one decision point: ``dispatch``):
+  * "auto"   — Pallas on TPU backends; pure-jnp reference on EVERY other
+               backend.  In particular a GPU backend gets the XLA-compiled
+               reference, never interpret-mode Pallas — interpret mode is a
+               correctness tool that runs orders of magnitude slower than
+               either a real kernel or the jnp fallback, and "auto" must
+               not pick it silently.
   * "ref"    — force the pure-jnp oracle.
-  * "pallas" — force the kernel (on CPU this uses interpret mode).
+  * "pallas" — force the kernel; off-TPU this is the explicit interpret-
+               mode override (tests/debugging only).
+Anything else raises — a typo'd ``impl`` must not silently fall back.
 
 These wrappers are also what the shard_map CoDA executor
 (core/coda_sharded.py) traces inside its manual-mesh region: "auto" never
@@ -31,6 +37,23 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def dispatch(impl: str) -> tuple:
+    """The one backend-dispatch decision: ``(use_pallas, interpret)``.
+
+    Covered by tests/test_kernels_dispatch.py for every (impl, backend)
+    pair — the invariants are that "auto" never returns interpret mode
+    (non-TPU backends go to kernels/ref.py instead) and that only the
+    explicit "pallas" override may interpret off-TPU.
+    """
+    if impl == "pallas":
+        return True, not _on_tpu()
+    if impl == "ref":
+        return False, False
+    if impl == "auto":
+        return _on_tpu(), False
+    raise ValueError(f"unknown impl {impl!r} (want auto | ref | pallas)")
+
+
 def attention(q, k, v, *, causal: bool = True, window=None, impl: str = "auto"):
     """GQA attention.  q: [B,S,H,hd], k/v: [B,Skv,KV,hd] -> [B,S,H,hd].
 
@@ -41,9 +64,10 @@ def attention(q, k, v, *, causal: bool = True, window=None, impl: str = "auto"):
     static_window = window is None or isinstance(window, int)
     if static_window and isinstance(window, int) and window < 0:
         window = None
-    if impl == "pallas" or (impl == "auto" and _on_tpu() and static_window):
+    use_pallas, interpret = dispatch(impl)
+    if use_pallas and (static_window or impl == "pallas"):
         return _flash(q, k, v, causal=causal, window=window,
-                      interpret=not _on_tpu())
+                      interpret=interpret)
     if k.shape[1] <= _FULL_ATTN_MAX_KV:
         return ref.attention_full(q, k, v, causal=causal, window=window)
     return ref.attention_chunked(q, k, v, causal=causal, window=window)
@@ -51,19 +75,20 @@ def attention(q, k, v, *, causal: bool = True, window=None, impl: str = "auto"):
 
 def auc_loss(h, y, a, b, alpha, p, *, impl: str = "auto"):
     """Fused loss + closed-form grads of the min-max AUC objective."""
-    if impl == "pallas" or (impl == "auto" and _on_tpu()):
-        return _auc_kernel(h, y, a, b, alpha, p, interpret=not _on_tpu())
+    use_pallas, interpret = dispatch(impl)
+    if use_pallas:
+        return _auc_kernel(h, y, a, b, alpha, p, interpret=interpret)
     return ref.auc_loss_ref(h, y, a, b, alpha, p)
 
 
 def prox_update_tree(v_tree, g_tree, v0_tree, eta, gamma, *, impl: str = "auto"):
     """Apply the fused proximal update leaf-wise over parameter pytrees."""
-    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
+    use_pallas, interpret = dispatch(impl)
 
     def upd(v, g, v0):
-        if use_kernel:
+        if use_pallas:
             flat = _prox_kernel(v.reshape(-1), g.reshape(-1), v0.reshape(-1),
-                                eta, gamma, interpret=not _on_tpu())
+                                eta, gamma, interpret=interpret)
             return flat.reshape(v.shape)
         return ref.prox_update_ref(v, g, v0, eta, gamma)
 

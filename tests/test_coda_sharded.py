@@ -182,6 +182,102 @@ def test_comm_accounting_matches_lowered_hlo():
     """)
 
 
+def test_mixed_dtype_window_payload_verifies_per_dtype_bucket():
+    """bf16 params + the fp32 a/b/α (and the model's fp32 score_head bias)
+    make the bucketed averaging emit one all-reduce PER DTYPE — two ops,
+    not one.  ``verify_window_payload`` must accept that as the documented
+    layout (one collective per dtype bucket, total == payload, per-dtype
+    bytes == ``window_payload_by_dtype``) instead of failing spuriously,
+    while still rejecting a forced count=1 and a wrong per-dtype split."""
+    _run("""
+    from repro.analysis import hlo as H
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    K, I, B = 8, 2, 8
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7,
+                           param_dtype=jnp.bfloat16)
+    st0 = coda.init_state(jax.random.PRNGKey(0), mcfg, ccfg)
+    dts = {l.dtype for l in jax.tree_util.tree_leaves(st0["params"])}
+    assert dts == {jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float32)}, dts
+    exe = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh,
+                             donate=False)
+    wb = {"features": jax.ShapeDtypeStruct((I, K, B, 16), jnp.float32),
+          "labels": jax.ShapeDtypeStruct((I, K, B), jnp.float32)}
+    sts = jax.eval_shape(lambda s: s, st0)
+    txt = exe.window_fn(sts, wb).lower(
+        sts, wb, jax.ShapeDtypeStruct((), jnp.float32)).compile().as_text()
+
+    payload = coda.window_payload_bytes(st0)
+    by_dtype = coda.window_payload_by_dtype(st0)
+    assert set(by_dtype) == {"bf16", "f32"}
+    ops = H.verify_window_payload(txt, payload, by_dtype=by_dtype)
+    assert len(ops) == 2, ops           # one all-reduce per dtype bucket
+    try:
+        H.verify_window_payload(txt, payload, count=1)
+        raise SystemExit("count=1 must fail on a mixed-dtype window")
+    except AssertionError:
+        pass
+    try:
+        H.verify_window_payload(txt, payload,
+                                by_dtype={"bf16": payload, "f32": 0})
+        raise SystemExit("wrong per-dtype split must fail")
+    except AssertionError:
+        pass
+    # the bf16 sharded window still matches the vmap oracle
+    key = jax.random.PRNGKey(1)
+    ky, kx = jax.random.split(key)
+    y = (jax.random.uniform(ky, (I, K, B)) < 0.7).astype(jnp.float32)
+    x = jax.random.normal(kx, (I, K, B, 16))
+    wbr = {"features": x, "labels": y}
+    st1, _ = exe.window_step(exe.place(st0), wbr, 0.1)
+    r1, _ = coda.window_step(mcfg, ccfg, st0, wbr, 0.1)
+    assert_trees_close(
+        {k: v.astype(jnp.float32) if hasattr(v, "astype") else v
+         for k, v in st1.items() if k in ("a", "b", "alpha")},
+        {k: v for k, v in r1.items() if k in ("a", "b", "alpha")},
+        1e-5, "bf16/scalars")
+    for (p, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(st1["params"])[0],
+            jax.tree_util.tree_flatten_with_path(r1["params"])[0]):
+        err = float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                    b.astype(jnp.float32))))
+        assert err < 2e-2, (jax.tree_util.keystr(p), err)  # bf16 tolerance
+    print("ALL OK")
+    """)
+
+
+def test_executor_instance_survives_changing_window_length():
+    """Regression for the ``_fns`` cache: its key is (treedef, ndim) only,
+    so two window lengths I₁ ≠ I₂ (same rank, different shape) hit the
+    SAME cache entry and rely on jit retracing under it.  One executor
+    instance driven at I=2 then I=5, with both ``communicate`` flags, must
+    keep matching the oracle — a stale lowered shape would either crash or
+    silently produce wrong results."""
+    _run("""
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    K = 8
+    ccfg, st0, _, _ = make_case(K, 2)
+    exe = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh,
+                             donate=False)
+    st = exe.place(st0)
+    rt = st0
+    for I, communicate in [(2, True), (5, True), (2, False), (5, False),
+                           (3, True)]:
+        _, _, wb, _ = make_case(K, I, seed=I)
+        st, losses = exe.window_step(st, wb, 0.1, communicate=communicate)
+        rt, rl = coda.window_step(mcfg, ccfg, rt, wb, 0.1,
+                                  communicate=communicate)
+        assert losses.shape == (I, K), (I, losses.shape)
+        assert_trees_close(st, rt, 1e-5, f"I={I} comm={communicate}")
+        np.testing.assert_allclose(np.asarray(jnp.mean(losses, axis=1)),
+                                   np.asarray(rl), atol=1e-5)
+        print("OK", I, communicate)
+    # the cache really is shared per (tag, treedef, ndim): 2 entries
+    # (communicate True/False), not one per window length
+    assert len(exe._fns) == 2, len(exe._fns)
+    print("ALL OK")
+    """)
+
+
 # --------------------------------------------------------------------------
 # int8 averaging properties (single-device oracle; no mesh needed)
 # --------------------------------------------------------------------------

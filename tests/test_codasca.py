@@ -26,9 +26,10 @@ from repro.data.synthetic import dirichlet_partition
 MCFG = mlp_config(n_features=16, d=32)
 
 
-def _case(K, I, B=8, seed=0, algorithm="codasca", compress=""):
+def _case(K, I, B=8, seed=0, algorithm="codasca", compress="",
+          param_dtype=jnp.float32):
     ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, algorithm=algorithm,
-                           avg_compress=compress)
+                           avg_compress=compress, param_dtype=param_dtype)
     key = jax.random.PRNGKey(seed)
     st0 = coda.init_state(key, MCFG, ccfg)
     ky, kx = jax.random.split(key)
@@ -190,6 +191,72 @@ def test_codasca_int8_shares_quantizer_between_c_and_ck():
         st_s, _ = codasca.window_step(MCFG, ccfg1, st_s, wb1, 0.1)
         st_c, _ = coda.window_step(MCFG, c0, st_c, wb1, 0.1)
     assert _max_err(_state_only(st_s), _state_only(st_c)) == 0.0
+
+
+def test_codasca_bf16_homogeneous_equals_coda():
+    """The α = ∞ equivalence must survive ``param_dtype=bfloat16``:
+    identical per-worker batches keep every variate pair bitwise equal, so
+    the correction stays an exact zero and bf16 CODASCA tracks bf16 CoDA
+    exactly over multiple windows — including through the fp32 variate
+    accumulator and its cast back to the bf16 wire dtype."""
+    K, I = 4, 4
+    ccfg, st_s, wb = _case(K, I, param_dtype=jnp.bfloat16)
+    c0 = coda.CoDAConfig(n_workers=K, p_pos=0.7, param_dtype=jnp.bfloat16)
+    wb_h = {k: jnp.broadcast_to(v[:, :1], v.shape).copy()
+            for k, v in wb.items()}
+    st_c = {k: st_s[k] for k in
+            ("params", "a", "b", "alpha", "ref_params", "ref_a", "ref_b")}
+    for _ in range(3):
+        st_s, _ = codasca.window_step(MCFG, ccfg, st_s, wb_h, 0.1)
+        st_c, _ = coda.window_step(MCFG, c0, st_c, wb_h, 0.1)
+    assert _max_err(_state_only(st_s), _state_only(st_c)) == 0.0
+    # the wire format stays the per-leaf param dtype (c and c_k must share
+    # the params' bucket layout; note the model keeps score_head.b fp32)
+    assert all(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda cv, p: cv.dtype == p.dtype,
+        st_s["cv_params"], st_s["params"])))
+    assert any(l.dtype == jnp.bfloat16 for l in
+               jax.tree_util.tree_leaves(st_s["cv_params"]))
+
+
+def test_codasca_bf16_variate_refresh_accumulates_fp32(monkeypatch):
+    """THE bf16 accumulator regression: the window-mean variate refresh must
+    be the fp32-accumulated mean of the raw gradients, cast to the wire
+    dtype once at the refresh.  Gradients are stubbed to the adversarial
+    pattern [1, ε, ε, ...] with ε = 2⁻⁹ — below the bf16 ulp of the
+    running sum, so a bf16 accumulator (the old ``zeros_like(params)``
+    layout) silently drops every ε and lands on mean 1/I instead of
+    (1 + (I−1)ε)/I.  The fp32 path must match the exact binary arithmetic
+    bit for bit."""
+    K, I, B, eps = 4, 32, 8, 2.0 ** -9
+    ccfg, st0, wb = _case(K, I, B=B, param_dtype=jnp.bfloat16, seed=3)
+    # encode the per-step gradient value in the labels: g_0 = 1, g_t = ε
+    g_t = np.full((I,), eps, np.float32)
+    g_t[0] = 1.0
+    wb["labels"] = jnp.broadcast_to(
+        jnp.asarray(g_t)[:, None, None], (I, K, B)).copy()
+
+    def stub_grad_step(mcfg, c, state, batch):
+        val = batch["labels"][0, 0]        # this step's scripted gradient
+        gp = jax.tree_util.tree_map(
+            lambda p: jnp.full(p.shape, val).astype(p.dtype),
+            state["params"])
+        gk = jnp.full((state["a"].shape[0],), val)
+        return jnp.zeros((state["a"].shape[0],)), (gp, gk, gk, gk)
+
+    monkeypatch.setattr(coda, "grad_step", stub_grad_step)
+    s1, _ = codasca.window_step(MCFG, ccfg, st0, wb, 0.1)
+
+    want = np.float32(1.0 + (I - 1) * eps) / np.float32(I)  # exact in fp32
+    for leaf in jax.tree_util.tree_leaves(s1["cv_params"]):
+        got = np.unique(np.asarray(leaf.astype(jnp.float32)))
+        assert got.shape == (1,), got
+        assert got[0] == np.float32(jnp.bfloat16(want)) if \
+            leaf.dtype == jnp.bfloat16 else got[0] == want, \
+            (leaf.dtype, got[0], want)
+    # the broken bf16 accumulator would have produced exactly 1/I
+    assert float(jnp.bfloat16(want)) != 1.0 / I
+    assert float(s1["cv_a"][0]) == want                    # fp32 lane
 
 
 def test_config_rejects_unknown_algorithm():

@@ -1,0 +1,299 @@
+"""Overlapped window averaging (the PR 3 tentpole): chunked ppermute-ring
+reduce-scatter/all-gather hidden under next-window compute.
+
+Covers the acceptance invariants: the fused window pair's compiled HLO is
+C collective-permute chains per ring interleaved with the second window's
+dot compute — NO blocking all-reduce — and the overlapped path's final
+state equals the blocking path's to fp32 tolerance for both CoDA and
+CODASCA (the ring mean is the same mean, just scheduled differently).
+Also the fit() pair-feeding driver (odd trailing window, exposed vs
+overlapped byte accounting) and the config-level guards.
+
+Mesh-parallel checks run in subprocesses because
+``--xla_force_host_platform_device_count`` must be set before jax
+initialises its backend (same pattern as tests/test_coda_sharded.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bucketing, coda
+
+_PRELUDE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.analysis import hlo as H
+    from repro.configs.base import mlp_config
+    from repro.core import bucketing, coda, codasca
+
+    mcfg = mlp_config(n_features=16, d=32)
+
+    def make_case(K, I, B=8, seed=0, algorithm="coda", overlap=0):
+        ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, algorithm=algorithm,
+                               overlap_chunks=overlap)
+        key = jax.random.PRNGKey(seed)
+        st0 = coda.init_state(key, mcfg, ccfg)
+        ky, kx = jax.random.split(key)
+        y = (jax.random.uniform(ky, (I, K, B)) < 0.7).astype(jnp.float32)
+        x = jax.random.normal(kx, (I, K, B, 16)) + 0.3 * (y[..., None] * 2 - 1)
+        return ccfg, st0, {"features": x, "labels": y}
+
+    def as_pair(wb, I):
+        return jax.tree_util.tree_map(
+            lambda l: l.reshape((2, I) + l.shape[1:]), wb)
+
+    def max_err(a, b):
+        return max(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+            lambda x, y: float(jnp.max(jnp.abs(x - y))), a, b)))
+
+    def pair_meta(st0, K, chunks, algorithm):
+        # (hops, chains) for the two rings of a fused window pair
+        mats, _, _, _ = bucketing._state_mats(st0)
+        if algorithm == "codasca":
+            mats = mats * 2      # the variates ride the same dtype buckets
+        ring = bucketing.RingSpec("data", K, chunks)
+        sizes = bucketing.bucket_sizes(mats)
+        return (2 * bucketing.ring_hop_count(sizes, ring),
+                2 * bucketing.ring_chain_count(sizes, ring))
+""")
+
+
+def _run(script: str, timeout=900):
+    r = subprocess.run([sys.executable, "-c", _PRELUDE + textwrap.dedent(script)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env={**os.environ, "PYTHONPATH": "src"},
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "ALL OK" in r.stdout, r.stdout[-2000:]
+
+
+# --------------------------------------------------------------------------
+# equivalence: the ring mean is the same mean
+# --------------------------------------------------------------------------
+def test_overlapped_pair_matches_blocking_path():
+    """The fused overlapped pair must equal two blocking window steps (and
+    hence the vmap oracle, which the blocking path is already tested
+    against) to fp32 tolerance — CoDA and CODASCA, C ∈ {1, 4}, and a
+    second pair so CODASCA's variates are live."""
+    _run("""
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    K, I = 8, 3
+    for algorithm in ("coda", "codasca"):
+        for C in (1, 4):
+            ccfg, st0, wb = make_case(K, 2 * I, algorithm=algorithm,
+                                      overlap=C)
+            base = coda.CoDAConfig(n_workers=K, p_pos=0.7,
+                                   algorithm=algorithm)
+            exe_on = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh,
+                                        donate=False)
+            exe_off = coda.make_executor(mcfg, base, "shard_map", mesh=mesh,
+                                         donate=False)
+            assert exe_on.overlap_pairs and not exe_off.overlap_pairs
+            wb2 = as_pair(wb, I)
+            wa = jax.tree_util.tree_map(lambda l: l[0], wb2)
+            wbb = jax.tree_util.tree_map(lambda l: l[1], wb2)
+            s_on, s_off = exe_on.place(st0), exe_off.place(st0)
+            for _ in range(2):
+                s_on, losses = exe_on.window_pair_step(s_on, wb2, 0.1)
+                s_off, l1 = exe_off.window_step(s_off, wa, 0.1)
+                s_off, l2 = exe_off.window_step(s_off, wbb, 0.1)
+            assert losses.shape == (2 * I, K), losses.shape
+            e = max_err(s_on, s_off)
+            assert e < 1e-5, (algorithm, C, e)
+            le = float(jnp.max(jnp.abs(
+                losses - jnp.concatenate([l1, l2], axis=0))))
+            assert le < 1e-5, (algorithm, C, le)
+            print("OK", algorithm, "C =", C, "err", e)
+    print("ALL OK")
+    """)
+
+
+# --------------------------------------------------------------------------
+# the compiled schedule: permute chains interleaved with compute
+# --------------------------------------------------------------------------
+def test_overlapped_hlo_is_chunked_permute_chains():
+    """THE overlap acceptance invariant: the compiled window pair contains
+    exactly C · 2·(R−1) collective-permutes per ring (2 rings/pair), zero
+    all-reduce / all-gather of any kind, and the hops form exactly
+    C chains/ring of INDEPENDENT dataflow (the property an async scheduler
+    needs to hide late chunks under compute consuming early chunks — a
+    de-chunked or cross-chunk-serialized lowering fails it), with the
+    second window's dot compute fused between the two rings.  With
+    communicate=False the pair is collective-silent."""
+    _run("""
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    K, B, C = 8, 8, 4
+    for algorithm in ("coda", "codasca"):
+        for I in (1, 4):
+            ccfg, st0, _ = make_case(K, 2, algorithm=algorithm, overlap=C)
+            exe = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh,
+                                     donate=False)
+            wb2 = {"features": jax.ShapeDtypeStruct((2, I, K, B, 16),
+                                                    jnp.float32),
+                   "labels": jax.ShapeDtypeStruct((2, I, K, B), jnp.float32)}
+            sts = jax.eval_shape(lambda s: s, st0)
+            txt = exe.window_pair_fn(sts, wb2).lower(
+                sts, wb2,
+                jax.ShapeDtypeStruct((), jnp.float32)).compile().as_text()
+            hops, chains = pair_meta(st0, K, C, algorithm)
+            # the chain-independence analysis needs the local steps to
+            # lower as a while loop (I >= 2); an I=1 window inlines its
+            # compute and legitimately chains the rings together
+            ops = H.verify_overlapped_window(
+                txt, n_hops=hops, n_chains=chains if I > 1 else None)
+            assert all(o["op"] == "collective-permute" for o in ops)
+            if I > 1:
+                # the analysis really counts chunk chains: demanding the
+                # de-chunked count must fail for C > 1 chunks
+                try:
+                    H.verify_overlapped_window(txt, n_hops=hops, n_chains=2)
+                    raise SystemExit("chain check accepted wrong count")
+                except AssertionError:
+                    pass
+            silent = exe.window_pair_fn(sts, wb2, communicate=False).lower(
+                sts, wb2,
+                jax.ShapeDtypeStruct((), jnp.float32)).compile().as_text()
+            assert H.collective_ops(silent) == []
+            print("OK", algorithm, "I =", I, "hops", hops)
+    print("ALL OK")
+    """)
+
+
+# --------------------------------------------------------------------------
+# fit(): pair feeding + exposed/overlapped accounting
+# --------------------------------------------------------------------------
+def test_fit_overlap_pairs_and_accounting():
+    """fit() with an overlapping executor must feed window pairs, fall back
+    to a single blocking window when a stage's window count is odd, and
+    split the per-worker bytes into overlapped (first-of-pair) vs exposed
+    (second-of-pair + trailing + stage-end α scalars) such that the total
+    equals the classical comm_bytes accounting."""
+    _run("""
+    from repro.core import schedules
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    K, B = 8, 8
+    ccfg, st0, _ = make_case(K, 2, overlap=2)
+    exe = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh)
+    key = jax.random.PRNGKey(0)
+
+    def sample_window(k, i):
+        ky, kx = jax.random.split(k)
+        y = (jax.random.uniform(ky, (i, K, B)) < 0.7).astype(jnp.float32)
+        x = jax.random.normal(kx, (i, K, B, 16))
+        return {"features": x, "labels": y}
+
+    def sample_ab(k, m):
+        wb = sample_window(k, 1)
+        return {kk: v[0] for kk, v in wb.items()}
+
+    # T0=12, I0=4 -> stage 1: T=12, 3 windows (1 pair + 1 trailing);
+    # stage 2: T=36, 9 windows (4 pairs + 1 trailing)
+    sched = schedules.ScheduleConfig(n_workers=K, eta0=0.5, T0=12, I0=4)
+    evals = []
+    res = coda.fit(key, mcfg, ccfg, sched, 2, sample_window, sample_ab,
+                   eval_every=3, eval_fn=lambda s: evals.append(1) or 0.0,
+                   executor=exe)
+    # per-window cadence survives pair feeding: windows 3 | 3, 6, 9 hit
+    # (a pair whose EITHER half lands on the cadence evals once)
+    assert len(evals) == 4, len(evals)
+    sl = schedules.stages(sched, 2)
+    assert res.comm_rounds == coda.comm_rounds(sl)
+    mb = coda.model_bytes(res.state)
+    # 5 pairs -> 5 overlapped rounds; 5 pair-seconds + 2 trailing exposed
+    # window rounds + 2 stage-end f32 alphas
+    assert res.overlapped_bytes == 5 * mb, res.overlapped_bytes
+    assert res.exposed_bytes == 7 * mb + 2 * 4, res.exposed_bytes
+    assert res.exposed_bytes + res.overlapped_bytes == \
+        coda.comm_bytes(sl, res.state)
+    assert all(np.isfinite(h[2]) for h in res.history)
+    # non-overlapping executor: everything exposed
+    base = coda.CoDAConfig(n_workers=K, p_pos=0.7)
+    res0 = coda.fit(key, mcfg, base, sched, 2, sample_window, sample_ab,
+                    executor="vmap")
+    assert res0.overlapped_bytes == 0
+    assert res0.exposed_bytes == coda.comm_bytes(sl, res0.state)
+    print("ALL OK")
+    """)
+
+
+def test_overlap_rejects_multi_axis_worker_partition():
+    """A ppermute ring needs one totally-ordered mesh axis: the replica
+    policy on a multi-pod mesh lays workers over (pod, data) and must be
+    rejected loudly at executor construction."""
+    _run("""
+    mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    ccfg, st0, _ = make_case(4, 2, overlap=2)
+    try:
+        coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh3,
+                           policy="replica")
+        raise SystemExit("expected ValueError for 2-axis worker partition")
+    except ValueError as e:
+        assert "ONE mesh axis" in str(e), e
+    # fsdp lays workers over (pod,) only: a valid single-axis ring
+    ccfg2 = coda.CoDAConfig(n_workers=2, p_pos=0.7, overlap_chunks=2)
+    exe = coda.make_executor(mcfg, ccfg2, "shard_map", mesh=mesh3,
+                             policy="fsdp")
+    assert exe.overlap_pairs
+    print("ALL OK")
+    """)
+
+
+# --------------------------------------------------------------------------
+# in-process: config guards + ring chunk math (no mesh needed)
+# --------------------------------------------------------------------------
+def test_config_rejects_overlap_with_int8():
+    with pytest.raises(ValueError):
+        coda.CoDAConfig(n_workers=4, overlap_chunks=2, avg_compress="int8")
+    with pytest.raises(ValueError):
+        coda.CoDAConfig(n_workers=4, overlap_chunks=-1)
+
+
+def test_ring_chunk_and_hop_math():
+    ring = bucketing.RingSpec("data", 8, 4)
+    # big bucket: all 4 chunks; tiny bucket (< R elems/chunk): 1 chain
+    assert bucketing._n_chunks(4096, ring) == 4
+    assert bucketing._n_chunks(3, ring) == 1
+    assert bucketing.ring_hop_count({jnp.dtype("float32"): 4096}, ring) == \
+        4 * 2 * 7
+    assert bucketing.ring_hop_count(
+        {jnp.dtype("float32"): 4096, jnp.dtype("bfloat16"): 3}, ring) == \
+        (4 + 1) * 2 * 7
+    assert bucketing.ring_chain_count(
+        {jnp.dtype("float32"): 4096, jnp.dtype("bfloat16"): 3}, ring) == 5
+    # one participant: no wire, no hops
+    assert bucketing.ring_hop_count(
+        {jnp.dtype("float32"): 4096}, bucketing.RingSpec("data", 1, 4)) == 0
+    with pytest.raises(ValueError):
+        bucketing.RingSpec("data", 0, 4)
+    # near-even chunk split: never an empty trailing chunk (a ceil split
+    # would produce 3,3,3,0 here and XLA could DCE the empty chain)
+    assert bucketing._chunk_offsets(9, 4) == [0, 3, 5, 7, 9]
+    assert bucketing._chunk_offsets(8, 4) == [0, 2, 4, 6, 8]
+    assert bucketing._chunk_offsets(3, 1) == [0, 3]
+
+
+def test_window_payload_by_dtype():
+    """The per-dtype payload helper must split params by their leaf dtypes
+    (+ the fp32 a/b/α lane) and double under CODASCA."""
+    from repro.configs.base import mlp_config
+    mcfg = mlp_config(n_features=16, d=32)
+    ccfg = coda.CoDAConfig(n_workers=4, p_pos=0.7,
+                           param_dtype=jnp.bfloat16)
+    st = coda.init_state(jax.random.PRNGKey(0), mcfg, ccfg)
+    by = coda.window_payload_by_dtype(st)
+    assert set(by) == {"bf16", "f32"}
+    assert sum(by.values()) == coda.window_payload_bytes(st)
+    cc = coda.CoDAConfig(n_workers=4, p_pos=0.7, algorithm="codasca",
+                         param_dtype=jnp.bfloat16)
+    st2 = coda.init_state(jax.random.PRNGKey(0), mcfg, cc)
+    by2 = coda.window_payload_by_dtype(st2)
+    assert by2["bf16"] == 2 * by["bf16"]
+    with pytest.raises(ValueError):
+        coda.window_payload_by_dtype(st, "int8")
