@@ -20,6 +20,11 @@ deliverable.  Prints ``name,us_per_call,derived`` CSV rows.
   hetero_window — heterogeneous shards: CoDA vs CODASCA final AUC at EQUAL
                   comm rounds for Dirichlet α ∈ {0.1, 1, ∞} × I ∈ {4,16,64},
                   plus the per-round payload each algorithm ships
+  moe_dispatch  — sorted dropless MoE dispatch vs padded capacity C=T on
+                  the eval hot path: wall-clock + dispatch/peak buffer
+                  bytes at bitwise-equal routing across dbrx/arctic
+                  shapes, plus the analytic buffer ratio for the REAL
+                  configs (the E/(2·top_k) acceptance bound)
   roofline      — per (arch × shape × mesh) three-term roofline from the
                   dry-run artifacts (run repro.launch.dryrun first)
 
@@ -440,6 +445,90 @@ def bench_window_step(fast=False, smoke=False):
              f"us_per_iter={us / I:.0f}")
 
 
+def bench_moe_dispatch(fast=False, smoke=False):
+    """The sorted-dispatch tentpole's measurement: one MoE block forward at
+    eval under ``dispatch="sorted"`` (argsort + ragged grouped GEMM over a
+    [T·k, d] buffer) vs ``dispatch="capacity"`` (padded scatter through the
+    static dropless [E, C=T, d] buffer) — wall-clock, analytic dispatch
+    buffer bytes, and the compiled module's peak temp bytes, with matching
+    outputs (routing is bitwise-shared by construction — both modes consume
+    the same ``moe.route`` output, so output equality is the evidence the
+    dispatch plumbing preserves the decisions).  Smoke-config
+    shapes run live on CPU; the real dbrx/arctic configs get analytic rows
+    (the acceptance bound: sorted ≥ E/(2·top_k)× smaller at eval).
+
+    Wall-clock caveat, same spirit as overlap_window's: the smoke configs
+    keep E = 4 experts, where capacity C=T wastes only E/top_k = 2× the
+    FLOPs and the sort/scatter overhead can win on tiny CPU shapes — the
+    ``wide-32e`` row (E = 32, the regime the real 128-expert arctic is in)
+    is where the crossover shows even on CPU; the buffer-bytes columns are
+    shape-exact everywhere."""
+    import dataclasses
+
+    from repro.configs import SHAPES, get_config, get_smoke_config
+    from repro.configs.base import ModelConfig, MoEConfig
+    from repro.models import moe as MOE
+    key = jax.random.PRNGKey(0)
+    Ts = [256, 1024] if (fast or smoke) else [512, 4096, 16384]
+    wide = ModelConfig(name="wide-32e", family="moe", n_layers=1,
+                       d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+                       vocab_size=64, moe=MoEConfig(n_experts=32, top_k=2))
+    for arch, cfg in (("dbrx-132b", get_smoke_config("dbrx-132b")),
+                      ("arctic-480b", get_smoke_config("arctic-480b")),
+                      ("wide-32e", wide)):
+        p = MOE.init_moe(key, cfg)
+        for T in Ts:
+            x = jax.random.normal(key, (1, T, cfg.d_model), jnp.float32) * 0.5
+            tag = f"moe_dispatch/{arch}/T={T}"
+            outs, rec = {}, {}
+            for mode in ("sorted", "capacity"):
+                c = dataclasses.replace(
+                    cfg, moe=dataclasses.replace(cfg.moe, dispatch=mode))
+                f = jax.jit(lambda p, x, c=c: MOE.apply_moe(c, p, x)[0])
+                us = _time(f, p, x, n=3 if smoke else 10)
+                outs[mode] = f(p, x)
+                buf = MOE.dispatch_buffer_bytes(c, T, mode=mode)
+                mem = f.lower(p, x).compile().memory_analysis()
+                peak = getattr(mem, "temp_size_in_bytes", None)
+                emit(f"{tag}/{mode}_us", us,
+                     f"dispatch_buffer_bytes={buf};peak_temp_bytes={peak}")
+                rec[mode] = {"us": us, "dispatch_buffer_bytes": buf,
+                             "peak_temp_bytes": peak}
+            # acceptance: both modes consume the same moe.route output
+            # (bitwise-shared by construction), so matching outputs are the
+            # evidence the dispatch plumbing preserves the decisions
+            err = float(jnp.max(jnp.abs(outs["sorted"] - outs["capacity"])))
+            assert err < 1e-4, (tag, err)
+            ratio = (rec["capacity"]["dispatch_buffer_bytes"]
+                     / rec["sorted"]["dispatch_buffer_bytes"])
+            emit(f"{tag}/buffer_ratio", 0.0,
+                 f"capacity/sorted={ratio:.1f};max_out_err={err:.1e}")
+            emit_comm(tag, {"arch": arch, "T": T,
+                            "routing_shared_by_construction": True,
+                            "max_out_err": err, **rec})
+
+    # analytic accounting for the REAL configs at the eval shapes — the
+    # [E, T, d] vs [T·k, d] gap the smoke configs (E = 4) understate
+    for arch in ("dbrx-132b", "arctic-480b"):
+        rcfg = get_config(arch)
+        E, k = rcfg.moe.n_experts, rcfg.moe.top_k
+        for shape in ("prefill_32k", "decode_32k"):
+            T = MOE.tokens_per_forward(SHAPES[shape])
+            s = MOE.dispatch_buffer_bytes(rcfg, T, mode="sorted",
+                                          dtype=jnp.bfloat16)
+            c = MOE.dispatch_buffer_bytes(rcfg, T, mode="capacity",
+                                          dtype=jnp.bfloat16)
+            assert c / s >= E / (2 * k), (arch, shape, c / s)
+            emit(f"moe_dispatch/real/{arch}/{shape}/buffer_ratio", 0.0,
+                 f"capacity_bytes={c};sorted_bytes={s};ratio={c / s:.0f}x"
+                 f";bound_E_over_2k={E / (2 * k):.0f}x")
+            emit_comm(f"moe_dispatch/real/{arch}/{shape}", {
+                "arch": arch, "shape": shape, "tokens": T,
+                "capacity_bytes": c, "sorted_bytes": s, "ratio": c / s,
+                "acceptance_bound": E / (2 * k),
+            })
+
+
 # --------------------------------------------------------------------------
 # roofline (deliverable g — reads the dry-run artifacts)
 # --------------------------------------------------------------------------
@@ -486,6 +575,7 @@ BENCHES = {
     "sharded_window": bench_sharded_window,
     "overlap_window": bench_overlap_window,
     "hetero_window": bench_hetero_window,
+    "moe_dispatch": bench_moe_dispatch,
     "roofline": bench_roofline,
 }
 

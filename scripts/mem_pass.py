@@ -2,6 +2,13 @@
 configuration — unrolling distorts XLA's live-range analysis) and update the
 artifact's ``memory_rolled`` field with that module's memory_analysis().
 
+For MoE archs every EVAL artifact (prefill/decode shapes — training always
+uses capacity dispatch, so there is no before/after there) additionally
+gets a ``moe_dispatch_bytes`` record: the per-layer dispatch-buffer bytes
+the pass's token count implies under the padded capacity dispatch (before:
+[E, C=T, d]) vs the sorted dropless dispatch (after: [T·k, d]) — see
+models/moe.py and ``benchmarks/run.py --only moe_dispatch``.
+
   PYTHONPATH=src python scripts/mem_pass.py [--arch X --shape Y]
 """
 import argparse
@@ -12,6 +19,7 @@ import sys
 
 HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ART = os.path.join(HERE, "benchmarks", "artifacts", "dryrun")
+sys.path.insert(0, os.path.join(HERE, "src"))
 
 RUNNER = """
 import os, json, sys
@@ -40,6 +48,26 @@ print("MEMJSON " + json.dumps(rec))
 """
 
 
+def moe_dispatch_record(arch: str, shape_name: str):
+    """Analytic before/after dispatch-buffer bytes for one (arch, shape).
+    Returns None for non-MoE archs and for train shapes (training always
+    uses capacity dispatch — the sorted path is eval/decode-only, so a
+    before/after there would be fiction)."""
+    from repro.configs import SHAPES, get_config
+    from repro.models import moe
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    if cfg.moe is None or spec.kind == "train":
+        return None
+    T = moe.tokens_per_forward(spec)
+    cap = moe.dispatch_buffer_bytes(cfg, T, mode="capacity", dtype="bfloat16")
+    srt = moe.dispatch_buffer_bytes(cfg, T, mode="sorted", dtype="bfloat16")
+    return {"tokens": T,
+            "capacity_bytes": cap,       # before: [E, C=T, d] per layer
+            "sorted_bytes": srt,         # after:  [T·k, d] per layer
+            "ratio": cap / srt}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -50,15 +78,24 @@ def main():
         if not f.endswith("__pod1.json"):
             continue
         rec = json.load(open(os.path.join(ART, f)))
-        if rec.get("status") != "ok" or "memory_rolled" in rec:
-            continue
-        # decode lowerings have no scans — rolled == unrolled already
-        if rec["shape"] in ("decode_32k", "long_500k") and not args.shape:
+        if rec.get("status") != "ok":
             continue
         arch, shape = rec["arch"], rec["shape"]
         if args.arch and arch != args.arch:
             continue
         if args.shape and shape != args.shape:
+            continue
+        if "moe_dispatch_bytes" not in rec:
+            md = moe_dispatch_record(arch, shape)
+            if md is not None:
+                rec["moe_dispatch_bytes"] = md
+                json.dump(rec, open(os.path.join(ART, f), "w"), indent=1)
+                print(f"{f}: moe dispatch buffer {md['ratio']:.0f}x "
+                      f"(capacity/sorted)", flush=True)
+        if "memory_rolled" in rec:
+            continue
+        # decode lowerings have no scans — rolled == unrolled already
+        if shape in ("decode_32k", "long_500k") and not args.shape:
             continue
         r = subprocess.run([sys.executable, "-c", RUNNER, arch, shape],
                            env=env, cwd=HERE, capture_output=True, text=True,

@@ -18,7 +18,18 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
-    """Mixture-of-experts block configuration."""
+    """Mixture-of-experts block configuration.
+
+    ``dispatch`` selects the EVAL/DECODE dispatch implementation (training
+    always uses capacity-factor dispatch — dropping over-capacity tokens is
+    the load-shedding regularizer):
+      * "sorted"   — dropless sort-based dispatch: [T·k, d] buffer + ragged
+                     grouped GEMM over expert segments (models/moe.py).
+      * "capacity" — the padded scatter dispatch at the static dropless
+                     bound C = T: an [E, T, d] buffer, ~E/top_k-fold
+                     oversized in expectation (kept for A/B and as the
+                     oracle the sorted path is tested against).
+    """
 
     n_experts: int
     top_k: int
@@ -26,6 +37,12 @@ class MoEConfig:
     # Arctic keeps a dense (always-on) residual MLP next to the experts.
     dense_residual: bool = False
     dense_d_ff: int = 0
+    dispatch: str = "sorted"
+
+    def __post_init__(self):
+        if self.dispatch not in ("sorted", "capacity"):
+            raise ValueError(
+                f"unknown moe dispatch {self.dispatch!r} (want sorted | capacity)")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,86 @@
+"""Grouped expert GEMM Pallas kernel for sort-based dropless MoE dispatch.
+
+``grouped_matmul(x, w, group_sizes)`` computes ``out[i] = x[i] @ w[g(i)]``
+for rows already sorted by expert id — the ragged core of the sorted
+dispatch path (models/moe.py) — without materializing the [E, C, d]
+capacity buffer.
+
+Kernel strategy (MegaBlocks-style tile alignment + scalar prefetch):
+
+  1. Each expert's row segment is padded up to a multiple of the row tile
+     ``block_m`` inside a scratch layout ``xp`` so that every (bm, K) tile
+     belongs to exactly ONE expert (``kernels/ref.py::grouped_layout``,
+     shared with the jnp reference).  The static bound on the padded row
+     count is ``round_up(N, bm) + min(E, N)·bm`` — at most one tile of
+     slack per non-empty expert, negligible next to the E/top_k-fold
+     padding of the capacity buffer.
+  2. A per-tile expert-id table ``tile_eid [n_tiles]`` rides as a
+     scalar-prefetch operand, so the WEIGHT BlockSpec's index map can
+     select each tile's expert block ``w[tile_eid[t]]`` — the grid stays
+     static while the weight DMA pattern follows the routing.
+  3. The grid is (row tiles × ff tiles); each program issues one
+     [bm, K] @ [K, bn] MXU contraction with fp32 accumulation, mirroring
+     auc_loss.py's blocked one-pass structure.
+
+Dead tiles (the alignment slack) multiply zero rows and are discarded by
+the gather back to the dense [N, F] result.  Like every kernel here it is
+reached only through ``kernels/ops.py::dispatch`` — "auto" uses it on TPU
+and the blocked-scan jnp reference (``ref.grouped_matmul_ref``) everywhere
+else; off-TPU interpret mode is the explicit ``impl="pallas"`` escape
+hatch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import _round_up, grouped_layout
+
+
+def _kernel(tile_eid_ref, x_ref, w_ref, out_ref):
+    del tile_eid_ref  # consumed by the weight index map
+    out_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "interpret"))
+def grouped_matmul(x, w, group_sizes, *, block_m: int = 128,
+                   block_n: int = 128, interpret: bool = False):
+    """out[i] = x[i] @ w[g(i)]; x: [N, K] sorted by group, w: [E, K, F],
+    group_sizes: [E] with sum == N.  See ref.grouped_matmul_ref."""
+    N, K = x.shape
+    E, Kw, F = w.shape
+    assert K == Kw, (K, Kw)
+    bm = min(block_m, _round_up(max(N, 1), 8))
+    bn = min(block_n, _round_up(F, 128))
+    Kp = _round_up(K, 128)
+    Fp = _round_up(F, bn)
+
+    dst, tile_eid, Np = grouped_layout(group_sizes, N, bm)
+    xp = jnp.zeros((Np, Kp), x.dtype).at[dst].set(
+        jnp.pad(x, ((0, 0), (0, Kp - K))))
+    wp = jnp.pad(w, ((0, 0), (0, Kp - K), (0, Fp - F)))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(Np // bm, Fp // bn),
+            in_specs=[
+                pl.BlockSpec((bm, Kp), lambda t, f, eid: (t, 0)),
+                pl.BlockSpec((1, Kp, bn), lambda t, f, eid: (eid[t], 0, f)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda t, f, eid: (t, f)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Np, Fp), x.dtype),
+        interpret=interpret,
+    )(tile_eid, xp, wp)
+    return out[dst, :F]

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.auc_loss import auc_loss as _auc_kernel
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.moe_dispatch import grouped_matmul as _grouped_kernel
 from repro.kernels.prox_update import prox_update as _prox_kernel
 
 # Threshold above which the jnp fallback switches from materialized scores to
@@ -79,6 +80,22 @@ def auc_loss(h, y, a, b, alpha, p, *, impl: str = "auto"):
     if use_pallas:
         return _auc_kernel(h, y, a, b, alpha, p, interpret=interpret)
     return ref.auc_loss_ref(h, y, a, b, alpha, p)
+
+
+def grouped_matmul(x, w, group_sizes, *, impl: str = "auto"):
+    """Ragged grouped GEMM: out[i] = x[i] @ w[g(i)] for rows sorted by
+    group.  x: [N, K]; w: [E, K, F]; group_sizes: [E] (sum == N).
+
+    The compute core of the sorted dropless MoE dispatch (models/moe.py):
+    "auto" runs the tile-aligned Pallas kernel on TPU and the blocked-scan
+    jnp reference everywhere else — never interpret-mode Pallas (and never
+    ``lax.ragged_dot``, whose only jax-0.4.x lowering densifies to
+    [E, N, K]).
+    """
+    use_pallas, interpret = dispatch(impl)
+    if use_pallas:
+        return _grouped_kernel(x, w, group_sizes, interpret=interpret)
+    return ref.grouped_matmul_ref(x, w, group_sizes)
 
 
 def prox_update_tree(v_tree, g_tree, v0_tree, eta, gamma, *, impl: str = "auto"):

@@ -106,6 +106,74 @@ def auc_loss_ref(h, y, a, b, alpha, p):
 
 
 # --------------------------------------------------------------------------
+# ragged grouped GEMM (sort-based dropless MoE dispatch)
+# --------------------------------------------------------------------------
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def grouped_layout(group_sizes, n_rows: int, block_rows: int):
+    """Row mapping for a tile-aligned grouped layout.
+
+    Pads each group's row segment up to a multiple of ``block_rows`` so
+    every row tile belongs to exactly ONE group.  Returns
+    ``(dst [N], tile_gid [n_tiles], n_padded)``: sorted row i lands at
+    ``dst[i]`` in the padded buffer and tile t is owned by group
+    ``tile_gid[t]``.  ``n_padded`` is the static bound
+    ``round_up(N, bm) + min(E, N)·bm`` — at most one tile of slack per
+    NON-EMPTY group (at most min(E, N) of those), negligible next to the
+    capacity path's E/top_k-fold padding.  Shared by the jnp reference
+    below and the Pallas kernel (kernels/moe_dispatch.py).
+    """
+    E = group_sizes.shape[0]
+    gs = group_sizes.astype(jnp.int32)
+    inc = jnp.cumsum(gs)
+    exc = inc - gs
+    pc = ((gs + block_rows - 1) // block_rows) * block_rows
+    pinc = jnp.cumsum(pc)
+    pexc = pinc - pc
+    rows = jnp.arange(n_rows, dtype=jnp.int32)
+    g_row = jnp.clip(jnp.searchsorted(inc, rows, side="right"), 0, E - 1)
+    dst = pexc[g_row] + (rows - exc[g_row])
+    n_padded = (_round_up(max(n_rows, 1), block_rows)
+                + min(E, max(n_rows, 1)) * block_rows)
+    tile_starts = jnp.arange(n_padded // block_rows,
+                             dtype=jnp.int32) * block_rows
+    tile_gid = jnp.clip(jnp.searchsorted(pinc, tile_starts, side="right"),
+                        0, E - 1).astype(jnp.int32)
+    return dst, tile_gid, n_padded
+
+
+def grouped_matmul_ref(x, w, group_sizes, *, block_rows: int = 128):
+    """out[i] = x[i] @ w[g(i)] for rows of ``x`` sorted by group id.
+
+    x: [N, K] with the first ``group_sizes[0]`` rows belonging to group 0,
+    the next ``group_sizes[1]`` to group 1, ...; w: [E, K, F];
+    group_sizes: [E] int with ``sum == N``.  Returns [N, F].
+
+    NOT ``lax.ragged_dot``: on jax 0.4.x that primitive's only lowering is
+    ragged_to_dense — it materializes a masked [E, N, K] operand, i.e.
+    exactly the E-fold blow-up the sorted dispatch exists to remove.  This
+    oracle instead scans over tile-aligned row blocks (``grouped_layout``),
+    dynamically gathering ONE group's [K, F] weight block per tile:
+    O(N·K·F) FLOPs, O(N·K + K·F) live memory, differentiable w.r.t. ``x``
+    and ``w``, and vmappable with shared or stacked weights.
+    """
+    N, K = x.shape
+    E, _, F = w.shape
+    bm = min(block_rows, _round_up(max(N, 1), 8))
+    dst, tile_gid, Np = grouped_layout(group_sizes, N, bm)
+    xb = jnp.zeros((Np, K), x.dtype).at[dst].set(x).reshape(-1, bm, K)
+
+    def body(_, inp):
+        xt, g = inp
+        return None, xt @ jax.lax.dynamic_index_in_dim(w, g, keepdims=False)
+
+    _, yb = jax.lax.scan(body, None, (xb, tile_gid))
+    return yb.reshape(Np, F)[dst]
+
+
+# --------------------------------------------------------------------------
 # CoDA fused proximal local update
 # --------------------------------------------------------------------------
 def prox_update_ref(v, g, v0, eta, gamma):

@@ -124,7 +124,7 @@ def apply_layer(cfg: ModelConfig, p, x, positions, window, *, kind: str,
         x = x + cx
     h2 = apply_norm(cfg, p["norm2"], x)
     if "moe" in p:
-        y, aux = apply_moe(cfg, p["moe"], h2, train=train)
+        y, aux = apply_moe(cfg, p["moe"], h2, train=train, impl=impl)
     else:
         y = apply_mlp(cfg, p["mlp"], h2)
     return x + y, aux, kv

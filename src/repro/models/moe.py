@@ -1,11 +1,33 @@
-"""Mixture-of-experts block with top-k routing and capacity-based dispatch.
+"""Mixture-of-experts block with top-k routing and two dispatch modes.
 
-Dispatch is gather/scatter based (not dense one-hot einsum) so the expert
-FLOPs are the *active* FLOPs: ``E × C × d × ff`` with
-``C = ceil(T · top_k · capacity_factor / E)``.  The expert axis is the
-sharding target for expert parallelism (see sharding/rules.py); GSPMD turns
-the gather/scatter across a sharded expert axis into all-to-all style
-collectives.
+Routing is shared (``route``): top-k over a softmax router, gate weights
+renormalized over the chosen k.  What differs is how chosen tokens reach
+their experts:
+
+* ``capacity`` — padded scatter dispatch into an ``[E, C, d]`` buffer with
+  ``C = ceil(T · top_k · capacity_factor / E)`` at train time (over-capacity
+  tokens are DROPPED — the standard load-shedding regularizer, and what
+  keeps expert FLOPs at the *active* count) or the static dropless bound
+  ``C = T`` at eval.  The expert axis is the sharding target for expert
+  parallelism (see sharding/rules.py); GSPMD turns the gather/scatter across
+  a sharded expert axis into all-to-all style collectives.
+
+* ``sorted`` — dropless sort-based dispatch: the flat ``[T·k]`` (token,
+  expert) assignments are argsorted by expert id, per-expert segment sizes
+  come from a bincount, the expert MLP runs as a ragged grouped GEMM over
+  the sorted ``[T·k, d]`` buffer (``kernels/ops.py::grouped_matmul`` — a
+  blocked-scan jnp reference on CPU/GPU, a tile-aligned scalar-prefetch
+  Pallas kernel on TPU), and a segment-aware scatter-add combines the
+  results.  No ``E``-fold padding:
+  at ``C = T`` the capacity buffer is ``E/top_k``-fold oversized in
+  expectation (64× on arctic-480b), which is exactly the waste this path
+  removes from the eval/decode hot path.
+
+Training always uses ``capacity``; eval/decode use ``cfg.moe.dispatch``
+(default ``"sorted"``; ``"capacity"`` keeps the old dropless C = T path).
+Both eval modes see bitwise-identical routing decisions — only the
+dispatch plumbing differs (``benchmarks/run.py --only moe_dispatch``
+measures the wall-clock and buffer-bytes gap).
 
 Arctic-style ``dense_residual`` adds an always-on MLP branch next to the
 experts.
@@ -18,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models.mlp import apply_mlp, init_mlp
 
 
@@ -47,37 +70,62 @@ def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
 
 
 def capacity(cfg: ModelConfig, n_tokens: int, *, train: bool = True) -> int:
-    """Per-expert buffer slots.  Training uses the capacity-factor bound
-    (over-capacity tokens are DROPPED — the standard load-shedding
-    regularizer, and what keeps expert FLOPs at the *active* count).
-    Eval/decode use the dropless bound C = T: dropping depends on the token
-    count of the forward pass, so a capacity-limited parallel scoring pass
-    and a token-by-token decode would route the same sequence differently
-    (tests/test_decode_consistency.py caught exactly that divergence on
-    dbrx's top-2-of-4 router).  C = T is the only *static* dropless bound,
-    and it is E/top_k-fold oversized in expectation — decode (T = B) and
-    the repo's scoring passes are small, but a long-sequence eval on a
-    large-E arch pays an [E, T, d] dispatch buffer; a sort-based dropless
-    dispatch would remove that waste (see ROADMAP)."""
+    """Per-expert buffer slots for ``capacity`` dispatch: the capacity-factor
+    bound at train time, the static dropless bound C = T at eval (dropping
+    depends on the token count of the forward pass, so a capacity-limited
+    parallel scoring pass and a token-by-token decode would route the same
+    sequence differently — tests/test_decode_consistency.py caught exactly
+    that divergence on dbrx's top-2-of-4 router)."""
     m = cfg.moe
     c = math.ceil(n_tokens * m.top_k * m.capacity_factor / m.n_experts) \
         if train else n_tokens
     return max(4, c + (-c) % 4)  # pad to a multiple of 4
 
 
-def apply_moe(cfg: ModelConfig, p, x, *, train: bool = False):
-    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+def dispatch_buffer_bytes(cfg: ModelConfig, n_tokens: int, *,
+                          mode: str = "sorted", train: bool = False,
+                          dtype=jnp.float32) -> int:
+    """Bytes of the per-layer dispatch buffer a forward pass of ``n_tokens``
+    allocates under each mode — the quantity the moe_dispatch benchmark and
+    scripts/mem_pass.py account for.  ``sorted`` gathers [T·k, d];
+    ``capacity`` gathers [E, C, d]."""
     m = cfg.moe
-    B, S, d = x.shape
-    T = B * S
-    E, k = m.n_experts, m.top_k
-    C = capacity(cfg, T, train=train)
-    xf = x.reshape(T, d)
+    itemsize = jnp.dtype(dtype).itemsize
+    if mode == "sorted":
+        return n_tokens * m.top_k * cfg.d_model * itemsize
+    if mode == "capacity":
+        return (m.n_experts * capacity(cfg, n_tokens, train=train)
+                * cfg.d_model * itemsize)
+    raise ValueError(f"unknown dispatch mode {mode!r}")
 
-    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)  # [T, E]
+
+def tokens_per_forward(spec) -> int:
+    """Tokens one forward pass dispatches for a benchmark shape spec
+    (configs.SHAPES): the full batch for train/prefill, one token per
+    sequence for decode.  The single convention behind the moe_dispatch
+    benchmark and scripts/mem_pass.py's artifact stamping."""
+    return (spec.global_batch if spec.kind == "decode"
+            else spec.global_batch * spec.seq_len)
+
+
+def route(cfg: ModelConfig, p, xf):
+    """Shared routing decision.  xf: [T, d] -> (top_g [T, k] fp32 renormed,
+    top_e [T, k] int32, gates [T, E] fp32).  Both dispatch modes consume
+    exactly this — the modes are bitwise-identical in WHAT they route and
+    differ only in how tokens reach the experts."""
+    logits = (xf @ p["router"].astype(xf.dtype)).astype(jnp.float32)  # [T, E]
     gates = jax.nn.softmax(logits, axis=-1)
-    top_g, top_e = jax.lax.top_k(gates, k)  # [T, k]
+    top_g, top_e = jax.lax.top_k(gates, cfg.moe.top_k)  # [T, k]
     top_g = top_g / jnp.sum(top_g, axis=-1, keepdims=True)
+    return top_g, top_e, gates
+
+
+def _dispatch_capacity(cfg: ModelConfig, p, xf, top_g, top_e, C: int):
+    """Padded scatter dispatch through an [E, C, d] buffer (tokens whose
+    expert is over capacity are dropped)."""
+    m = cfg.moe
+    T, d = xf.shape
+    E, k = m.n_experts, m.top_k
 
     # position of each (token, choice) inside its expert's capacity buffer
     e_flat = top_e.reshape(-1)  # [T*k]
@@ -103,13 +151,64 @@ def apply_moe(cfg: ModelConfig, p, x, *, train: bool = False):
     ye = _constrain(ye, ("data", None, None))
     ye = ye * wgt[..., None].astype(ye.dtype)
 
-    out = jnp.zeros((T, d), ye.dtype).at[idx.reshape(-1)].add(
+    return jnp.zeros((T, d), ye.dtype).at[idx.reshape(-1)].add(
         ye.reshape(E * C, d))  # combine
+
+
+def _dispatch_sorted(cfg: ModelConfig, p, xf, top_g, top_e, *,
+                     impl: str = "auto"):
+    """Dropless sort-based dispatch: argsort the [T·k] assignments by expert,
+    grouped GEMM over the sorted [T·k, d] buffer, segment scatter-add back."""
+    m = cfg.moe
+    T, d = xf.shape
+    E, k = m.n_experts, m.top_k
+
+    e_flat = top_e.reshape(-1)                                # [T*k]
+    t_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    g_flat = top_g.reshape(-1)
+    order = jnp.argsort(e_flat)                               # stable
+    src = t_flat[order]                                       # token per row
+    counts = jnp.bincount(e_flat, length=E)                   # segment sizes
+
+    xs = _constrain(jnp.take(xf, src, axis=0), ("data", None))  # [T·k, d]
+    wdt = jnp.promote_types(xs.dtype, p["w_gate"].dtype)
+    xs = xs.astype(wdt)
+    gm = lambda a, w: ops.grouped_matmul(a, w.astype(wdt), counts, impl=impl)
+    h = _constrain(gm(xs, p["w_gate"]), ("data", "model"))
+    u = _constrain(gm(xs, p["w_up"]), ("data", "model"))
+    ys = gm(jax.nn.silu(h) * u, p["w_down"])                  # [T·k, d]
+    ys = _constrain(ys, ("data", None))
+    ys = ys * g_flat[order][:, None].astype(ys.dtype)
+
+    return jnp.zeros((T, d), ys.dtype).at[src].add(ys)        # combine
+
+
+def apply_moe(cfg: ModelConfig, p, x, *, train: bool = False,
+              impl: str = "auto"):
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    xf = x.reshape(T, d)
+
+    top_g, top_e, gates = route(cfg, p, xf)
+
+    mode = "capacity" if train else m.dispatch
+    if mode == "capacity":
+        out = _dispatch_capacity(cfg, p, xf, top_g, top_e,
+                                 capacity(cfg, T, train=train))
+    else:
+        out = _dispatch_sorted(cfg, p, xf, top_g, top_e, impl=impl)
     out = out.reshape(B, S, d).astype(x.dtype)
 
-    # Switch-style load-balance auxiliary loss
+    # Switch-style load-balance auxiliary loss.  ``ce`` counts the dispatched
+    # fraction over ALL k choices (normalized by k) so top-2 archs (dbrx,
+    # arctic) balance both slots; at k = 1 this reduces exactly to the
+    # classic top-1 count (pinned by tests/test_moe_dispatch.py).
     me = jnp.mean(gates, axis=0)  # mean router prob per expert
-    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=1),
+                  axis=0) / k
     aux = E * jnp.sum(me * ce)
 
     if m.dense_residual:

@@ -133,7 +133,7 @@ def serve_step(cfg: ModelConfig, params, cache, tokens, positions, *,
                 nc["enc_k"], nc["enc_v"] = lc["enc_k"], lc["enc_v"]
             h2 = apply_norm(cfg, lp["norm2"], x)
             if "moe" in lp:
-                y, _ = apply_moe(cfg, lp["moe"], h2)
+                y, _ = apply_moe(cfg, lp["moe"], h2, impl=impl)
             else:
                 y = apply_mlp(cfg, lp["mlp"], h2)
             x = x + y
@@ -152,17 +152,24 @@ def serve_step(cfg: ModelConfig, params, cache, tokens, positions, *,
 def prefill(cfg: ModelConfig, params, cache, tokens, *, use_window=True,
             impl: str = "auto"):
     """Sequential prefill via serve_step (simple and cache-exact; the batch
-    engine amortizes it across requests).  tokens: [B, S0]."""
+    engine amortizes it across requests).  tokens: [B, S0].
+
+    Only the LAST token's logits are observable, so the scan carries the
+    cache alone — the old per-token [B, vocab] logits carry forced a
+    vocab-sized copy through every scan iteration and kept S0−1 dead
+    lm_head matmuls live.  The final step runs outside the scan and
+    produces the fp32 logits that tests/test_decode_consistency.py pins
+    against the parallel forward (token-by-token MoE dispatch included)."""
     B, S0 = tokens.shape
 
-    def body(carry, t):
-        cache, _ = carry
-        logits, score, cache = serve_step(
+    def body(cache, t):
+        _, _, cache = serve_step(
             cfg, params, cache, tokens[:, t][:, None],
             jnp.full((B,), t, jnp.int32), use_window=use_window, impl=impl)
-        return (cache, logits), None
+        return cache, None
 
-    (cache, logits), _ = jax.lax.scan(
-        body, (cache, jnp.zeros((B, cfg.vocab_size), jnp.float32)),
-        jnp.arange(S0))
-    return cache, logits
+    cache, _ = jax.lax.scan(body, cache, jnp.arange(S0 - 1))
+    logits, _, cache = serve_step(
+        cfg, params, cache, tokens[:, S0 - 1][:, None],
+        jnp.full((B,), S0 - 1, jnp.int32), use_window=use_window, impl=impl)
+    return cache, logits.astype(jnp.float32)

@@ -32,12 +32,14 @@ class Request:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 256, use_window: bool = True):
+                 max_len: int = 256, use_window: bool = True,
+                 impl: str = "auto"):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.use_window = use_window
+        self.impl = impl
         self.cache = D.init_cache(cfg, slots, max_len, use_window=use_window,
                                   dtype=jnp.float32)
         self.queue: deque[Request] = deque()
@@ -46,7 +48,8 @@ class ServingEngine:
         self.pending = [deque() for _ in range(slots)]  # unconsumed prompt tokens
         self._step = jax.jit(
             lambda params, cache, tok, pos: D.serve_step(
-                cfg, params, cache, tok, pos, use_window=use_window))
+                cfg, params, cache, tok, pos, use_window=use_window,
+                impl=impl))
 
     def add_request(self, req: Request):
         self.queue.append(req)

@@ -51,6 +51,24 @@ def test_decode_matches_parallel(arch, use_window):
                                atol=2e-3, rtol=2e-3)
 
 
+@pytest.mark.parametrize("arch", ["dbrx-132b", "arctic-480b"])
+@pytest.mark.parametrize("dispatch", ["sorted", "capacity"])
+def test_moe_decode_matches_parallel_both_dispatches(arch, dispatch):
+    """MoE archs under BOTH eval dispatch modes: the sorted dropless path
+    (decode sees T = B tokens per step, parallel sees T = B·S — routing must
+    agree with itself at every token count) and the capacity C = T oracle."""
+    cfg = get_smoke_config(arch)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch=dispatch))
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    tokens = jax.random.randint(key, (2, 24), 0, cfg.vocab_size)
+    got = _decode_last_logits(cfg, params, tokens, use_window=False)
+    exp = _parallel_last_logits(cfg, params, tokens, use_window=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               atol=2e-3, rtol=2e-3)
+
+
 def test_ring_buffer_matches_windowed_attention():
     """Sequence longer than the ring: decode through a W-slot ring must equal
     the parallel forward with sliding-window masking."""

@@ -74,6 +74,38 @@ def test_auto_never_traces_pallas_off_tpu(monkeypatch):
         np.asarray(ref.prox_update_ref(v, v, v, 0.1, 0.5)), atol=1e-6)
 
 
+def test_auto_never_traces_grouped_matmul_off_tpu(monkeypatch):
+    """Same invariant for the sorted-dispatch grouped GEMM: "auto" on a
+    non-TPU backend must reach the blocked-scan jnp reference, never the
+    (interpret-mode) Pallas kernel."""
+    monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+
+    def boom(*a, **k):
+        raise AssertionError("auto dispatched the grouped-GEMM Pallas "
+                             "kernel off-TPU")
+
+    monkeypatch.setattr(ops, "_grouped_kernel", boom)
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (6, 4))
+    w = jax.random.normal(key, (3, 4, 8))
+    gs = jnp.asarray([2, 3, 1], jnp.int32)
+    got = ops.grouped_matmul(x, w, gs, impl="auto")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.grouped_matmul_ref(x, w, gs)),
+        atol=1e-6)
+
+
+def test_explicit_pallas_grouped_matmul_interprets_off_tpu():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (6, 4))
+    w = jax.random.normal(key, (3, 4, 8))
+    gs = jnp.asarray([2, 3, 1], jnp.int32)
+    got = ops.grouped_matmul(x, w, gs, impl="pallas")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.grouped_matmul_ref(x, w, gs)),
+        atol=1e-5)
+
+
 def test_explicit_pallas_interprets_off_tpu():
     """impl="pallas" off-TPU is the deliberate interpret-mode escape hatch
     and must still agree with the reference."""
