@@ -8,6 +8,12 @@ can verify the *count* and *payload dtype* of what actually crosses the
 wire — e.g. that one CoDA window lowers to exactly one all-reduce of
 ``model_bytes`` operand bytes, or that the int8-compressed averaging ships
 an s8 payload (tests/test_coda_sharded.py).
+
+The expected payloads come from the generic tree accounting
+(``coda.model_bytes`` / ``coda.window_payload_by_dtype``: every params leaf
++ every leaf of the objective's dual tree, core/objective.py) — nothing
+here or there names a dual field, so the asserts hold for any registered
+objective's layout (AUC's 3 scalars, pAUC-DRO's 4, BCE's none).
 """
 from __future__ import annotations
 

@@ -14,8 +14,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import coda
+from repro.core import coda, objective
 from repro.models import model as M
+
+
+def params_k(params) -> int:
+    """The stacked worker count of a [K, ...] parameter tree."""
+    return jax.tree_util.tree_leaves(params)[0].shape[0]
 
 
 def ppd_sg_config(ccfg: coda.CoDAConfig) -> coda.CoDAConfig:
@@ -43,14 +48,18 @@ def bce_init(key, mcfg: ModelConfig, K: int, dtype=jnp.float32):
 
 
 def bce_step(mcfg: ModelConfig, params, batch, eta, *, impl="auto"):
-    """One synchronous parallel-SGD step on BCE (gradient averaging)."""
+    """One synchronous parallel-SGD step on BCE (gradient averaging).
+
+    The loss is the registered dual-free ``bce`` objective routed through
+    the same scoring closure the CoDA executors trace
+    (``coda._worker_loss`` with the empty dual tree) — no duplicated
+    score/clip/log plumbing here."""
+    obj = objective.REGISTRY["bce"]()
+    ccfg = coda.CoDAConfig(n_workers=params_k(params), objective="bce",
+                           impl=impl)
 
     def loss_fn(p, wb):
-        inputs = {k: v for k, v in wb.items() if k != "labels"}
-        h, aux = M.score(mcfg, p, inputs, train=True, impl=impl)
-        h = jnp.clip(h, 1e-6, 1 - 1e-6)
-        y = wb["labels"]
-        return -jnp.mean(y * jnp.log(h) + (1 - y) * jnp.log(1 - h)) + 0.01 * aux
+        return coda._worker_loss(mcfg, ccfg, obj, p, {}, wb)
 
     losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(params, batch)
     # synchronous data parallelism: average the gradients across workers

@@ -8,9 +8,12 @@ collective removed.
 
 Two payload layouts:
 
-  * ``average_state`` — plain CoDA: the state tensors (params + a, b, α)
-    form one concatenated bucket per dtype; fp32 default = exactly one
-    all-reduce of ``coda.model_bytes(state)`` operand bytes.
+  * ``average_state`` — plain CoDA: the state tensors (every ``params``
+    leaf + every leaf of the objective's ``duals`` tree) form one
+    concatenated bucket per dtype; fp32 default = exactly one all-reduce
+    of ``coda.model_bytes(state)`` operand bytes.  The layout is derived
+    from the tree structure (``_state_mats``), never from field names, so
+    any registered objective's dual layout rides the same machinery.
   * ``average_and_refresh`` — CODASCA: the freshly computed per-worker
     control variates ride the SAME bucket as the state tensors, so the
     global control variate c = mean_k c_k costs zero extra rounds — the
@@ -207,29 +210,33 @@ def int8_average(mats, wa):
 
 
 def _state_mats(state):
-    """The CoDA state as a flat list of [K_loc, n_i] matrices + treedef."""
-    flat_p, tdef = jax.tree_util.tree_flatten(state["params"])
-    kloc = flat_p[0].shape[0]
-    mats = [l.reshape(kloc, -1) for l in flat_p] + \
-           [state[k].reshape(kloc, 1) for k in ("a", "b", "alpha")]
-    return mats, flat_p, tdef, kloc
+    """The wire payload as a flat list of [K_loc, n_i] matrices + treedef.
+
+    ``state`` is anything with a ``params`` tree and a ``duals`` dict-tree
+    (the full CoDA state, or CODASCA's ``cv_new`` refresh dict) — the leaf
+    order is jax's dict flattening order (keys sorted: dual leaves before
+    params leaves), derived purely from the tree structure so every
+    objective's dual layout ships the same way.  ``coda._payload_leaves``
+    mirrors this exact flattening for the byte accounting."""
+    flat, tdef = jax.tree_util.tree_flatten(
+        {"params": state["params"], "duals": state["duals"]})
+    kloc = flat[0].shape[0]
+    mats = [l.reshape(kloc, -1) for l in flat]
+    return mats, (flat, tdef), kloc
 
 
-def _unmats(flat_p, tdef, kloc, means, *, broadcast=True):
-    """Means back into a params tree + (a, b, α) scalars."""
+def _unmats(meta, kloc, means, *, broadcast=True):
+    """Means back into a {"params": tree, "duals": dict} pair."""
+    flat, tdef = meta
     outs = []
-    for m, mean in zip(flat_p, means[:len(flat_p)]):
-        trail = m.shape[1:]
+    for leaf, mean in zip(flat, means):
+        trail = leaf.shape[1:]
         r = mean.reshape(trail)
         if broadcast:
             r = jnp.broadcast_to(r, (kloc,) + trail)
-        outs.append(r.astype(m.dtype))
+        outs.append(r.astype(leaf.dtype))
     tree = jax.tree_util.tree_unflatten(tdef, outs)
-    scalars = []
-    for i, mean in enumerate(means[len(flat_p):len(flat_p) + 3]):
-        s = jnp.broadcast_to(mean, (kloc,)) if broadcast else mean
-        scalars.append(s.astype(jnp.float32))
-    return tree, scalars
+    return tree["params"], tree["duals"]
 
 
 def average_state(state, wa, compress: Optional[str], *,
@@ -238,16 +245,16 @@ def average_state(state, wa, compress: Optional[str], *,
     K_loc local workers, then over the worker mesh axes.  ``ring`` swaps
     the blocking pmean for the chunked ppermute rings (fp32 buckets only —
     int8 + ring is rejected at config time)."""
-    mats, flat_p, tdef, kloc = _state_mats(state)
+    mats, meta, kloc = _state_mats(state)
     if ring is not None and compress:
         raise ValueError("ring averaging does not support compressed buckets")
     means = int8_average(mats, wa) if compress == "int8" \
         else (ring_mean_buckets(mats, ring) if ring is not None
               else pmean_buckets(mats, wa))
-    tree, (a, b, alpha) = _unmats(flat_p, tdef, kloc, means)
+    tree, duals = _unmats(meta, kloc, means)
     new = dict(state)
     new["params"] = tree
-    new["a"], new["b"], new["alpha"] = a, b, alpha
+    new["duals"] = duals
     return new
 
 
@@ -260,15 +267,15 @@ def average_and_refresh(state, cv_new, wa, compress: Optional[str], *,
     as ``cv_*`` — c_k never crosses the wire except through its mean.
 
     ``cv_new``: dict with the same layout as the state's averaged slice
-    ({"params": tree, "a", "b", "alpha": [K_loc]}).
+    ({"params": tree, "duals": dict}).
 
     Under ``compress="int8"`` the *dequantized* variates are stored as
     ``cv_*`` — c and c_k must share the quantizer, or the corrections
     ``c − c_k`` pick up a common bias of one quantization step per window
     and the K=1 / homogeneous CODASCA ≡ CoDA equivalences break.
     """
-    mats, flat_p, tdef, kloc = _state_mats(state)
-    cmats, cflat, _, _ = _state_mats(cv_new)
+    mats, meta, kloc = _state_mats(state)
+    cmats, cmeta, _ = _state_mats(cv_new)
     if ring is not None:
         if compress:
             raise ValueError("ring averaging does not support compressed "
@@ -289,15 +296,15 @@ def average_and_refresh(state, cv_new, wa, compress: Optional[str], *,
     else:
         means = pmean_buckets(mats + cmats, wa)
     n = len(mats)
-    tree, (a, b, alpha) = _unmats(flat_p, tdef, kloc, means[:n])
-    ctree, (ca, cb, calpha) = _unmats(cflat, tdef, kloc, means[n:])
+    tree, duals = _unmats(meta, kloc, means[:n])
+    ctree, cduals = _unmats(cmeta, kloc, means[n:])
     new = dict(state)
     new["params"] = tree
-    new["a"], new["b"], new["alpha"] = a, b, alpha
-    new["cg_params"], new["cg_a"], new["cg_b"], new["cg_alpha"] = \
-        ctree, ca, cb, calpha
-    stored_flat = [m.reshape(l.shape) for m, l in zip(cmats[:len(cflat)], cflat)]
-    new["cv_params"] = jax.tree_util.tree_unflatten(tdef, stored_flat)
-    for mat, k in zip(cmats[len(cflat):], ("cv_a", "cv_b", "cv_alpha")):
-        new[k] = mat.reshape(kloc)
+    new["duals"] = duals
+    new["cg_params"], new["cg_duals"] = ctree, cduals
+    cflat, ctdef = cmeta
+    stored_flat = [m.reshape(l.shape) for m, l in zip(cmats, cflat)]
+    stored_tree = jax.tree_util.tree_unflatten(ctdef, stored_flat)
+    new["cv_params"] = stored_tree["params"]
+    new["cv_duals"] = stored_tree["duals"]
     return new

@@ -1,7 +1,23 @@
-"""CoDA — Communication-efficient Distributed AUC maximization (Alg. 1 + 2).
+"""CoDA — Communication-efficient Distributed primal-dual training (Alg. 1+2)
+for pluggable min-max objectives.
+
+The paper proves its communication bound for the min-max AUC objective, but
+the construction — I collective-free local primal-dual steps, one averaging
+per window, stagewise proximal references — never looks inside the
+objective.  This module is written against that seam (``core/objective.py``):
+the training state is
+
+    {"params": tree, "duals": dict-pytree, "ref_params": tree,
+     "ref_duals": dict-pytree}
+
+where ``duals`` is whatever the configured ``Objective`` declares
+(``(a, b, alpha)`` for AUC, ``(a, b, alpha, lam)`` for pAUC-DRO, empty for
+BCE) and every layer below — averaging, dtype bucketing, int8 compression,
+overlapped rings, sharding rules, HLO payload asserts — works off the tree
+*structure*, never off field names.  Select with ``CoDAConfig(objective=...)``.
 
 Representation: every primal/dual variable carries a leading *worker* axis
-``K`` (``params[k]`` is machine k's replica, ``a, b, alpha: [K]``).  Local
+``K`` (``params[k]`` is machine k's replica, each dual field is [K]).  Local
 primal-dual steps are ``vmap``-batched over that axis and therefore contain
 no cross-worker collectives; the periodic averaging is a mean over axis 0
 (+ broadcast back).
@@ -27,18 +43,27 @@ Two executors run this algorithm (select with ``fit(..., executor=...)`` or
     set before the jax backend initialises.
 
 The two paths are equivalence-tested against each other to fp32 tolerance
-(tests/test_coda_sharded.py), and the communication accounting below
-(``comm_rounds`` / ``model_bytes`` / ``comm_bytes``) is cross-checked
-against the all-reduce ops the compiler actually emitted
-(``analysis/hlo.collective_ops``).
+(tests/test_coda_sharded.py), the generic-dual refactor is pinned against
+the legacy scalar-field formulas (tests/test_objective.py), and the
+communication accounting below (``comm_rounds`` / ``model_bytes`` /
+``comm_bytes``) is cross-checked against the all-reduce ops the compiler
+actually emitted (``analysis/hlo.collective_ops``).
 
 Primal update (proximal, footnote 1 of the paper):
     v ← (γ(v − η ∇̂_v F) + η v₀) / (η + γ)
-Dual update (ascent):  α ← α + η ∇̂_α F.
+Dual updates are owned by the objective (``Objective.dual_step``): proximal
+for its ``prox_refs`` fields, projected descent for min-player auxiliaries,
+ascent for the concave duals.
 
 ``CoDAConfig(algorithm="codasca")`` swaps the local step for the control-
 variate corrected CODASCA variant (core/codasca.py) on either executor —
 the heterogeneous-shard regime the paper's analysis excludes.
+``CoDAConfig(server_momentum=β)`` additionally applies a server-side
+momentum buffer to the averaged iterate (the CODASCA paper's server
+update): the buffer is a deterministic function of the synced iterates, so
+every worker keeps an identical replica and NOTHING extra crosses the wire
+— the window payload asserts are unchanged.  β = 0 is bit-for-bit the plain
+path (the momentum arithmetic is never traced).
 """
 from __future__ import annotations
 
@@ -65,6 +90,13 @@ class CoDAConfig:
     avg_compress: str = ""      # "" | "int8": compressed worker averaging
     algorithm: str = "coda"     # "coda" | "codasca" (control variates for
                                 # heterogeneous shards, core/codasca.py)
+    objective: str = "auc"      # which min-max objective to solve
+                                # (core/objective.py registry: auc | pauc_dro
+                                # | bce)
+    pauc_beta: float = 0.3      # FPR budget for objective="pauc_dro"
+    server_momentum: float = 0.0  # β: server momentum on the averaged
+                                  # iterate (0 = off, bit-for-bit today's
+                                  # path; buffer never crosses the wire)
     overlap_chunks: int = 0     # >0: sharded executor lowers the window
                                 # averaging as this many ppermute ring
                                 # chains per dtype bucket and fit() feeds
@@ -79,6 +111,15 @@ class CoDAConfig:
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
         if self.avg_compress not in ("", "int8"):
             raise ValueError(f"unknown avg_compress {self.avg_compress!r}")
+        if self.objective not in objective.names():
+            raise ValueError(f"unknown objective {self.objective!r} "
+                             f"(registered: {objective.names()})")
+        if not 0.0 <= self.server_momentum < 1.0:
+            raise ValueError("server_momentum must be in [0, 1), got "
+                             f"{self.server_momentum}")
+        if not 0.0 < self.pauc_beta <= 1.0:
+            raise ValueError(f"pauc_beta must be in (0, 1], got "
+                             f"{self.pauc_beta}")
         if self.overlap_chunks < 0:
             raise ValueError(f"overlap_chunks must be >= 0, got "
                              f"{self.overlap_chunks}")
@@ -95,17 +136,21 @@ CoDAState = Dict[str, Any]
 def init_state(key, mcfg: ModelConfig, ccfg: CoDAConfig) -> CoDAState:
     params = M.init_params(key, mcfg, dtype=ccfg.param_dtype)
     K = ccfg.n_workers
+    obj = objective.for_config(ccfg)
     stack = lambda t: jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x[None], (K,) + x.shape).copy(), t)
     # every field gets its own buffer — the jit-once executors donate the
     # state, and donating one aliased buffer twice is a runtime error
-    z = lambda: jnp.zeros((K,), jnp.float32)
+    duals = obj.init_duals(K)
     state = {
         "params": stack(params),
-        "a": z(), "b": z(), "alpha": z(),
+        "duals": duals,
         "ref_params": stack(params),
-        "ref_a": z(), "ref_b": z(),
+        "ref_duals": {f: jnp.zeros_like(duals[f]) for f in obj.prox_refs},
     }
+    if ccfg.server_momentum:
+        state["srv_m"] = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), state["params"])
     if ccfg.algorithm == "codasca":
         from repro.core import codasca
         state = codasca.extend_state(state)
@@ -115,39 +160,39 @@ def init_state(key, mcfg: ModelConfig, ccfg: CoDAConfig) -> CoDAState:
 # --------------------------------------------------------------------------
 # local primal-dual step (Algorithm 2, lines inside the I-window)
 # --------------------------------------------------------------------------
-def _worker_loss(mcfg, ccfg, params, a, b, alpha, batch):
+def _worker_loss(mcfg, ccfg, obj, params, duals, batch):
     inputs = {k: v for k, v in batch.items() if k != "labels"}
     h, aux = M.score(mcfg, params, inputs, use_window=ccfg.use_window,
                      train=True, impl=ccfg.impl)
-    f = objective.auc_F(h, batch["labels"], a, b, alpha, ccfg.p_pos)
+    f = obj.loss(h, batch["labels"], duals)
     return f + ccfg.moe_aux_coef * aux
 
 
 def grad_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch):
-    """Per-worker losses [K] + raw primal/dual gradients (gp, ga, gb, gα).
+    """Per-worker losses [K] + raw primal/dual gradients (gp, gduals).
 
-    Shared by CoDA (applies them directly) and CODASCA (applies them with
-    the control-variate correction and accumulates the raw values for the
-    window-end variate refresh, core/codasca.py)."""
+    ``gduals`` mirrors the objective's dual tree.  Shared by CoDA (applies
+    them directly) and CODASCA (applies them with the control-variate
+    correction and accumulates the raw values for the window-end variate
+    refresh, core/codasca.py)."""
+    obj = objective.for_config(ccfg)
     vg = jax.value_and_grad(
-        lambda p_, a_, b_, al_, bt_: _worker_loss(mcfg, ccfg, p_, a_, b_, al_, bt_),
-        argnums=(0, 1, 2, 3))
-    return jax.vmap(vg)(state["params"], state["a"], state["b"],
-                        state["alpha"], batch)
+        lambda p_, d_, bt_: _worker_loss(mcfg, ccfg, obj, p_, d_, bt_),
+        argnums=(0, 1))
+    return jax.vmap(vg)(state["params"], state["duals"], batch)
 
 
 def apply_grads(ccfg: CoDAConfig, state: CoDAState, grads, eta) -> CoDAState:
-    """Proximal primal descent + dual ascent with the given gradients."""
-    gp, ga, gb, galpha = grads
+    """Proximal primal descent + the objective's dual step."""
+    gp, gd = grads
+    obj = objective.for_config(ccfg)
     new_params = kops.prox_update_tree(state["params"], gp,
                                        state["ref_params"], eta, ccfg.gamma,
                                        impl=ccfg.impl)
-    prox = lambda v, g, v0: (ccfg.gamma * (v - eta * g) + eta * v0) / (eta + ccfg.gamma)
     new_state = dict(state)
     new_state["params"] = new_params
-    new_state["a"] = prox(state["a"], ga, state["ref_a"])
-    new_state["b"] = prox(state["b"], gb, state["ref_b"])
-    new_state["alpha"] = state["alpha"] + eta * galpha  # dual ascent
+    new_state["duals"] = obj.dual_step(state["duals"], gd,
+                                       state["ref_duals"], eta, ccfg.gamma)
     return new_state
 
 
@@ -174,14 +219,44 @@ def int8_quantize(xf, red_axes):
     return q, scale
 
 
+def server_momentum_step(state: CoDAState, start_params, beta: float):
+    """Server momentum on the averaged iterate (CODASCA's server update).
+
+    ``start_params`` is the synced iterate the window started from (every
+    worker holds the same replica — the invariant each averaging restores),
+    ``state["params"]`` the freshly averaged one.  The update
+
+        m ← β·m + (x̄ − x_start),    x ← x_start + m
+
+    runs in fp32 (the buffer is fp32 like CODASCA's variate accumulator)
+    and is replicated: m is a deterministic function of synced iterates, so
+    all workers compute identical buffers and NO extra bytes cross the wire.
+    Callers only trace this when β > 0 — β = 0 stays bit-for-bit the plain
+    averaging.
+    """
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda l: l.astype(jnp.float32), t)
+    m = jax.tree_util.tree_map(
+        lambda m_, xb, xs: beta * m_ + (xb - xs),
+        state["srv_m"], f32(state["params"]), f32(start_params))
+    new = dict(state)
+    new["srv_m"] = m
+    new["params"] = jax.tree_util.tree_map(
+        lambda xs, m_, xb: (xs.astype(jnp.float32) + m_).astype(xb.dtype),
+        start_params, m, state["params"])
+    return new
+
+
 def average(state: CoDAState, compress: Optional[str] = None) -> CoDAState:
     """Periodic model averaging: one all-reduce over the worker axis.
 
-    ``compress="int8"`` is a beyond-paper variant (§Perf): every worker
-    quantizes its replica to int8 with a per-tensor fp32 scale before the
-    cross-worker exchange, so the wire format is 1 byte/param instead of 2
-    (bf16) — at the cost of ~0.4% quantization noise on the averaged iterate
-    (bounded, since the local drift being averaged is itself O(ηIB) small).
+    Every ``params`` leaf and every dual field is averaged — the payload is
+    the tree, whatever the objective put in it.  ``compress="int8"`` is a
+    beyond-paper variant (§Perf): every worker quantizes its replica to int8
+    with a per-tensor fp32 scale before the cross-worker exchange, so the
+    wire format is 1 byte/param instead of 2 (bf16) — at the cost of ~0.4%
+    quantization noise on the averaged iterate (bounded, since the local
+    drift being averaged is itself O(ηIB) small).
     """
     if compress == "int8":
         def avg(x):
@@ -197,8 +272,7 @@ def average(state: CoDAState, compress: Optional[str] = None) -> CoDAState:
                                          x.shape)
     new = dict(state)
     new["params"] = jax.tree_util.tree_map(avg, state["params"])
-    for k in ("a", "b", "alpha"):
-        new[k] = avg(state[k])
+    new["duals"] = jax.tree_util.tree_map(avg, state["duals"])
     return new
 
 
@@ -215,31 +289,41 @@ def window_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState,
         return st, loss
 
     from repro import flags
+    start_params = state["params"]
     state, losses = jax.lax.scan(body, state, window_batch,
                                  unroll=flags.scan_unroll())
     if communicate:
         state = average(state, compress=ccfg.avg_compress or None)
+        if ccfg.server_momentum:
+            state = server_momentum_step(state, start_params,
+                                         ccfg.server_momentum)
     return state, jnp.mean(losses, axis=1)
 
 
 # --------------------------------------------------------------------------
 # stage boundary (Algorithm 1, lines 4–7 + proximal reference update)
 # --------------------------------------------------------------------------
-def estimate_alpha(mcfg: ModelConfig, ccfg: CoDAConfig, params, batch):
-    """One worker's α_s re-estimate from a fresh minibatch (Alg. 1 lines
-    4–7).  Shared by both executors so the production shard_map path cannot
-    silently diverge from the oracle."""
+def estimate_stage_duals(mcfg: ModelConfig, ccfg: CoDAConfig, params, duals,
+                         batch):
+    """One worker's stage-boundary dual re-estimates (Alg. 1 lines 4–7 —
+    for AUC this is ``optimal_alpha``) from a fresh minibatch.  Returns the
+    objective's ``stage_fields`` as a dict of scalars.  Shared by both
+    executors so the production shard_map path cannot silently diverge from
+    the oracle."""
+    obj = objective.for_config(ccfg)
+    if not obj.stage_fields:
+        return {}
     inputs = {k: v for k, v in batch.items() if k != "labels"}
     h, _ = M.score(mcfg, params, inputs, use_window=ccfg.use_window,
                    train=False, impl=ccfg.impl)
-    return objective.optimal_alpha(h, batch["labels"])
+    return obj.stage_duals(h, batch["labels"], duals)
 
 
 def stage_end(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch,
               *, resync: bool = True):
-    """Re-estimate the dual α_s from a fresh minibatch on every machine
-    (one all-reduce of one scalar) and move the proximal reference v₀ to the
-    averaged primal iterate.
+    """Re-estimate the objective's stage duals from a fresh minibatch on
+    every machine (one all-reduce of ``len(stage_fields)`` fp32 scalars) and
+    move the proximal references to the averaged iterate.
 
     ``resync=False`` skips the re-averaging: every window already ends in an
     averaging, so the state entering a stage boundary is synced and the
@@ -247,38 +331,47 @@ def stage_end(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch,
     jit-once drivers pass False; the default keeps the defensive seed
     behavior for ad-hoc callers.
     """
+    obj = objective.for_config(ccfg)
     if resync:
         state = average(state)
 
-    alphas = jax.vmap(
-        lambda p, wb: estimate_alpha(mcfg, ccfg, p, wb))(
-        state["params"], batch)                            # [K]
-    alpha = jnp.broadcast_to(jnp.mean(alphas, keepdims=True), alphas.shape)
+    upd = jax.vmap(
+        lambda p, d, wb: estimate_stage_duals(mcfg, ccfg, p, d, wb))(
+        state["params"], state["duals"], batch)            # {field: [K]}
+    new_duals = dict(state["duals"])
+    for f, v in upd.items():
+        new_duals[f] = jnp.broadcast_to(jnp.mean(v, keepdims=True), v.shape)
     new = dict(state)
-    new["alpha"] = alpha
+    new["duals"] = new_duals
     new["ref_params"] = state["params"]
-    new["ref_a"] = state["a"]
-    new["ref_b"] = state["b"]
+    new["ref_duals"] = {f: state["duals"][f] for f in obj.prox_refs}
     return new
 
 
 # --------------------------------------------------------------------------
 # accounting + driver
 # --------------------------------------------------------------------------
+def _payload_leaves(state: CoDAState):
+    """The leaves one worker ships per averaging round — every params leaf +
+    every dual leaf, in the exact bucket order the wire uses
+    (core/bucketing._state_mats flattens the same two-key dict)."""
+    return jax.tree_util.tree_leaves(
+        {"params": state["params"], "duals": state["duals"]})
+
+
 def model_bytes(state: CoDAState, compress: Optional[str] = None) -> int:
-    """Bytes one worker ships per averaging round (params + a, b, α).
+    """Bytes one worker ships per averaging round (params + dual tree).
 
     ``compress="int8"``: 1 byte/element payload + one fp32 scale per tensor
     (the wire format of the compressed averaging, matching the int8
     all-gather the sharded executor emits).
     """
-    leaves = jax.tree_util.tree_leaves(state["params"])
+    leaves = _payload_leaves(state)
     if compress == "int8":
         per_worker = sum(l.size // l.shape[0] for l in leaves)  # 1 B/elem
-        scales = (len(leaves) + 3) * 4                          # fp32 scales
-        return per_worker + 3 * 1 + scales
-    per_worker = sum(l.size // l.shape[0] * l.dtype.itemsize for l in leaves)
-    return per_worker + 3 * 4
+        scales = len(leaves) * 4                                # fp32 scales
+        return per_worker + scales
+    return sum(l.size // l.shape[0] * l.dtype.itemsize for l in leaves)
 
 
 # jnp dtype name → the short dtype tag optimized-HLO shapes use
@@ -290,18 +383,19 @@ def window_payload_by_dtype(state: CoDAState,
                             compress: Optional[str] = None) -> Dict[str, int]:
     """Window-payload bytes per HLO dtype tag — the per-dtype-bucket view of
     ``window_payload_bytes`` (bucketing ships one collective per dtype, so a
-    bf16-param state splits into a bf16 bucket and the f32 a/b/α bucket).
-    Only meaningful for the uncompressed layouts (fp-dtype pmean or ring)."""
+    bf16-param state splits into a bf16 bucket and the f32 dual bucket).
+    Works off the payload tree structure, whatever the objective's dual
+    layout is.  Only meaningful for the uncompressed layouts (fp-dtype
+    pmean or ring)."""
     if compress:
         raise ValueError("per-dtype payload is only defined for "
                          "uncompressed averaging")
     mult = 2 if "cv_params" in state else 1
     out: Dict[str, int] = {}
-    for leaf in jax.tree_util.tree_leaves(state["params"]):
+    for leaf in _payload_leaves(state):
         tag = _HLO_DTYPE[jnp.dtype(leaf.dtype).name]
         per = leaf.size // leaf.shape[0] * leaf.dtype.itemsize
         out[tag] = out.get(tag, 0) + mult * per
-    out["f32"] = out.get("f32", 0) + mult * 3 * 4   # a, b, alpha
     return out
 
 
@@ -317,21 +411,30 @@ def window_payload_bytes(state: CoDAState,
     return mult * model_bytes(state, compress)
 
 
+def stage_payload_bytes(ccfg: CoDAConfig) -> int:
+    """Bytes one worker ships at a stage boundary: one fp32 scalar per
+    objective ``stage_fields`` entry (4 for AUC and pAUC-DRO's α, 0 for the
+    dual-free BCE)."""
+    return 4 * len(objective.for_config(ccfg).stage_fields)
+
+
 def comm_rounds(stage_list) -> int:
-    """Averaging rounds + one α all-reduce per stage."""
+    """Averaging rounds + one stage-dual all-reduce per stage."""
     return sum(-(-st.T // st.I) + 1 for st in stage_list)
 
 
 def comm_bytes(stage_list, state: CoDAState,
-               compress: Optional[str] = None) -> int:
+               compress: Optional[str] = None, *,
+               stage_bytes: int = 4) -> int:
     """Total bytes one worker ships over a schedule: one window payload per
-    averaging round plus one fp32 scalar per stage-end α round.  Verified
-    against the compiler in tests/test_coda_sharded.py: the window's lowered
-    HLO contains exactly one cross-worker all-reduce whose operand bytes are
+    averaging round plus ``stage_bytes`` (one fp32 scalar per stage dual,
+    ``stage_payload_bytes``) per stage-end round.  Verified against the
+    compiler in tests/test_coda_sharded.py: the window's lowered HLO
+    contains exactly one cross-worker all-reduce whose operand bytes are
     ``window_payload_bytes(state)`` (model_bytes for CoDA, 2× for CODASCA),
-    and the stage boundary ships one f32 scalar."""
+    and the stage boundary ships the stage scalars."""
     mb = window_payload_bytes(state, compress)
-    return sum((-(-st.T // st.I)) * mb + 4 for st in stage_list)
+    return sum((-(-st.T // st.I)) * mb + stage_bytes for st in stage_list)
 
 
 @dataclasses.dataclass
@@ -435,6 +538,7 @@ def fit(key, mcfg: ModelConfig, ccfg: CoDAConfig, sched: schedules.ScheduleConfi
     iters = 0
     exposed = overlapped = 0
     payload = window_payload_bytes(state, ccfg.avg_compress or None)
+    stage_payload = stage_payload_bytes(ccfg)
     pairs = getattr(exe, "overlap_pairs", False)
 
     for st in stage_list:
@@ -471,6 +575,6 @@ def fit(key, mcfg: ModelConfig, ccfg: CoDAConfig, sched: schedules.ScheduleConfi
         key, sk = jax.random.split(key)
         state = exe.stage_end(state, sample_alpha_batch(sk, st.m))
         rounds += 1
-        exposed += 4                       # the stage-end f32 α scalar
+        exposed += stage_payload          # the stage-end fp32 dual scalars
     return FitResult(state, history, rounds, iters,
                      exposed_bytes=exposed, overlapped_bytes=overlapped)

@@ -10,9 +10,11 @@ Algorithm 2 made literal:
   * the I local primal-dual steps contain **zero** collectives — each worker
     shard runs them on its own devices;
   * the periodic averaging is **one** all-reduce: every state tensor
-    (params + a, b, α) is flattened and concatenated into a single bucket
-    per dtype, locally pre-averaged, and ``lax.pmean``-ed over the worker
-    axes.  With the default fp32 state that is exactly one all-reduce whose
+    (params + the objective's dual tree, core/objective.py) is flattened
+    and concatenated into a single bucket per dtype, locally pre-averaged,
+    and ``lax.pmean``-ed over the worker axes.  The bucket layout is
+    derived from tree structure, so any registered objective's duals ride
+    it.  With the default fp32 state that is exactly one all-reduce whose
     operand bytes equal ``coda.model_bytes(state)`` — asserted against the
     compiled HLO in tests/test_coda_sharded.py;
   * with ``CoDAConfig(avg_compress="int8")`` only the int8 payload plus one
@@ -144,10 +146,14 @@ class ShardedExecutor:
             return coda.local_step(mcfg, ccfg, s, b, eta)
 
         from repro import flags
+        start_params = st["params"]
         st, losses = jax.lax.scan(step, st, bt, unroll=flags.scan_unroll())
         if communicate:
             st = bucketing.average_state(st, wa, ccfg.avg_compress or None,
                                          ring=ring)
+            if ccfg.server_momentum:
+                st = coda.server_momentum_step(st, start_params,
+                                               ccfg.server_momentum)
         return st, losses  # losses: [I, K_loc]
 
     def window_fn(self, state, wb, *, communicate: bool = True):
@@ -232,18 +238,26 @@ class ShardedExecutor:
             return self._fns[key]
         mcfg, ccfg, wa = self.mcfg, self.ccfg, self.worker_axes
 
+        from repro.core import objective as OBJ
+        obj = OBJ.for_config(ccfg)
+
         def body(st, batch):
-            alphas = jax.vmap(
-                lambda p, wb: coda.estimate_alpha(mcfg, ccfg, p, wb))(
-                st["params"], batch)                     # [K_loc]
-            am = jnp.mean(alphas)
-            if wa:
-                am = jax.lax.pmean(am, wa)  # the one scalar α all-reduce
+            upd = jax.vmap(
+                lambda p, d, wb: coda.estimate_stage_duals(mcfg, ccfg, p, d,
+                                                           wb))(
+                st["params"], st["duals"], batch)        # {field: [K_loc]}
+            upd = {k: jnp.mean(v) for k, v in upd.items()}
+            if wa and upd:
+                # ONE all-reduce of the stage-dual scalars (a tuple payload
+                # of len(stage_fields) fp32 values — 4 bytes for AUC's α)
+                upd = jax.lax.pmean(upd, wa)
             new = dict(st)
-            new["alpha"] = jnp.full_like(st["alpha"], am)
+            new_duals = dict(st["duals"])
+            for f, v in upd.items():
+                new_duals[f] = jnp.full_like(st["duals"][f], v)
+            new["duals"] = new_duals
             new["ref_params"] = st["params"]
-            new["ref_a"] = st["a"]
-            new["ref_b"] = st["b"]
+            new["ref_duals"] = {f: st["duals"][f] for f in obj.prox_refs}
             return new
 
         st_specs = rules.shardmap_state_specs(state, self.mesh, self.policy)

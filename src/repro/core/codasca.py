@@ -29,15 +29,17 @@ worker axis, it rides the SAME bucketed all-reduce as the model averaging:
     compiled HLO in tests/test_codasca.py via
     ``analysis.hlo.verify_window_payload``.
 
-State layout (on top of ``coda.init_state``): ``cv_params/cv_a/cv_b/
-cv_alpha`` are worker k's variates (leading [K] axis, *never* shipped
-except through their mean) and ``cg_params/cg_a/cg_b/cg_alpha`` the global
-variates (replicated over the [K] axis so every sharding rule stays
-uniform).  All start at zero, so the first window — and, with homogeneous
-per-worker batches, every window — is bit-for-bit a CoDA window: the
-correction is computed as ``g + (c − c_k)``, and ``c − c_k`` is an exact
-floating-point zero whenever the two variates are equal.  That is the
-α = ∞ equivalence tier-1 checks.
+State layout (on top of ``coda.init_state``): ``cv_params``/``cv_duals``
+are worker k's variates (leading [K] axis, *never* shipped except through
+their mean) and ``cg_params``/``cg_duals`` the global variates (replicated
+over the [K] axis so every sharding rule stays uniform).  The variate trees
+mirror the objective's ``params``/``duals`` trees exactly — whatever dual
+fields the configured objective declares (core/objective.py) get variates,
+with no field names hard-coded anywhere below.  All start at zero, so the
+first window — and, with homogeneous per-worker batches, every window — is
+bit-for-bit a CoDA window: the correction is computed as ``g + (c − c_k)``,
+and ``c − c_k`` is an exact floating-point zero whenever the two variates
+are equal.  That is the α = ∞ equivalence tier-1 checks.
 
 Both executors run the one ``run_window`` below: the vmap oracle passes
 ``wa=()`` (plain axis-0 means), the shard_map executor its worker mesh
@@ -51,15 +53,14 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import bucketing, coda
 
+
 def extend_state(state: coda.CoDAState) -> coda.CoDAState:
     """Add zero control variates to a CoDA state (all fields get their own
     buffers — the jit-once executors donate the state)."""
-    zt = lambda: jax.tree_util.tree_map(jnp.zeros_like, state["params"])
-    zk = lambda: jnp.zeros_like(state["a"])
+    zt = lambda t: jax.tree_util.tree_map(jnp.zeros_like, t)
     new = dict(state)
-    new["cv_params"], new["cg_params"] = zt(), zt()
-    new["cv_a"], new["cv_b"], new["cv_alpha"] = zk(), zk(), zk()
-    new["cg_a"], new["cg_b"], new["cg_alpha"] = zk(), zk(), zk()
+    new["cv_params"], new["cg_params"] = zt(state["params"]), zt(state["params"])
+    new["cv_duals"], new["cg_duals"] = zt(state["duals"]), zt(state["duals"])
     return new
 
 
@@ -70,17 +71,15 @@ def local_step(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, batch, eta):
     (uncorrected) gradients feed the window's variate refresh.
     """
     losses, grads = coda.grad_step(mcfg, ccfg, state, batch)
-    gp, ga, gb, galpha = grads
+    gp, gd = grads
     # g + (c − c_k): the difference is computed FIRST so equal variates
     # contribute an exact fp zero (the homogeneous-data equivalence).
     corr = lambda g, c, ck: g + (c - ck)
     gp_c = jax.tree_util.tree_map(corr, gp, state["cg_params"],
                                   state["cv_params"])
-    corrected = (gp_c,
-                 corr(ga, state["cg_a"], state["cv_a"]),
-                 corr(gb, state["cg_b"], state["cv_b"]),
-                 corr(galpha, state["cg_alpha"], state["cv_alpha"]))
-    return coda.apply_grads(ccfg, state, corrected, eta), losses, grads
+    gd_c = jax.tree_util.tree_map(corr, gd, state["cg_duals"],
+                                  state["cv_duals"])
+    return coda.apply_grads(ccfg, state, (gp_c, gd_c), eta), losses, grads
 
 
 def run_window(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, window_batch,
@@ -103,28 +102,29 @@ def run_window(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, window_batch,
 
     def step(carry, b):
         st, acc = carry
-        st, losses, (gp, ga, gb, galpha) = local_step(mcfg, ccfg, st, b, eta)
-        gd = {"params": gp, "a": ga, "b": gb, "alpha": galpha}
+        st, losses, (gp, gd) = local_step(mcfg, ccfg, st, b, eta)
+        gd_tree = {"params": gp, "duals": gd}
         acc = jax.tree_util.tree_map(
-            lambda a, g: a + g.astype(jnp.float32), acc, gd)
+            lambda a, g: a + g.astype(jnp.float32), acc, gd_tree)
         return (st, acc), losses
 
-    f32z = lambda l: jnp.zeros(l.shape, jnp.float32)
-    acc0 = {"params": jax.tree_util.tree_map(f32z, state["params"]),
-            "a": f32z(state["a"]),
-            "b": f32z(state["b"]),
-            "alpha": f32z(state["alpha"])}
+    f32z = lambda t: jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, jnp.float32), t)
+    acc0 = {"params": f32z(state["params"]), "duals": f32z(state["duals"])}
+    start_params = state["params"]
     (state, acc), losses = jax.lax.scan(step, (state, acc0), window_batch,
                                         unroll=flags.scan_unroll())
     if communicate:
         I = jax.tree_util.tree_leaves(window_batch)[0].shape[0]
-        wire = {"params": state["params"], "a": state["a"], "b": state["b"],
-                "alpha": state["alpha"]}
+        wire = {"params": state["params"], "duals": state["duals"]}
         cv_new = jax.tree_util.tree_map(
             lambda g, w: (g / I).astype(w.dtype), acc, wire)
         state = bucketing.average_and_refresh(state, cv_new, wa,
                                               ccfg.avg_compress or None,
                                               ring=ring)
+        if ccfg.server_momentum:
+            state = coda.server_momentum_step(state, start_params,
+                                              ccfg.server_momentum)
     return state, losses
 
 

@@ -48,6 +48,11 @@ class DataConfig:
     signal: float = 1.0        # planted signal strength
     motif_frac: float = 0.1    # fraction of vocab that is "motif" tokens
     d_model: int = 128         # for frame/patch stubs
+    hard_neg_frac: float = 0.0  # features only: fraction of negatives drawn
+                                # from a near-positive "hard" component (see
+                                # _draw) — the regime where partial-AUC
+                                # training (objective="pauc_dro") beats
+                                # full-AUC at equal comm rounds
 
 
 def _draw(key, dcfg: DataConfig, shape, labels):
@@ -66,6 +71,27 @@ def _draw(key, dcfg: DataConfig, shape, labels):
         x = jax.random.normal(key, shape + (hw * hw, 3))
         mean = (labels[..., None, None] * 2 - 1) * dcfg.signal * 0.2
         return {"images": x + mean}
+    if dcfg.hard_neg_frac > 0.0:
+        # Heteroscedastic negatives: a (1-q) "easy" bulk at −0.3·s along the
+        # primary feature block, plus a q "hard" component sitting at
+        # +0.25·s — nearly on top of the positives there.  Telling hard
+        # negatives from positives requires the SECONDARY feature block
+        # (pos +0.2·s, hard negs −0.2·s, easy negs 0).  A full-AUC
+        # objective spends its gradient on the bulk pairs; DRO-weighted
+        # partial AUC focuses on the hard component and learns the
+        # secondary direction first — the planted asymmetry the
+        # objective_sweep benchmark measures.
+        kx, kh = jax.random.split(key)
+        x = jax.random.normal(kx, shape + (dcfg.n_features,))
+        half = dcfg.n_features // 2
+        hard = ((jax.random.uniform(kh, shape) < dcfg.hard_neg_frac)
+                & (labels < 0.5)).astype(jnp.float32)
+        s = dcfg.signal
+        prim = jnp.where(hard > 0.5, 0.25 * s, (labels * 2 - 1) * 0.3 * s)
+        sec = 0.2 * s * labels - 0.2 * s * hard
+        x = x.at[..., :half].add(prim[..., None])
+        x = x.at[..., half:].add(sec[..., None])
+        return {"features": x}
     x = jax.random.normal(key, shape + (dcfg.n_features,))
     mean = (labels[..., None] * 2 - 1) * dcfg.signal * 0.3
     return {"features": x + mean}

@@ -75,7 +75,15 @@ def attention(q, k, v, *, causal: bool = True, window=None, impl: str = "auto"):
 
 
 def auc_loss(h, y, a, b, alpha, p, *, impl: str = "auto"):
-    """Fused loss + closed-form grads of the min-max AUC objective."""
+    """Fused loss + closed-form grads of the min-max AUC objective.
+
+    This is the kernel behind ``objective.auc_F`` (the ``auc`` entry of the
+    pluggable objective registry, core/objective.py): one pass over the
+    scores yields the forward value and all four partials, wired into
+    autodiff via ``custom_vjp``.  New objectives that admit closed-form
+    partials should follow the same seam — jnp reference in kernels/ref.py,
+    Pallas kernel behind ``dispatch(impl)``.
+    """
     use_pallas, interpret = dispatch(impl)
     if use_pallas:
         return _auc_kernel(h, y, a, b, alpha, p, interpret=interpret)

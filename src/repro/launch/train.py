@@ -20,6 +20,19 @@ Algorithm selection (--algorithm):
                actually heterogeneous: Dirichlet(α) label skew, small α =
                extreme skew, unset/inf = the paper's IID split.
 
+Objective selection (--objective, core/objective.py registry):
+  * auc      — the paper's min-max AUC (duals a, b, α).
+  * pauc_dro — one-way partial AUC at FPR ≤ --pauc-beta as a KL-DRO
+               min-max: negatives are softmax-reweighted by hardness with
+               the DRO temperature riding the dual state.  The run summary
+               reports pAUC@β next to full AUC.
+Both ship their dual tree in the same one-bucket window all-reduce; the
+payload accounting adapts to the tree automatically.
+
+--server-momentum β applies the CODASCA-style server momentum buffer to
+every window's averaged iterate (replicated server state, zero extra wire
+bytes; 0 = off).
+
 Overlapped averaging (--overlap, shard_map only): the window all-reduce is
 rescheduled as C = --overlap-chunks ppermute ring chains per dtype bucket
 inside a fused two-window step, so the first window's wire time hides under
@@ -100,6 +113,16 @@ def main():
     ap.add_argument("--algorithm", choices=["coda", "codasca"], default="coda",
                     help="codasca = control-variate corrected local steps "
                          "for heterogeneous (non-IID) shards")
+    ap.add_argument("--objective", choices=list(objective.names()),
+                    default="auc",
+                    help="which min-max objective to solve "
+                         "(core/objective.py registry)")
+    ap.add_argument("--pauc-beta", type=float, default=0.3,
+                    help="FPR budget β for --objective pauc_dro")
+    ap.add_argument("--server-momentum", type=float, default=0.0,
+                    help="β for server momentum on the averaged iterate "
+                         "(0 = off; the buffer stays server-side, no extra "
+                         "wire bytes)")
     ap.add_argument("--dirichlet-alpha", type=float, default=float("inf"),
                     help="Dirichlet(α) label-skew across the K shards "
                          "(inf = IID even split, the paper's setting)")
@@ -163,6 +186,9 @@ def main():
     ccfg = coda.CoDAConfig(n_workers=args.workers, p_pos=ds.p_pos,
                            avg_compress=args.compress,
                            algorithm=args.algorithm,
+                           objective=args.objective,
+                           pauc_beta=args.pauc_beta,
+                           server_momentum=args.server_momentum,
                            overlap_chunks=args.overlap_chunks
                            if args.overlap else 0)
     sched = schedules.ScheduleConfig(n_workers=args.workers, eta0=args.eta0,
@@ -176,13 +202,17 @@ def main():
               f"devices={len(mesh.devices.flat)}")
 
     test = adapt(ds.full(2048))
+    obj = objective.for_config(ccfg)
 
-    def eval_auc(state) -> float:
+    def test_scores(state):
         from repro.models import model as M
         params0 = jax.tree_util.tree_map(lambda x: x[0], state["params"])
         inputs = {k: v for k, v in test.items() if k != "labels"}
         h, _ = M.score(mcfg, params0, inputs)
-        return float(objective.roc_auc(h, test["labels"]))
+        return h
+
+    def eval_auc(state) -> float:
+        return float(objective.roc_auc(test_scores(state), test["labels"]))
 
     t0 = time.time()
     res = coda.fit(
@@ -192,12 +222,18 @@ def main():
         executor=args.executor, mesh=mesh, policy=args.policy)
     dt = time.time() - t0
     auc = eval_auc(res.state)
+    extra = ""
+    if obj.metric_name != "auc":
+        m = obj.eval_metric(test_scores(res.state), test["labels"])
+        extra = f", test {obj.metric_name}@{args.pauc_beta:g}={m:.4f}"
     print(f"done: {res.iterations} iters, {res.comm_rounds} comm rounds, "
-          f"{dt:.1f}s, test AUC={auc:.4f}")
+          f"{dt:.1f}s, test AUC={auc:.4f}{extra}")
     compress = args.compress or None
+    total = coda.comm_bytes(schedules.stages(sched, args.stages), res.state,
+                            compress,
+                            stage_bytes=coda.stage_payload_bytes(ccfg))
     print(f"bytes/round/worker={coda.window_payload_bytes(res.state, compress):,} "
-          f"(schedule total "
-          f"{coda.comm_bytes(schedules.stages(sched, args.stages), res.state, compress):,})")
+          f"(schedule total {total:,})")
     if args.overlap:
         print(f"overlap: {res.overlapped_bytes:,} bytes hidden under "
               f"next-window compute, {res.exposed_bytes:,} exposed "

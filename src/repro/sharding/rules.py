@@ -123,15 +123,18 @@ def tree_shardings(tree, mesh, policy: str, *, worker_axes=()):
 # --------------------------------------------------------------------------
 def state_shardings(state_shapes, mesh, policy: str, multi_pod: bool):
     """Shardings for every CoDA-state field.  Params-like subtrees (params,
-    ref_params, and CODASCA's cv_params/cg_params control variates) get the
-    full name-based rules; [K] scalar fields (a, b, α, their refs and
-    variates) shard their worker axis when it fits."""
+    ref_params, the server-momentum buffer, and CODASCA's cv_/cg_ variate
+    trees) get the full name-based rules; the objective's dual trees
+    (duals / ref_duals / cv_duals / cg_duals — [K] scalar leaves, whatever
+    fields the registered objective declares) shard their worker axis when
+    it fits.  Nothing here names a dual field: subtrees route through the
+    generic tree rules, plain [K] leaves through the worker-axis rule."""
     wa = coda_worker_axes(policy, multi_pod)
     out = {}
     for k, v in state_shapes.items():
-        if not hasattr(v, "shape"):  # params / ref_params / cv_* / cg_* trees
+        if not hasattr(v, "shape"):  # params-like / dual subtrees
             out[k] = tree_shardings(v, mesh, policy, worker_axes=wa)
-        else:  # a, b, alpha + refs/variates: [K]
+        else:  # bare [K] leaves (none in the current layouts; kept generic)
             spec = P(wa) if wa and _fits(v.shape[0], tuple(wa), mesh) else P(None)
             out[k] = NamedSharding(mesh, spec)
     return out

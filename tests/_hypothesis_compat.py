@@ -48,6 +48,12 @@ except ImportError:  # fixed-seed fallback
             elements = list(elements)
             return _Strategy(lambda rng: rng.choice(elements))
 
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elements.example(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
     def given(**strats):
         def deco(f):
             # NOT functools.wraps: pytest must see a zero-arg signature, or

@@ -128,7 +128,12 @@ def test_stage_end_sets_alpha_and_reference():
     ab = jax.tree_util.tree_map(lambda a: a[0], wb)
     st2 = coda.stage_end(MCFG, ccfg, st1, ab)
     # alpha identical on all workers, reference moved to current params
-    assert float(jnp.max(jnp.abs(st2["alpha"] - st2["alpha"][0]))) == 0.0
+    alpha = st2["duals"]["alpha"]
+    assert float(jnp.max(jnp.abs(alpha - alpha[0]))) == 0.0
+    # the proximal dual references moved to the pre-stage duals
+    for f in ("a", "b"):
+        np.testing.assert_array_equal(np.asarray(st2["ref_duals"][f]),
+                                      np.asarray(st1["duals"][f]))
     for l1, l2 in zip(jax.tree_util.tree_leaves(st2["ref_params"]),
                       jax.tree_util.tree_leaves(st2["params"])):
         np.testing.assert_allclose(np.asarray(l1), np.asarray(l2))

@@ -286,9 +286,10 @@ def _toy_state(key, K, shapes=((4, 3), (5,))):
     params = {f"w{i}": jax.random.normal(k, (K,) + s)
               for i, (k, s) in enumerate(zip(ks, shapes))}
     z = lambda k: jax.random.normal(k, (K,))
-    return {"params": params, "a": z(ks[-3]), "b": z(ks[-2]),
-            "alpha": z(ks[-1]), "ref_params": params,
-            "ref_a": jnp.zeros((K,)), "ref_b": jnp.zeros((K,))}
+    return {"params": params,
+            "duals": {"a": z(ks[-3]), "b": z(ks[-2]), "alpha": z(ks[-1])},
+            "ref_params": params,
+            "ref_duals": {"a": jnp.zeros((K,)), "b": jnp.zeros((K,))}}
 
 
 @settings(max_examples=15, deadline=None)
@@ -303,9 +304,9 @@ def test_int8_average_exact_on_uniform_tensors(c, spread, seed):
     state = _toy_state(jax.random.PRNGKey(seed), K)
     state["params"] = {
         "w0": jnp.broadcast_to(cs[:, None, None], (K, 4, 3)).copy()}
-    state["a"] = cs.astype(jnp.float32)
-    state["b"] = -cs.astype(jnp.float32)
-    state["alpha"] = cs.astype(jnp.float32)
+    state["duals"] = {"a": cs.astype(jnp.float32),
+                      "b": -cs.astype(jnp.float32),
+                      "alpha": cs.astype(jnp.float32)}
     got = coda.average(state, compress="int8")
     want = coda.average(state)
     for ka, kb in zip(jax.tree_util.tree_leaves(got),

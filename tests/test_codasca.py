@@ -43,8 +43,11 @@ def _max_err(a, b):
         lambda x, y: float(jnp.max(jnp.abs(x - y))), a, b)))
 
 
+_STATE_KEYS = ("params", "duals", "ref_params", "ref_duals")
+
+
 def _state_only(state):
-    return {k: state[k] for k in ("params", "a", "b", "alpha")}
+    return {k: state[k] for k in ("params", "duals")}
 
 
 # --------------------------------------------------------------------------
@@ -111,8 +114,8 @@ def test_codasca_first_window_is_coda_bitwise():
     ccfg, st0, wb = _case(K, I)
     c0 = coda.CoDAConfig(n_workers=K, p_pos=0.7)
     s1, l1 = codasca.window_step(MCFG, ccfg, st0, wb, 0.1)
-    s2, l2 = coda.window_step(MCFG, c0, _state_only(st0) | {
-        k: st0[k] for k in ("ref_params", "ref_a", "ref_b")}, wb, 0.1)
+    s2, l2 = coda.window_step(MCFG, c0, {k: st0[k] for k in _STATE_KEYS},
+                              wb, 0.1)
     assert _max_err(_state_only(s1), _state_only(s2)) == 0.0
     assert float(jnp.max(jnp.abs(l1 - l2))) == 0.0
 
@@ -127,8 +130,7 @@ def test_codasca_homogeneous_equals_coda_step_for_step():
     c0 = coda.CoDAConfig(n_workers=K, p_pos=0.7)
     wb_h = {k: jnp.broadcast_to(v[:, :1], v.shape).copy()
             for k, v in wb.items()}
-    st_c = {k: st_s[k] for k in
-            ("params", "a", "b", "alpha", "ref_params", "ref_a", "ref_b")}
+    st_c = {k: st_s[k] for k in _STATE_KEYS}
     for _ in range(4):
         st_s, _ = codasca.window_step(MCFG, ccfg, st_s, wb_h, 0.1)
         st_c, _ = coda.window_step(MCFG, c0, st_c, wb_h, 0.1)
@@ -141,8 +143,7 @@ def test_codasca_k1_equals_coda_over_windows():
     fresh (different) batches per window."""
     ccfg, st_s, _ = _case(1, 2)
     c0 = coda.CoDAConfig(n_workers=1, p_pos=0.7)
-    st_c = {k: st_s[k] for k in
-            ("params", "a", "b", "alpha", "ref_params", "ref_a", "ref_b")}
+    st_c = {k: st_s[k] for k in _STATE_KEYS}
     for seed in range(3):
         _, _, wb = _case(1, 2, seed=seed)
         st_s, _ = codasca.window_step(MCFG, ccfg, st_s, wb, 0.1)
@@ -160,7 +161,8 @@ def test_codasca_variate_invariant_and_payload():
         lambda cg, cv: float(jnp.max(jnp.abs(cg - jnp.mean(cv, axis=0)))),
         s1["cg_params"], s1["cv_params"])
     assert max(jax.tree_util.tree_leaves(err)) < 1e-6
-    assert float(jnp.max(jnp.abs(s1["cg_a"] - jnp.mean(s1["cv_a"])))) < 1e-6
+    assert float(jnp.max(jnp.abs(s1["cg_duals"]["a"]
+                                 - jnp.mean(s1["cv_duals"]["a"])))) < 1e-6
     # the variates are not trivially zero on heterogeneous batches
     assert max(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
         lambda cv: float(jnp.max(jnp.abs(cv))), s1["cv_params"]))) > 0
@@ -184,8 +186,7 @@ def test_codasca_int8_shares_quantizer_between_c_and_ck():
     # cancel exactly because c and c_1 share the quantizer)
     ccfg1, st_s, _ = _case(1, 2, compress="int8")
     c0 = coda.CoDAConfig(n_workers=1, p_pos=0.7, avg_compress="int8")
-    st_c = {k: st_s[k] for k in
-            ("params", "a", "b", "alpha", "ref_params", "ref_a", "ref_b")}
+    st_c = {k: st_s[k] for k in _STATE_KEYS}
     for seed in range(3):
         _, _, wb1 = _case(1, 2, seed=seed, compress="int8")
         st_s, _ = codasca.window_step(MCFG, ccfg1, st_s, wb1, 0.1)
@@ -204,8 +205,7 @@ def test_codasca_bf16_homogeneous_equals_coda():
     c0 = coda.CoDAConfig(n_workers=K, p_pos=0.7, param_dtype=jnp.bfloat16)
     wb_h = {k: jnp.broadcast_to(v[:, :1], v.shape).copy()
             for k, v in wb.items()}
-    st_c = {k: st_s[k] for k in
-            ("params", "a", "b", "alpha", "ref_params", "ref_a", "ref_b")}
+    st_c = {k: st_s[k] for k in _STATE_KEYS}
     for _ in range(3):
         st_s, _ = codasca.window_step(MCFG, ccfg, st_s, wb_h, 0.1)
         st_c, _ = coda.window_step(MCFG, c0, st_c, wb_h, 0.1)
@@ -241,8 +241,9 @@ def test_codasca_bf16_variate_refresh_accumulates_fp32(monkeypatch):
         gp = jax.tree_util.tree_map(
             lambda p: jnp.full(p.shape, val).astype(p.dtype),
             state["params"])
-        gk = jnp.full((state["a"].shape[0],), val)
-        return jnp.zeros((state["a"].shape[0],)), (gp, gk, gk, gk)
+        K_ = state["duals"]["a"].shape[0]
+        gd = {f: jnp.full((K_,), val) for f in state["duals"]}
+        return jnp.zeros((K_,)), (gp, gd)
 
     monkeypatch.setattr(coda, "grad_step", stub_grad_step)
     s1, _ = codasca.window_step(MCFG, ccfg, st0, wb, 0.1)
@@ -256,7 +257,7 @@ def test_codasca_bf16_variate_refresh_accumulates_fp32(monkeypatch):
             (leaf.dtype, got[0], want)
     # the broken bf16 accumulator would have produced exactly 1/I
     assert float(jnp.bfloat16(want)) != 1.0 / I
-    assert float(s1["cv_a"][0]) == want                    # fp32 lane
+    assert float(s1["cv_duals"]["a"][0]) == want           # fp32 lane
 
 
 def test_config_rejects_unknown_algorithm():

@@ -1,0 +1,602 @@
+"""Objective-layer tests (the pluggable min-max seam, core/objective.py).
+
+Covers:
+  * metric oracles — ``roc_auc`` and ``partial_auc`` pinned against the
+    O(n²) pairwise comparison oracles under hypothesis, including all-ties
+    and single-class edge batches;
+  * THE refactor acceptance pin — the generic dual-tree path
+    (``objective="auc"``) reproduced against an inline re-implementation of
+    the pre-refactor scalar-field formulas (explicit a/b/α prox + ascent,
+    per-field averaging) for CoDA fp32, CoDA int8, and CODASCA, on the vmap
+    oracle.  The shard_map executor is pinned to the vmap oracle in
+    tests/test_coda_sharded.py / test_codasca.py, and the overlapped ring
+    to the blocking path in tests/test_overlap.py, so the legacy pin here
+    covers both executors and all averaging variants transitively;
+  * pAUC-DRO — gradient correctness by finite differences, the λ floor
+    projection, DRO-weight concentration in λ, NaN-free all-positive
+    batches (Dirichlet-starved shards), and the sharded path (subprocess,
+    8 forced host devices: oracle equivalence + the one-all-reduce payload
+    invariant with the 4-field dual tree);
+  * server momentum — β = 0 is bit-for-bit the plain path, β > 0 matches
+    the manual m ← βm + (x̄ − x₀), x ← x₀ + m recursion over windows, and
+    the buffer never enters the wire payload;
+  * the BCE objective seam — ``baselines.bce_step`` equals the manual BCE
+    formula, and the empty dual tree trains through both window paths with
+    zero dual payload.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs.base import mlp_config
+from repro.core import baselines, coda, codasca, objective
+from repro.kernels import ops as kops
+from repro.models import model as M
+
+MCFG = mlp_config(n_features=16, d=32)
+
+
+def _window(key, I, K, B=8, p=0.7):
+    ky, kx = jax.random.split(key)
+    y = (jax.random.uniform(ky, (I, K, B)) < p).astype(jnp.float32)
+    x = jax.random.normal(kx, (I, K, B, 16)) + 0.3 * (y[..., None] * 2 - 1)
+    return {"features": x, "labels": y}
+
+
+def _max_err(a, b):
+    return max(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda x, y: float(jnp.max(jnp.abs(
+            x.astype(jnp.float32) - y.astype(jnp.float32)))), a, b)))
+
+
+# --------------------------------------------------------------------------
+# metric oracles (hypothesis)
+# --------------------------------------------------------------------------
+_scores = st.lists(st.sampled_from([0.0, 0.1, 0.25, 0.5, 0.5, 0.9, 1.0]),
+                   min_size=1, max_size=60)
+
+
+def _pairwise_auc(sp, sn):
+    """The O(n²) oracle: mean over all (pos, neg) pairs of 1[p>n] + ½1[p=n]."""
+    if len(sp) == 0 or len(sn) == 0:
+        return 0.0  # the documented degenerate-batch convention
+    sp, sn = np.asarray(sp, np.float64), np.asarray(sn, np.float64)
+    return float(np.mean((sp[:, None] > sn[None, :])
+                         + 0.5 * (sp[:, None] == sn[None, :])))
+
+
+@settings(max_examples=60, deadline=None)
+@given(scores=_scores, seed=st.integers(0, 10_000))
+def test_roc_auc_matches_pairwise_oracle(scores, seed):
+    """The tie-aware rank formula == the O(n²) pairwise count, on heavily
+    tied batches — including all-ties and single-class draws (labels may
+    come out all-0 or all-1, where both sides return the 0.0 convention)."""
+    s = np.asarray(scores, np.float32)
+    y = (np.random.RandomState(seed).uniform(size=len(s)) < 0.5).astype(np.float32)
+    want = _pairwise_auc(s[y > 0.5], s[y <= 0.5])
+    got = float(objective.roc_auc(jnp.asarray(s), jnp.asarray(y)))
+    assert abs(got - want) < 1e-5, (got, want, s.tolist(), y.tolist())
+
+
+def test_roc_auc_all_ties_and_single_class():
+    s = jnp.full((8,), 0.5)
+    y = jnp.array([1, 0, 1, 0, 1, 0, 1, 0], jnp.float32)
+    assert abs(float(objective.roc_auc(s, y)) - 0.5) < 1e-6
+    assert float(objective.roc_auc(s, jnp.ones(8))) == 0.0
+    assert float(objective.roc_auc(s, jnp.zeros(8))) == 0.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(scores=_scores, seed=st.integers(0, 10_000),
+       beta=st.sampled_from([0.1, 0.3, 0.5, 1.0]))
+def test_partial_auc_matches_pairwise_oracle(scores, seed, beta):
+    """pAUC@FPR≤β == the O(n²) oracle restricted to the top-⌈β·n⁻⌉
+    negatives.  Tied negatives at the cutoff are interchangeable (equal
+    scores give equal pair outcomes), so the subset choice is immaterial."""
+    s = np.asarray(scores, np.float64)
+    y = (np.random.RandomState(seed).uniform(size=len(s)) < 0.5).astype(np.float64)
+    sp, sn = s[y > 0.5], s[y <= 0.5]
+    if len(sp) and len(sn):
+        k = max(1, int(np.ceil(beta * len(sn))))
+        want = _pairwise_auc(sp, np.sort(sn)[::-1][:k])
+    else:
+        want = 0.0
+    got = objective.partial_auc(s, y, beta)
+    assert abs(got - want) < 1e-9, (got, want, beta)
+
+
+def test_partial_auc_beta_one_is_roc_auc():
+    rng = np.random.RandomState(0)
+    s = rng.uniform(size=300)
+    y = (rng.uniform(size=300) < 0.3).astype(np.float32)
+    assert abs(objective.partial_auc(s, y, 1.0)
+               - float(objective.roc_auc(jnp.asarray(s), jnp.asarray(y)))) < 1e-5
+
+
+def test_partial_auc_rewards_head_ranking():
+    """pAUC@0.3 is the FPR-head metric: with 30 negatives it ranks the
+    positives against the 9 hardest only, so head mistakes (negatives
+    scored above the positives) are punished ~(n⁻/k)× harder than the full
+    AUC punishes them."""
+    y = np.array([1] * 10 + [0] * 30, np.float32)
+    good = np.concatenate([np.full(10, 0.8),
+                           np.full(3, 0.9), np.full(27, 0.1)])  # 3 negs above
+    bad = np.concatenate([np.full(10, 0.8),
+                          np.full(9, 0.9), np.full(21, 0.1)])   # 9 negs above
+    pa_good = objective.partial_auc(good, y, 0.3)   # beats 6 of top-9
+    pa_bad = objective.partial_auc(bad, y, 0.3)     # beats 0 of top-9
+    assert abs(pa_good - 6 / 9) < 1e-9 and pa_bad == 0.0
+    # the full AUC barely notices the same head damage
+    auc_good = float(objective.roc_auc(jnp.asarray(good), jnp.asarray(y)))
+    auc_bad = float(objective.roc_auc(jnp.asarray(bad), jnp.asarray(y)))
+    assert (auc_good - auc_bad) < (pa_good - pa_bad)
+
+
+# --------------------------------------------------------------------------
+# THE acceptance pin: generic dual trees == the pre-refactor formulas
+# --------------------------------------------------------------------------
+def _legacy_state(state):
+    """New-layout state → the pre-refactor scalar-field layout."""
+    d = state["duals"]
+    return {"params": state["params"], "a": d["a"], "b": d["b"],
+            "alpha": d["alpha"], "ref_params": state["ref_params"],
+            "ref_a": state["ref_duals"]["a"], "ref_b": state["ref_duals"]["b"]}
+
+
+def _legacy_local_step(ccfg, state, batch, eta):
+    """The seed repo's hard-coded AUC local step, verbatim formulas."""
+    vg = jax.value_and_grad(
+        lambda p_, a_, b_, al_, bt_: _legacy_worker_loss(ccfg, p_, a_, b_,
+                                                         al_, bt_),
+        argnums=(0, 1, 2, 3))
+    losses, (gp, ga, gb, galpha) = jax.vmap(vg)(
+        state["params"], state["a"], state["b"], state["alpha"], batch)
+    new_params = kops.prox_update_tree(state["params"], gp,
+                                       state["ref_params"], eta, ccfg.gamma,
+                                       impl=ccfg.impl)
+    prox = lambda v, g, v0: (ccfg.gamma * (v - eta * g) + eta * v0) / (eta + ccfg.gamma)
+    new = dict(state)
+    new["params"] = new_params
+    new["a"] = prox(state["a"], ga, state["ref_a"])
+    new["b"] = prox(state["b"], gb, state["ref_b"])
+    new["alpha"] = state["alpha"] + eta * galpha  # dual ascent
+    return new, losses, (gp, ga, gb, galpha)
+
+
+def _legacy_worker_loss(ccfg, params, a, b, alpha, batch):
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    h, aux = M.score(MCFG, params, inputs, use_window=ccfg.use_window,
+                     train=True, impl=ccfg.impl)
+    f = objective.auc_F(h, batch["labels"], a, b, alpha, ccfg.p_pos)
+    return f + ccfg.moe_aux_coef * aux
+
+
+def _legacy_average(state, compress=None):
+    """Pre-refactor ``coda.average``: params tree + the three named scalars."""
+    if compress == "int8":
+        def avg(x):
+            xf = x.astype(jnp.float32)
+            q, scale = coda.int8_quantize(xf, tuple(range(1, x.ndim)))
+            deq = q.astype(jnp.float32) * scale
+            m = jnp.mean(deq, axis=0, keepdims=True)
+            return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+    else:
+        avg = lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True),
+                                         x.shape)
+    new = dict(state)
+    new["params"] = jax.tree_util.tree_map(avg, state["params"])
+    for k in ("a", "b", "alpha"):
+        new[k] = avg(state[k])
+    return new
+
+
+@pytest.mark.parametrize("compress", ["", "int8"])
+def test_auc_refactor_matches_legacy_coda_window(compress):
+    """objective="auc" through the generic dual-tree path must reproduce
+    the pre-refactor scalar-field window (I local steps + averaging,
+    fp32/int8) over multiple windows, to fp32 tolerance."""
+    K, I = 4, 3
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, avg_compress=compress)
+    key = jax.random.PRNGKey(0)
+    st_new = coda.init_state(key, MCFG, ccfg)
+    st_old = _legacy_state(st_new)
+    for seed in range(3):
+        wb = _window(jax.random.PRNGKey(seed), I, K)
+        st_new, losses_new = coda.window_step(MCFG, ccfg, st_new, wb, 0.1)
+        losses_old = []
+        for i in range(I):
+            st_old, ls, _ = _legacy_local_step(
+                ccfg, st_old, jax.tree_util.tree_map(lambda l: l[i], wb), 0.1)
+            losses_old.append(jnp.mean(ls))
+        st_old = _legacy_average(st_old, compress or None)
+        np.testing.assert_allclose(np.asarray(losses_new),
+                                   np.asarray(jnp.stack(losses_old)),
+                                   atol=1e-6)
+        assert _max_err(st_new["params"], st_old["params"]) < 1e-6
+        for f in ("a", "b", "alpha"):
+            assert float(jnp.max(jnp.abs(st_new["duals"][f] - st_old[f]))) \
+                < 1e-6, (compress, f)
+
+
+def test_auc_refactor_matches_legacy_codasca_window():
+    """The CODASCA variant of the pin: legacy per-field control variates
+    (cv_a/cg_a/... scalar fields, fp32 raw-gradient accumulator, combined
+    refresh) vs the generic ``cv_duals``/``cg_duals`` trees — exact over
+    multiple heterogeneous windows."""
+    K, I = 4, 2
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, algorithm="codasca")
+    key = jax.random.PRNGKey(1)
+    st_new = coda.init_state(key, MCFG, ccfg)
+    base = coda.CoDAConfig(n_workers=K, p_pos=0.7)
+    leg = _legacy_state(st_new)
+    zt = lambda: jax.tree_util.tree_map(jnp.zeros_like, leg["params"])
+    zk = lambda: jnp.zeros_like(leg["a"])
+    leg.update(cv_params=zt(), cg_params=zt())
+    for f in ("a", "b", "alpha"):
+        leg[f"cv_{f}"], leg[f"cg_{f}"] = zk(), zk()
+
+    for seed in range(3):
+        wb = _window(jax.random.PRNGKey(10 + seed), I, K)
+        st_new, _ = codasca.window_step(MCFG, ccfg, st_new, wb, 0.1)
+
+        # legacy window: corrected steps + fp32 accumulator + refresh
+        acc_p = jax.tree_util.tree_map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), leg["params"])
+        acc = {"a": zk(), "b": zk(), "alpha": zk()}
+        for i in range(I):
+            b_i = jax.tree_util.tree_map(lambda l: l[i], wb)
+            corr = lambda g, c, ck: g + (c - ck)
+            vg = jax.value_and_grad(
+                lambda p_, a_, b_, al_, bt_: _legacy_worker_loss(
+                    base, p_, a_, b_, al_, bt_), argnums=(0, 1, 2, 3))
+            _, (gp, ga, gb, gal) = jax.vmap(vg)(
+                leg["params"], leg["a"], leg["b"], leg["alpha"], b_i)
+            gp_c = jax.tree_util.tree_map(corr, gp, leg["cg_params"],
+                                          leg["cv_params"])
+            ga_c = corr(ga, leg["cg_a"], leg["cv_a"])
+            gb_c = corr(gb, leg["cg_b"], leg["cv_b"])
+            gal_c = corr(gal, leg["cg_alpha"], leg["cv_alpha"])
+            new_params = kops.prox_update_tree(leg["params"], gp_c,
+                                               leg["ref_params"], 0.1,
+                                               base.gamma)
+            prox = lambda v, g, v0: (base.gamma * (v - 0.1 * g)
+                                     + 0.1 * v0) / (0.1 + base.gamma)
+            leg["params"] = new_params
+            leg["a"] = prox(leg["a"], ga_c, leg["ref_a"])
+            leg["b"] = prox(leg["b"], gb_c, leg["ref_b"])
+            leg["alpha"] = leg["alpha"] + 0.1 * gal_c
+            acc_p = jax.tree_util.tree_map(
+                lambda s, g: s + g.astype(jnp.float32), acc_p, gp)
+            for f, g in (("a", ga), ("b", gb), ("alpha", gal)):
+                acc[f] = acc[f] + g.astype(jnp.float32)
+        cvp = jax.tree_util.tree_map(
+            lambda g, w: (g / I).astype(w.dtype), acc_p, leg["params"])
+        cvs = {f: acc[f] / I for f in acc}
+        leg = _legacy_average(leg)
+        mean0 = lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True),
+                                           x.shape)
+        leg["cg_params"] = jax.tree_util.tree_map(mean0, cvp)
+        leg["cv_params"] = cvp
+        for f in ("a", "b", "alpha"):
+            leg[f"cg_{f}"] = mean0(cvs[f])
+            leg[f"cv_{f}"] = cvs[f]
+
+        assert _max_err(st_new["params"], leg["params"]) < 1e-6
+        for f in ("a", "b", "alpha"):
+            assert float(jnp.max(jnp.abs(st_new["duals"][f] - leg[f]))) < 1e-6
+            assert float(jnp.max(jnp.abs(
+                st_new["cv_duals"][f] - leg[f"cv_{f}"]))) < 1e-6
+            assert float(jnp.max(jnp.abs(
+                st_new["cg_duals"][f] - leg[f"cg_{f}"]))) < 1e-6
+        assert _max_err(st_new["cv_params"], leg["cv_params"]) < 1e-6
+        assert _max_err(st_new["cg_params"], leg["cg_params"]) < 1e-6
+
+
+# --------------------------------------------------------------------------
+# pAUC-DRO objective properties
+# --------------------------------------------------------------------------
+def _pauc_obj(**kw):
+    return objective.PAUCDROObjective(p_pos=0.7, **kw)
+
+
+def test_pauc_loss_gradients_match_finite_differences():
+    obj = _pauc_obj()
+    key = jax.random.PRNGKey(0)
+    h = jax.random.uniform(key, (64,))
+    y = (jax.random.uniform(jax.random.PRNGKey(1), (64,)) < 0.7).astype(jnp.float32)
+    duals = {"a": jnp.float32(0.2), "b": jnp.float32(0.3),
+             "alpha": jnp.float32(0.1), "lam": jnp.float32(0.7)}
+    gh, gd = jax.grad(lambda h_, d_: obj.loss(h_, y, d_), argnums=(0, 1))(h, duals)
+    eps = 1e-3
+
+    def fd(f, x):
+        return (f(x + eps) - f(x - eps)) / (2 * eps)
+
+    # a few h coordinates (one positive, one negative)
+    for i in (int(jnp.argmax(y)), int(jnp.argmin(y))):
+        num = fd(lambda v: float(obj.loss(h.at[i].set(v), y, duals)), float(h[i]))
+        assert abs(num - float(gh[i])) < 5e-3, (i, num, float(gh[i]))
+    for f in ("a", "b", "alpha", "lam"):
+        num = fd(lambda v: float(obj.loss(h, y, {**duals, f: jnp.float32(v)})),
+                 float(duals[f]))
+        assert abs(num - float(gd[f])) < 5e-3, (f, num, float(gd[f]))
+
+
+def test_pauc_dro_weights_concentrate_as_lam_shrinks():
+    """The implicit DRO weights q_j ∝ exp(ℓ_j/λ): small λ concentrates the
+    negative-side gradient mass on the hardest negatives, large λ spreads
+    it uniformly — measured through ∂F/∂h on the negative coordinates."""
+    obj = _pauc_obj()
+    key = jax.random.PRNGKey(2)
+    h = jax.random.uniform(key, (128,))
+    y = jnp.zeros((128,))  # all negatives isolates the DRO side
+    duals = lambda lam: {"a": jnp.float32(0.0), "b": jnp.float32(0.0),
+                         "alpha": jnp.float32(0.0), "lam": jnp.float32(lam)}
+
+    def neg_grad_entropy(lam):
+        g = jax.grad(lambda h_: obj.loss(h_, y, duals(lam)))(h)
+        w = jnp.abs(g) / jnp.sum(jnp.abs(g))
+        return float(-jnp.sum(w * jnp.log(w + 1e-12)))
+
+    assert neg_grad_entropy(0.05) < neg_grad_entropy(0.5) < neg_grad_entropy(50.0)
+
+
+def test_pauc_all_positive_batch_is_finite():
+    """Dirichlet-starved shards produce all-positive batches; the DRO
+    log-sum-exp over zero negatives must yield finite loss AND gradients
+    (the double-where guard — a single where leaks NaN grads)."""
+    obj = _pauc_obj()
+    h = jnp.linspace(0.1, 0.9, 16)
+    y = jnp.ones((16,))
+    duals = {"a": jnp.float32(0.1), "b": jnp.float32(0.2),
+             "alpha": jnp.float32(0.3), "lam": jnp.float32(1.0)}
+    val, (gh, gd) = jax.value_and_grad(
+        lambda h_, d_: obj.loss(h_, y, d_), argnums=(0, 1))(h, duals)
+    assert np.isfinite(float(val))
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves((gh, gd)))
+    upd = obj.stage_duals(h, y, duals)
+    assert np.isfinite(float(upd["alpha"]))
+
+
+def test_pauc_lam_projected_at_floor():
+    obj = _pauc_obj()
+    duals = obj.init_duals(4)
+    grads = {f: jnp.full((4,), 100.0) for f in duals}   # huge descent pull
+    refs = {f: jnp.zeros((4,)) for f in obj.prox_refs}
+    new = obj.dual_step(duals, grads, refs, eta=1.0, gamma=0.5)
+    np.testing.assert_allclose(np.asarray(new["lam"]),
+                               np.full(4, obj.lam_min), atol=0)
+    # ascent field went UP, prox fields pulled toward the (zero) reference
+    assert float(new["alpha"][0]) > float(duals["alpha"][0])
+    assert abs(float(new["a"][0])) < 100.0
+
+
+def test_pauc_trains_through_both_window_paths():
+    K, I = 4, 2
+    for alg in ("coda", "codasca"):
+        ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, algorithm=alg,
+                               objective="pauc_dro")
+        st = coda.init_state(jax.random.PRNGKey(0), MCFG, ccfg)
+        assert set(st["duals"]) == {"a", "b", "alpha", "lam"}
+        wstep = codasca.window_step if alg == "codasca" else coda.window_step
+        for seed in range(2):
+            st, losses = wstep(MCFG, ccfg, st, _window(
+                jax.random.PRNGKey(seed), I, K), 0.1)
+            assert np.isfinite(np.asarray(losses)).all()
+        st = coda.stage_end(MCFG, ccfg, st, jax.tree_util.tree_map(
+            lambda l: l[0], _window(jax.random.PRNGKey(9), I, K)),
+            resync=False)
+        # λ never left the feasible set; payload counts the 4th dual
+        assert float(jnp.min(st["duals"]["lam"])) >= 0.05
+        base = coda.init_state(jax.random.PRNGKey(0), MCFG,
+                               coda.CoDAConfig(n_workers=K, p_pos=0.7,
+                                               algorithm=alg))
+        assert coda.model_bytes(st) == coda.model_bytes(base) + 4
+
+
+# --------------------------------------------------------------------------
+# server momentum
+# --------------------------------------------------------------------------
+def test_server_momentum_zero_is_plain_path_bitwise():
+    K, I = 4, 2
+    c0 = coda.CoDAConfig(n_workers=K, p_pos=0.7)
+    cz = coda.CoDAConfig(n_workers=K, p_pos=0.7, server_momentum=0.0)
+    st0 = coda.init_state(jax.random.PRNGKey(0), MCFG, c0)
+    stz = coda.init_state(jax.random.PRNGKey(0), MCFG, cz)
+    assert "srv_m" not in stz            # β = 0 adds no state field
+    wb = _window(jax.random.PRNGKey(1), I, K)
+    s0, l0 = coda.window_step(MCFG, c0, st0, wb, 0.1)
+    sz, lz = coda.window_step(MCFG, cz, stz, wb, 0.1)
+    assert _max_err(s0, sz) == 0.0
+    assert float(jnp.max(jnp.abs(l0 - lz))) == 0.0
+
+
+def test_server_momentum_matches_manual_recursion():
+    """β > 0: over two windows the executor must match the hand-rolled
+    m_t = β·m_{t-1} + (x̄_t − x_{t-1}),  x_t = x_{t-1} + m_t  recursion
+    built from plain (momentum-free) window averages."""
+    K, I, beta = 4, 2, 0.6
+    cm = coda.CoDAConfig(n_workers=K, p_pos=0.7, server_momentum=beta)
+    c0 = coda.CoDAConfig(n_workers=K, p_pos=0.7)
+    st = coda.init_state(jax.random.PRNGKey(0), MCFG, cm)
+    m = st["srv_m"]
+    plain = {k: v for k, v in st.items() if k != "srv_m"}
+    for seed in range(2):
+        wb = _window(jax.random.PRNGKey(seed), I, K)
+        st, _ = coda.window_step(MCFG, cm, st, wb, 0.1)
+        x_start = plain["params"]
+        bar, _ = coda.window_step(MCFG, c0, plain, wb, 0.1)
+        m = jax.tree_util.tree_map(
+            lambda m_, xb, xs: beta * m_ + (xb.astype(jnp.float32)
+                                            - xs.astype(jnp.float32)),
+            m, bar["params"], x_start)
+        want_x = jax.tree_util.tree_map(
+            lambda xs, m_: (xs.astype(jnp.float32) + m_), x_start, m)
+        assert _max_err(st["params"], want_x) < 1e-6
+        assert _max_err(st["srv_m"], m) < 1e-6
+        plain = dict(bar)
+        plain["params"] = st["params"]   # momentum trajectory continues
+        plain["duals"] = st["duals"]
+
+
+def test_server_momentum_not_in_wire_payload():
+    """The momentum buffer is server-side state: the payload accounting —
+    and hence the HLO payload asserts built on it — must not change."""
+    K = 4
+    cm = coda.CoDAConfig(n_workers=K, p_pos=0.7, server_momentum=0.9)
+    c0 = coda.CoDAConfig(n_workers=K, p_pos=0.7)
+    sm = coda.init_state(jax.random.PRNGKey(0), MCFG, cm)
+    s0 = coda.init_state(jax.random.PRNGKey(0), MCFG, c0)
+    assert coda.model_bytes(sm) == coda.model_bytes(s0)
+    assert coda.window_payload_bytes(sm) == coda.window_payload_bytes(s0)
+    assert coda.window_payload_by_dtype(sm) == coda.window_payload_by_dtype(s0)
+
+
+def test_config_rejects_bad_objective_and_momentum():
+    with pytest.raises(ValueError):
+        coda.CoDAConfig(n_workers=2, objective="AUC")
+    with pytest.raises(ValueError):
+        coda.CoDAConfig(n_workers=2, server_momentum=1.0)
+    with pytest.raises(ValueError):
+        coda.CoDAConfig(n_workers=2, pauc_beta=0.0)
+
+
+# --------------------------------------------------------------------------
+# the BCE seam (dual-free objective)
+# --------------------------------------------------------------------------
+def test_bce_step_matches_manual_formula():
+    """baselines.bce_step now routes through the objective seam — it must
+    still compute exactly the clipped-BCE parallel-SGD step."""
+    K, B = 3, 16
+    key = jax.random.PRNGKey(0)
+    params = baselines.bce_init(key, MCFG, K)
+    wb = jax.tree_util.tree_map(lambda l: l[0], _window(key, 1, K, B))
+    new_params, loss = baselines.bce_step(MCFG, params, wb, 0.1)
+
+    def manual(p, b):
+        inputs = {k: v for k, v in b.items() if k != "labels"}
+        h, aux = M.score(MCFG, p, inputs, train=True)
+        h = jnp.clip(h, 1e-6, 1 - 1e-6)
+        y = b["labels"]
+        return -jnp.mean(y * jnp.log(h) + (1 - y) * jnp.log(1 - h)) + 0.01 * aux
+
+    losses, grads = jax.vmap(jax.value_and_grad(manual))(params, wb)
+    grads = jax.tree_util.tree_map(
+        lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape),
+        grads)
+    want = jax.tree_util.tree_map(lambda p, g: p - 0.1 * g, params, grads)
+    assert abs(float(loss) - float(jnp.mean(losses))) < 1e-7
+    assert _max_err(new_params, want) < 1e-7
+
+
+def test_bce_objective_trains_with_empty_dual_tree():
+    """objective="bce" through the CoDA executors: empty duals, zero dual
+    payload, zero stage bytes — the generic tree plumbing's empty limit."""
+    K, I = 4, 2
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, objective="bce")
+    st = coda.init_state(jax.random.PRNGKey(0), MCFG, ccfg)
+    assert st["duals"] == {} and st["ref_duals"] == {}
+    wb = _window(jax.random.PRNGKey(1), I, K)
+    st, losses = coda.window_step(MCFG, ccfg, st, wb, 0.1)
+    assert np.isfinite(np.asarray(losses)).all()
+    st = coda.stage_end(MCFG, ccfg, st, jax.tree_util.tree_map(
+        lambda l: l[0], wb), resync=False)
+    params_only = sum(l.size // K * 4 for l in
+                      jax.tree_util.tree_leaves(st["params"]))
+    assert coda.model_bytes(st) == params_only
+    assert coda.stage_payload_bytes(ccfg) == 0
+
+
+# --------------------------------------------------------------------------
+# sharded path for the new objective (subprocess: 8 forced host devices)
+# --------------------------------------------------------------------------
+_PRELUDE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.analysis import hlo as H
+    from repro.configs.base import mlp_config
+    from repro.core import coda, codasca
+    mcfg = mlp_config(n_features=16, d=32)
+
+    def make_case(K, I, B=8, seed=0, **kw):
+        ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, **kw)
+        key = jax.random.PRNGKey(seed)
+        st0 = coda.init_state(key, mcfg, ccfg)
+        ky, kx = jax.random.split(key)
+        y = (jax.random.uniform(ky, (I, K, B)) < 0.7).astype(jnp.float32)
+        x = jax.random.normal(kx, (I, K, B, 16)) + 0.3 * (y[..., None] * 2 - 1)
+        wb = {"features": x, "labels": y}
+        ab = {k: v[0] for k, v in wb.items()}
+        return ccfg, st0, wb, ab
+
+    def assert_trees_close(got, want, tol, label):
+        for (p, a), (_, b) in zip(jax.tree_util.tree_flatten_with_path(got)[0],
+                                  jax.tree_util.tree_flatten_with_path(want)[0]):
+            err = float(jnp.max(jnp.abs(a - b)))
+            assert err < tol, (label, jax.tree_util.keystr(p), err)
+""")
+
+
+def _run_sub(script: str, timeout=900):
+    r = subprocess.run([sys.executable, "-c", _PRELUDE + textwrap.dedent(script)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env={**os.environ, "PYTHONPATH": "src"},
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "ALL OK" in r.stdout, r.stdout[-2000:]
+
+
+def test_pauc_dro_shard_map_matches_oracle_and_payload():
+    """The CI matrix's --objective pauc_dro case: the sharded executor runs
+    the 4-field dual tree (coda AND codasca, and with server momentum) to
+    oracle equivalence, the compiled window stays ONE all-reduce of the
+    generic payload (model_bytes counts the extra λ dual), and the stage
+    boundary still ships one fp32 scalar (α only)."""
+    _run_sub("""
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    K, I = 8, 3
+    for label, kw in [
+        ("coda", dict(objective="pauc_dro")),
+        ("codasca", dict(objective="pauc_dro", algorithm="codasca")),
+        ("coda+momentum", dict(objective="pauc_dro", server_momentum=0.5)),
+    ]:
+        ccfg, st0, wb, ab = make_case(K, I, **kw)
+        exe = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh,
+                                 donate=False)
+        st = exe.place(st0)
+        rt = st0
+        wstep = codasca.window_step if ccfg.algorithm == "codasca" \\
+            else coda.window_step
+        for _ in range(2):
+            st, losses = exe.window_step(st, wb, 0.1)
+            rt, rl = wstep(mcfg, ccfg, rt, wb, 0.1)
+        st2 = exe.stage_end(st, ab)
+        rt2 = coda.stage_end(mcfg, ccfg, rt, ab, resync=False)
+        assert_trees_close(st, rt, 1e-5, label + "/window")
+        assert_trees_close(st2, rt2, 1e-5, label + "/stage")
+        np.testing.assert_allclose(np.asarray(jnp.mean(losses, axis=1)),
+                                   np.asarray(rl), atol=1e-5)
+
+        payload = coda.window_payload_bytes(st0)
+        txt = exe.window_fn(st0, wb).lower(
+            st0, wb, jnp.float32(0.1)).compile().as_text()
+        H.verify_window_payload(txt, payload)
+        stxt = exe.stage_fn(st0, ab).lower(st0, ab).compile().as_text()
+        sops = H.collective_ops(stxt)
+        assert len(sops) == 1 and sops[0]["bytes"] == 4, sops
+        print("OK", label, "payload", payload)
+    # the 4th dual really is on the wire: +4 bytes vs the AUC payload
+    c_auc, s_auc, _, _ = make_case(K, I)
+    assert coda.model_bytes(st0) == coda.model_bytes(s_auc) + 4
+    print("ALL OK")
+    """)

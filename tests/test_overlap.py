@@ -55,7 +55,7 @@ _PRELUDE = textwrap.dedent("""
 
     def pair_meta(st0, K, chunks, algorithm):
         # (hops, chains) for the two rings of a fused window pair
-        mats, _, _, _ = bucketing._state_mats(st0)
+        mats, _, _ = bucketing._state_mats(st0)
         if algorithm == "codasca":
             mats = mats * 2      # the variates ride the same dtype buckets
         ring = bucketing.RingSpec("data", K, chunks)

@@ -57,7 +57,7 @@ def test_known_specs_coda_state_layout():
     sh = R.state_shardings(state_shapes, mesh, "replica", multi_pod=True)
     wq = sh["params"]["layers"]["attn"]["wq"].spec
     assert wq == P(("pod", "data"), None, None, "model")
-    assert sh["alpha"].spec == P(("pod", "data"))
+    assert sh["duals"]["alpha"].spec == P(("pod", "data"))
     assert sh["params"]["score_head"]["w"].spec[0] == ("pod", "data")
 
 
