@@ -29,6 +29,12 @@ deliverable.  Prints ``name,us_per_call,derived`` CSV rows.
                   bytes at bitwise-equal routing across dbrx/arctic
                   shapes, plus the analytic buffer ratio for the REAL
                   configs (the E/(2·top_k) acceptance bound)
+  serve_load    — continuous-batching serving tier: synthetic-trace load
+                  (batch / poisson / bursty arrivals) through the serving
+                  engine, reporting p50/p99 TTFT, p50/p99 completion
+                  latency and tokens/s; asserts batched chunked prefill
+                  beats the token-per-tick engine at bitwise-identical
+                  generated tokens per request
   roofline      — per (arch × shape × mesh) three-term roofline from the
                   dry-run artifacts (run repro.launch.dryrun first)
 
@@ -601,6 +607,112 @@ def bench_moe_dispatch(fast=False, smoke=False):
 
 
 # --------------------------------------------------------------------------
+# serving (continuous-batching engine under synthetic load)
+# --------------------------------------------------------------------------
+def bench_serve_load(fast=False, smoke=False):
+    """The serving tentpole's measurement: the continuous-batching engine
+    under synthetic traces.
+
+    (a) ``batch`` trace (everything arrives at t=0 — engine-bound):
+        batched chunked prefill (``prefill_chunk=8``) vs the old
+        token-per-tick behaviour (``prefill_chunk=1``) on the SAME trace.
+        Acceptance, asserted here: per-request generated tokens are
+        bitwise identical (the masked chunk step is an exact batching of
+        ``serve_step``) and the chunked engine wins on tokens/s.  Both
+        engines are warmed first so the comparison times steady-state
+        serving, not compilation (``engine._chunk_step`` is module-level
+        jit — same (cfg, shapes, chunk) reuses the compiled programs).
+    (b) ``poisson`` arrivals at a fixed rate with the prefix cache on and
+        a shared-prefix prompt pool — the latency-percentile rows.
+    (c) ``bursty`` arrivals — tail-latency under admission pressure.
+
+    Every trace emits p50/p99 TTFT, p50/p99 completion latency and
+    tokens/s rows plus a structured record for the JSON artifact."""
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.serving import loadgen as LG
+    from repro.serving.engine import Request, ServingEngine
+
+    arch = "stablelm-1.6b"
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    SLOTS, MAX_LEN, CHUNK = 4, 64, 8
+    n = 8 if smoke else (12 if fast else 24)
+
+    def engine(chunk, **kw):
+        return ServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                             prefill_chunk=chunk, **kw)
+
+    def rows(tag, m, extra=""):
+        emit(f"{tag}/tokens_per_s", 0.0, round(m["tokens_per_s"], 1))
+        emit(f"{tag}/ttft_ms", 0.0,
+             f"p50={m['ttft_p50_ms']:.1f};p99={m['ttft_p99_ms']:.1f}")
+        emit(f"{tag}/latency_ms", 0.0,
+             f"p50={m['latency_p50_ms']:.1f};p99={m['latency_p99_ms']:.1f}")
+        emit(f"{tag}/served", 0.0,
+             f"completed={m['completed']}/{m['n_requests']};"
+             f"ticks={m['ticks']};prefilled={m['tokens_prefilled']};"
+             f"decoded={m['tokens_decoded']}{extra}")
+
+    # warm both compiled programs (C ∈ {1, CHUNK}) before any timing
+    for chunk in (1, CHUNK):
+        e = engine(chunk)
+        e.add_request(Request(uid=-1, prompt=list(range(1, 12)),
+                              max_new_tokens=2))
+        e.run()
+
+    # (a) chunked prefill vs token-per-tick, bitwise-identical outputs
+    batch_kw = dict(kind="batch", n_requests=n, prompt_len=(24, 57),
+                    max_new=(2, 5), seed=3)
+    res = {}
+    for label, chunk in (("token_per_tick", 1), ("chunked", CHUNK)):
+        eng = engine(chunk)
+        trace = LG.make_trace(LG.TraceConfig(**batch_kw), cfg.vocab_size)
+        reqs, wall = LG.run_trace(eng, trace)
+        res[label] = (reqs, LG.summarize(reqs, wall, eng))
+        rows(f"serve_load/batch/{label}", res[label][1])
+    toks_equal = all(
+        a.generated == b.generated
+        for a, b in zip(res["token_per_tick"][0], res["chunked"][0]))
+    speedup = (res["chunked"][1]["tokens_per_s"]
+               / res["token_per_tick"][1]["tokens_per_s"])
+    # the acceptance criteria: exact batching, and batching must pay
+    assert toks_equal, "chunked prefill diverged from token-per-tick"
+    assert speedup > 1.0, f"chunked prefill did not win: {speedup:.3f}x"
+    emit("serve_load/batch/chunked_speedup", 0.0,
+         f"{speedup:.2f}x;tokens_identical={toks_equal}")
+
+    # (b) poisson arrivals + prefix cache over a shared-prefix prompt pool
+    # (c) bursty arrivals
+    paced = [("poisson", dict(kind="poisson", rate=48.0, n_requests=n,
+                              prompt_len=(16, 49), max_new=(2, 6),
+                              prefix_pool=2, prefix_len=16, seed=1),
+              dict(prefix_cache_size=8)),
+             ("bursty", dict(kind="bursty", rate=32.0, burst_size=SLOTS * 2,
+                             n_requests=n, prompt_len=(16, 49),
+                             max_new=(2, 6), seed=2), {})]
+    for name, trace_kw, eng_kw in paced:
+        eng = engine(CHUNK, **eng_kw)
+        trace = LG.make_trace(LG.TraceConfig(**trace_kw), cfg.vocab_size)
+        reqs, wall = LG.run_trace(eng, trace)
+        m = LG.summarize(reqs, wall, eng)
+        extra = (f";prefix_hits={m['prefix_hits']}"
+                 f";prefix_misses={m['prefix_misses']}"
+                 if eng_kw.get("prefix_cache_size") else "")
+        rows(f"serve_load/{name}", m, extra)
+        emit_comm(f"serve_load/{name}", {
+            "arch": arch, "knobs": {"slots": SLOTS, "max_len": MAX_LEN,
+                                    "prefill_chunk": CHUNK, **eng_kw},
+            "trace": trace_kw, "metrics": m})
+    emit_comm("serve_load/batch", {
+        "arch": arch,
+        "knobs": {"slots": SLOTS, "max_len": MAX_LEN},
+        "trace": batch_kw,
+        "chunked_speedup": speedup, "tokens_identical": toks_equal,
+        "metrics": {label: r[1] for label, r in res.items()}})
+
+
+# --------------------------------------------------------------------------
 # roofline (deliverable g — reads the dry-run artifacts)
 # --------------------------------------------------------------------------
 def bench_roofline(fast=False, smoke=False):
@@ -648,6 +760,7 @@ BENCHES = {
     "hetero_window": bench_hetero_window,
     "objective_sweep": bench_objective_sweep,
     "moe_dispatch": bench_moe_dispatch,
+    "serve_load": bench_serve_load,
     "roofline": bench_roofline,
 }
 

@@ -46,7 +46,9 @@ def main():
     dt = time.time() - t0
     for r in reqs:
         print(f"  req {r.uid:2d}: prompt len {len(r.prompt):2d} -> "
-              f"{len(r.generated)} tokens: {r.generated}")
+              f"{len(r.generated)} tokens "
+              f"(ttft {r.ttft * 1e3:6.1f} ms, score {r.score:+.3f}): "
+              f"{r.generated}")
     n = sum(len(r.generated) for r in reqs)
     print(f"\nserved {len(reqs)} requests / {n} tokens in {dt:.2f}s "
           f"({n / dt:.1f} tok/s on CPU, arch={mcfg.name})")

@@ -7,8 +7,16 @@ Each experiment is a (tag, overrides) pair fed to
 summarized into §Perf by hand (the hypothesis log lives in EXPERIMENTS.md).
 
   PYTHONPATH=src python scripts/hillclimb.py --exp <name>
+
+Serving-path variants (``--serve-exp``) hillclimb the continuous-batching
+engine's knobs instead: each experiment is an (engine_kw, trace_kw) override
+pair run through ``serving.loadgen.serve_load_report``; the latency/
+throughput record lands in ``benchmarks/artifacts/serve/<name>.json``.
+
+  PYTHONPATH=src python scripts/hillclimb.py --serve-exp <name>
 """
 import argparse
+import json
 import os
 import sys
 
@@ -58,10 +66,51 @@ def experiments():
     }
 
 
+def serve_experiments():
+    """name -> (engine_kw overrides, trace_kw overrides) for the serving
+    engine's batching knobs (slots, prefill chunk, admission policy, prefix
+    cache) under a shared poisson trace."""
+    trace = {"kind": "poisson", "rate": 48.0, "n_requests": 24,
+             "prompt_len": (16, 49), "max_new": (2, 6), "seed": 1}
+    return {
+        "serve_base": ({}, dict(trace)),
+        "serve_slots2": ({"slots": 2}, dict(trace)),
+        "serve_slots8": ({"slots": 8}, dict(trace)),
+        "serve_chunk1": ({"prefill_chunk": 1}, dict(trace)),
+        "serve_chunk16": ({"prefill_chunk": 16}, dict(trace)),
+        "serve_sjf": ({"admission": "sjf"}, dict(trace)),
+        "serve_prefix": ({"prefix_cache_size": 8},
+                         dict(trace, prefix_pool=2, prefix_len=16)),
+        "serve_bursty": ({}, dict(trace, kind="bursty", burst_size=8,
+                                  rate=32.0)),
+    }
+
+
+def run_serve(name: str) -> None:
+    from repro.serving.loadgen import serve_load_report
+    engine_kw, trace_kw = serve_experiments()[name]
+    rec = serve_load_report(engine_kw=engine_kw, trace_kw=trace_kw)
+    out_dir = os.path.join(HERE, "benchmarks", "artifacts", "serve")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+    m = rec["metrics"]
+    print(f"{name}: tokens/s={m['tokens_per_s']:.1f} "
+          f"ttft_p50={m['ttft_p50_ms']:.1f}ms "
+          f"latency_p99={m['latency_p99_ms']:.1f}ms -> {path}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--exp", required=True, choices=list(experiments()))
+    ap.add_argument("--exp", choices=list(experiments()))
+    ap.add_argument("--serve-exp", choices=list(serve_experiments()))
     args = ap.parse_args()
+    if bool(args.exp) == bool(args.serve_exp):
+        ap.error("pass exactly one of --exp / --serve-exp")
+    if args.serve_exp:
+        run_serve(args.serve_exp)
+        return
     from repro.launch.dryrun import run_pair
     arch, shape, mp, ov = experiments()[args.exp]
     if "moe_capacity" in ov:

@@ -41,9 +41,10 @@ Registered objectives:
                    projected descent; the loss gradient reweights negatives
                    by softmax(ℓ_j/λ) — hard negatives dominate, which is
                    exactly the FPR ≤ β head of the ROC curve.
-  * ``bce``      — dual-free binary cross-entropy (the baseline's loss
-                   minimization strawman): ``init_duals`` is the empty tree
-                   and the same executors run it with zero dual payload.
+  * ``bce``      — dual-free logit-space binary cross-entropy (the
+                   baseline's loss minimization strawman): ``init_duals`` is
+                   the empty tree and the same executors run it with zero
+                   dual payload.
 
 ``auc_F`` is a differentiable fused primitive: forward and *all* partials
 come from one pass over the scores (``kernels.ops.auc_loss`` — Pallas on TPU,
@@ -333,7 +334,15 @@ class BCEObjective(Objective):
     """Dual-free binary cross-entropy — the introduction's "standard loss
     minimization" strawman, routed through the same seam: the dual tree is
     empty, so the executors run pure distributed SGD with zero dual payload
-    (``baselines.bce_step`` shares this loss instead of its own closure)."""
+    (``baselines.bce_step`` shares this loss instead of its own closure).
+
+    The scores ``h`` every executor feeds this are the *unbounded*
+    ``score_head`` logits, so the loss is logit-space BCE
+    (``-[y·log σ(h) + (1−y)·log σ(−h)]`` via the stable ``log_sigmoid``).
+    The old form clipped ``h`` into (1e-6, 1−1e-6) and took logs — treating
+    a logit as a probability — so any score outside (0, 1) saturated the
+    clip and its gradient vanished exactly; pinned against the explicit
+    sigmoid+log oracle in tests/test_objective.py."""
 
     name = "bce"
     metric_name = "auc"
@@ -345,9 +354,10 @@ class BCEObjective(Objective):
         return {}
 
     def loss(self, h, y, duals):
-        h = jnp.clip(h, 1e-6, 1 - 1e-6)
+        h = h.astype(jnp.float32)
         y = y.astype(jnp.float32)
-        return -jnp.mean(y * jnp.log(h) + (1 - y) * jnp.log(1 - h))
+        return -jnp.mean(y * jax.nn.log_sigmoid(h)
+                         + (1.0 - y) * jax.nn.log_sigmoid(-h))
 
 
 REGISTRY = {"auc": AUCObjective, "pauc_dro": PAUCDROObjective,

@@ -1,19 +1,24 @@
-"""Serving launcher: runs the continuous-batching engine on a reduced config
-(CPU) with synthetic requests.
+"""Serving launcher: drives the continuous-batching engine on a reduced
+config (CPU) with a synthetic request trace and prints the latency summary.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+      --trace poisson --rate 32 --requests 16 --prefix-cache 8
+
+Batching knobs (--slots, --prefill-chunk, --admission, --queue-limit,
+--prefix-cache) mirror ``ServingEngine``'s; trace knobs (--trace, --rate,
+--deadline) mirror ``loadgen.TraceConfig``'s.  ``scripts/hillclimb.py
+--serve-exp`` sweeps the same knobs into JSON artifacts.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import init_params
-from repro.serving import Request, ServingEngine
+from repro.serving import ServingEngine
+from repro.serving import loadgen as LG
 
 
 def main():
@@ -23,30 +28,44 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--queue-limit", type=int, default=None)
+    ap.add_argument("--admission", default="fifo", choices=["fifo", "sjf"])
+    ap.add_argument("--prefix-cache", type=int, default=0,
+                    help="LRU entries for the prompt-prefix cache (0 = off)")
+    ap.add_argument("--trace", default="batch",
+                    choices=["batch", "poisson", "bursty"])
+    ap.add_argument("--rate", type=float, default=16.0,
+                    help="mean arrivals/s for poisson/bursty traces")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds after arrival")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     mcfg = get_smoke_config(args.arch)
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(key, mcfg)
-    eng = ServingEngine(mcfg, params, slots=args.slots, max_len=args.max_len)
-
-    rng = np.random.RandomState(args.seed)
-    reqs = []
-    for i in range(args.requests):
-        prompt = rng.randint(0, mcfg.vocab_size, size=rng.randint(4, 17)).tolist()
-        req = Request(uid=i, prompt=prompt, max_new_tokens=args.max_new)
-        reqs.append(req)
-        eng.add_request(req)
-
-    t0 = time.time()
-    eng.run()
-    dt = time.time() - t0
-    n_tok = sum(len(r.generated) for r in reqs)
+    params = init_params(jax.random.PRNGKey(args.seed), mcfg)
+    eng = ServingEngine(mcfg, params, slots=args.slots, max_len=args.max_len,
+                        prefill_chunk=args.prefill_chunk,
+                        queue_limit=args.queue_limit,
+                        admission=args.admission,
+                        prefix_cache_size=args.prefix_cache)
+    tcfg = LG.TraceConfig(kind=args.trace, rate=args.rate,
+                          n_requests=args.requests,
+                          max_new=(args.max_new, args.max_new + 1),
+                          deadline=args.deadline, seed=args.seed)
+    reqs, wall = LG.run_trace(eng, LG.make_trace(tcfg, mcfg.vocab_size))
     for r in reqs[:4]:
-        print(f"req {r.uid}: prompt[{len(r.prompt)}] -> {r.generated}")
-    print(f"served {len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / max(dt, 1e-9):.1f} tok/s, slots={args.slots})")
+        print(f"req {r.uid}: prompt[{len(r.prompt)}] {r.status} "
+              f"-> {r.generated}")
+    m = LG.summarize(reqs, wall, eng)
+    print(f"served {m['completed']}/{m['n_requests']} requests "
+          f"({m['rejected']} rejected, {m['expired']} expired), "
+          f"{m['generated_tokens']} tokens in {m['wall_s']:.2f}s "
+          f"({m['tokens_per_s']:.1f} tok/s, slots={args.slots}, "
+          f"chunk={args.prefill_chunk})")
+    print(f"ttft p50/p99: {m['ttft_p50_ms']:.1f}/{m['ttft_p99_ms']:.1f} ms; "
+          f"latency p50/p99: {m['latency_p50_ms']:.1f}/"
+          f"{m['latency_p99_ms']:.1f} ms; ticks={m['ticks']}")
     assert all(r.done for r in reqs)
 
 

@@ -1,3 +1,4 @@
-from repro.serving import decode, engine  # noqa: F401
-from repro.serving.decode import cache_specs, init_cache, prefill, serve_step  # noqa: F401
-from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving import decode, engine, loadgen  # noqa: F401
+from repro.serving.decode import (  # noqa: F401
+    cache_specs, init_cache, masked_chunk_step, prefill, serve_step)
+from repro.serving.engine import Request, ServingEngine, TicksExhausted  # noqa: F401

@@ -149,6 +149,50 @@ def serve_step(cfg: ModelConfig, params, cache, tokens, positions, *,
 # --------------------------------------------------------------------------
 # prefill (fills the cache from a prompt; used by the serving engine)
 # --------------------------------------------------------------------------
+def masked_chunk_step(cfg: ModelConfig, params, cache, tokens, positions,
+                      n_tokens, *, use_window: bool = True,
+                      impl: str = "auto"):
+    """Batched chunked prefill/decode: feed each batch row up to C tokens.
+
+    The continuous-batching engine's device step — the same scan over
+    ``serve_step`` that ``prefill`` runs, generalized to heterogeneous rows:
+    slots mid-prefill consume up to C prompt tokens per call while slots in
+    decode (or free slots) consume one (or zero).
+
+      tokens:    [B, C] int32 — row s feeds tokens[s, :n_tokens[s]]
+      positions: [B]    int32 — row s's first token lands at positions[s]
+      n_tokens:  [B]    int32 — live steps per row (0 => row is idle)
+
+    Rows are independent through the whole model (attention reads only the
+    row's own cache line; routing/norms are per-token), so masking is a
+    per-row select: step t computes ``serve_step`` for every row but rows
+    with ``t >= n_tokens`` keep their previous cache bitwise.  Every cache
+    leaf carries the row (slot) axis at dim 0 — the engine-wide contract
+    ``ServingEngine._reset_slot`` enforces.
+
+    Returns ``(cache, argmax_tokens [B, C] int32, score_logits [B, C] f32)``;
+    outputs at dead steps (t >= n_tokens[s]) are garbage and must be ignored
+    by the caller.
+    """
+    B, C = tokens.shape
+
+    def body(cache, t):
+        live = t < n_tokens
+        logits, score, new_cache = serve_step(
+            cfg, params, cache, tokens[:, t][:, None], positions + t,
+            use_window=use_window, impl=impl)
+
+        def sel(n, o):
+            return jnp.where(live.reshape((B,) + (1,) * (n.ndim - 1)), n, o)
+
+        cache = jax.tree_util.tree_map(sel, new_cache, cache)
+        return cache, (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                       score.astype(jnp.float32))
+
+    cache, (toks_out, scores) = jax.lax.scan(body, cache, jnp.arange(C))
+    return cache, toks_out.T, scores.T
+
+
 def prefill(cfg: ModelConfig, params, cache, tokens, *, use_window=True,
             impl: str = "auto"):
     """Sequential prefill via serve_step (simple and cache-exact; the batch

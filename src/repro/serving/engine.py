@@ -1,16 +1,44 @@
-"""A small-but-real batched serving engine on top of ``serve_step``.
+"""Continuous-batching serving engine for trained AUC/pAUC scorers.
 
-Continuous batching over a fixed number of slots: requests (prompt token
-lists) are admitted into free slots, prefilled token-by-token through the
-same jitted ``serve_step`` (cache-exact), then decoded greedily until EOS or
-``max_new_tokens``.  Finished slots are recycled.  This is the driver behind
-``examples/serve_requests.py`` and the serving integration tests.
+The engine multiplexes a fixed number of KV-cache *slots* over a stream of
+requests:
+
+  * **Admission** — a bounded FIFO (or shortest-job-first) queue; requests
+    are validated at the door (empty prompts rejected, over-``max_len``
+    prompts truncated or rejected — never silently clamp-written past the
+    cache) and stamped with arrival/admission/first-token/completion
+    timestamps for latency accounting.  Optional per-request deadlines
+    expire requests that wait or run too long.
+  * **Batched chunked prefill** — every engine tick issues ONE device call
+    (``decode.masked_chunk_step``, the same scan over ``serve_step`` that
+    ``decode.prefill`` runs): slots mid-prefill consume up to
+    ``prefill_chunk`` prompt tokens while slots in decode consume their one
+    feedback token, so prompt ingestion is amortized across the batch
+    instead of one token per tick per slot.
+  * **Prefix cache** — optionally (``prefix_cache_size > 0``) the
+    post-prompt cache slice of each completed prefill is kept in an LRU
+    keyed on the prompt tokens; a new request whose prompt extends a cached
+    prefix skips straight to the suffix (exact: the cached slice *is* the
+    state after the shared tokens).
+  * **Slot recycling** — ``_reset_slot`` writes a fresh (or prefix-cached)
+    state into the slot along the explicit slot axis (dim 0 of every cache
+    leaf) and raises on any leaf that violates the contract rather than
+    silently leaving it stale.
+
+Decoding is greedy; the per-request ``score`` field records the AUC head's
+logit at the last prompt token (the scorer output this serving path
+exists to deliver).  Encoder-decoder configs are not served here (their
+prefill consumes frames, not tokens).  Drivers: ``launch/serve.py``,
+``examples/serve_requests.py``, ``benchmarks/run.py --only serve_load``
+(via ``serving.loadgen``), and tests/test_serving_engine.py.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import List, Optional
+import time
+from collections import OrderedDict, deque
+from functools import partial
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,96 +48,311 @@ from repro.configs.base import ModelConfig
 from repro.serving import decode as D
 
 
+class TicksExhausted(RuntimeError):
+    """``run()`` ran out of ticks with requests still queued or active."""
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: List[int]
     max_new_tokens: int = 16
     eos_id: int = -1
+    deadline: Optional[float] = None     # seconds after arrival; None = none
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    status: str = "new"                  # new|queued|active|done|rejected|expired
+    reject_reason: str = ""
+    truncated: bool = False
+    prompt_used: List[int] = dataclasses.field(default_factory=list)
+    prefix_hit_tokens: int = 0
+    score: Optional[float] = None        # AUC-head logit at the last prompt token
+    # latency accounting (engine clock, seconds)
+    t_arrival: Optional[float] = None
+    t_admitted: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_complete: Optional[float] = None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None or self.t_arrival is None:
+            return None
+        return self.t_first_token - self.t_arrival
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.t_complete is None or self.t_arrival is None:
+            return None
+        return self.t_complete - self.t_arrival
+
+
+@partial(jax.jit, static_argnums=(0,), static_argnames=("use_window", "impl"))
+def _chunk_step(cfg, params, cache, tokens, positions, n_tokens, *,
+                use_window, impl):
+    return D.masked_chunk_step(cfg, params, cache, tokens, positions,
+                               n_tokens, use_window=use_window, impl=impl)
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, use_window: bool = True,
-                 impl: str = "auto"):
+                 impl: str = "auto", prefill_chunk: int = 8,
+                 queue_limit: Optional[int] = None, admission: str = "fifo",
+                 on_overflow: str = "truncate", prefix_cache_size: int = 0,
+                 clock: Callable[[], float] = time.monotonic):
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "encoder-decoder configs need encode_for_decode; the engine "
+                "serves token-prompt architectures")
+        if admission not in ("fifo", "sjf"):
+            raise ValueError(f"unknown admission policy {admission!r}")
+        if on_overflow not in ("truncate", "reject"):
+            raise ValueError(f"unknown overflow policy {on_overflow!r}")
+        if prefill_chunk < 1 or slots < 1 or max_len < 2:
+            raise ValueError((prefill_chunk, slots, max_len))
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.use_window = use_window
         self.impl = impl
+        self.prefill_chunk = prefill_chunk
+        self.queue_limit = queue_limit
+        self.admission = admission
+        self.on_overflow = on_overflow
+        self.prefix_cache_size = prefix_cache_size
+        self._clock = clock
         self.cache = D.init_cache(cfg, slots, max_len, use_window=use_window,
                                   dtype=jnp.float32)
+        self._fresh = D.init_cache(cfg, 1, max_len, use_window=use_window,
+                                   dtype=jnp.float32)
         self.queue: deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * slots
-        self.pos = np.zeros(slots, np.int64)        # next position per slot
-        self.pending = [deque() for _ in range(slots)]  # unconsumed prompt tokens
-        self._step = jax.jit(
-            lambda params, cache, tok, pos: D.serve_step(
-                cfg, params, cache, tok, pos, use_window=use_window,
-                impl=impl))
+        self.pos = np.zeros(slots, np.int32)            # next position per slot
+        self.pending = [deque() for _ in range(slots)]  # unconsumed prompt toks
+        self._prefix: OrderedDict = OrderedDict()       # prompt tuple -> slice
+        # counters
+        self.ticks = 0
+        self.tokens_prefilled = 0
+        self.tokens_decoded = 0
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.n_completed = 0
+        self.n_rejected = 0
+        self.n_expired = 0
 
-    def add_request(self, req: Request):
+    # -- admission ----------------------------------------------------------
+    def add_request(self, req: Request) -> bool:
+        """Validate and enqueue.  Returns False (request finalized with
+        ``status="rejected"``) on empty prompts, non-positive generation
+        budgets, a full queue, or — under ``on_overflow="reject"`` — prompts
+        that do not fit the cache."""
+        if req.t_arrival is None:
+            req.t_arrival = self._clock()
+        if not req.prompt:
+            return self._reject(req, "empty_prompt")
+        if req.max_new_tokens < 1:
+            return self._reject(req, "non_positive_max_new_tokens")
+        if self.queue_limit is not None and len(self.queue) >= self.queue_limit:
+            return self._reject(req, "queue_full")
+        limit = self.max_len - 1   # leave >=1 position for decode feedback
+        if len(req.prompt) > limit:
+            if self.on_overflow == "reject":
+                return self._reject(req, "prompt_too_long")
+            req.truncated = True
+            req.prompt_used = list(req.prompt[:limit])
+        else:
+            req.prompt_used = list(req.prompt)
+        req.status = "queued"
         self.queue.append(req)
+        return True
 
-    def _admit(self):
+    def _reject(self, req: Request, reason: str) -> bool:
+        req.status = "rejected"
+        req.reject_reason = reason
+        req.done = True
+        req.t_complete = self._clock()
+        self.n_rejected += 1
+        return False
+
+    def _expire(self, now: float) -> None:
+        keep = deque()
+        for req in self.queue:
+            if req.deadline is not None and now - req.t_arrival > req.deadline:
+                self._finish(req, None, now, status="expired")
+            else:
+                keep.append(req)
+        self.queue = keep
+        for s, req in enumerate(self.active):
+            if (req is not None and req.deadline is not None
+                    and now - req.t_arrival > req.deadline):
+                self._finish(req, s, now, status="expired")
+
+    def _pop_next(self) -> Request:
+        if self.admission == "sjf":
+            best = min(range(len(self.queue)),
+                       key=lambda i: len(self.queue[i].prompt_used))
+            self.queue.rotate(-best)
+            req = self.queue.popleft()
+            self.queue.rotate(best)
+            return req
+        return self.queue.popleft()
+
+    def _admit(self, now: float) -> None:
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
-                req = self.queue.popleft()
+                req = self._pop_next()
+                req.status = "active"
+                req.t_admitted = now
+                source, hit = self._prefix_lookup(req)
+                self.cache = self._reset_slot(s, source)
                 self.active[s] = req
-                self.pos[s] = 0
-                self.pending[s] = deque(req.prompt)
-                self.cache = self._reset_slot(s)
+                self.pos[s] = hit
+                self.pending[s] = deque(req.prompt_used[hit:])
 
-    def _reset_slot(self, s: int):
-        fresh = D.init_cache(self.cfg, 1, self.max_len,
-                             use_window=self.use_window, dtype=jnp.float32)
+    # -- slot recycling -----------------------------------------------------
+    def _reset_slot(self, s: int, source=None):
+        """Write ``source`` (default: the fresh zero state) into slot ``s``.
+
+        Every cache leaf carries the slot axis at dim 0 — the contract the
+        masked chunk step relies on.  A leaf that violates it raises instead
+        of being silently skipped (the old ``hasattr(old, "at")`` guard left
+        e.g. numpy leaves of a host-roundtripped cache permanently stale)."""
+        src = self._fresh if source is None else source
 
         def put(old, new):
-            return old.at[s:s + 1].set(new) if hasattr(old, "at") else old
+            old = jnp.asarray(old)   # host/numpy-restored caches still reset
+            if (old.ndim < 1 or old.shape[0] != self.slots
+                    or old.shape[1:] != new.shape[1:]):
+                raise ValueError(
+                    f"cache leaf {old.shape} does not carry the slot axis at "
+                    f"dim 0 (want [{self.slots}, ...] matching {new.shape})")
+            return old.at[s:s + 1].set(new.astype(old.dtype))
 
-        return jax.tree_util.tree_map(put, self.cache, fresh)
+        return jax.tree_util.tree_map(put, self.cache, src)
 
+    # -- prefix cache -------------------------------------------------------
+    def _prefix_lookup(self, req: Request):
+        """Longest cached prompt that is a strict prefix of this request's
+        prompt (capped at len-1 so at least one prompt token runs through
+        prefill and produces the first-token logits).  Returns
+        (cache_slice | None, n_tokens_covered)."""
+        if not self.prefix_cache_size:
+            return None, 0
+        pu = req.prompt_used
+        best = None
+        for key in self._prefix:
+            if (len(key) <= len(pu) - 1
+                    and (best is None or len(key) > len(best))
+                    and list(key) == pu[:len(key)]):
+                best = key
+        if best is None:
+            self.prefix_misses += 1
+            return None, 0
+        self._prefix.move_to_end(best)
+        self.prefix_hits += 1
+        req.prefix_hit_tokens = len(best)
+        return self._prefix[best], len(best)
+
+    def _prefix_store(self, s: int, req: Request, upto: int) -> None:
+        """Snapshot slot ``s`` as the state after ``prompt_used[:upto]``.
+        Called at every prefill chunk boundary (so requests that merely
+        *share* a prefix — not extend a full prompt — can hit) and at prompt
+        completion."""
+        key = tuple(req.prompt_used[:upto])
+        self._prefix[key] = jax.tree_util.tree_map(
+            lambda a: a[s:s + 1], self.cache)
+        self._prefix.move_to_end(key)
+        while len(self._prefix) > self.prefix_cache_size:
+            self._prefix.popitem(last=False)
+
+    # -- the tick -----------------------------------------------------------
     def step(self) -> int:
-        """One engine tick: feeds every active slot one token (prompt token
-        during prefill, previously-sampled token during decode).  Returns the
-        number of active requests."""
-        self._admit()
-        tok = np.zeros((self.slots, 1), np.int32)
-        pos = np.zeros((self.slots,), np.int32)
-        feeding = [False] * self.slots
+        """One engine tick: expire deadlines, admit, and feed every active
+        slot — up to ``prefill_chunk`` prompt tokens for slots mid-prefill,
+        the previous output token for slots in decode — through ONE device
+        call.  Returns the number of requests still in flight (active +
+        queued)."""
+        now = self._clock()
+        self._expire(now)
+        self._admit(now)
+        C = self.prefill_chunk
+        toks = np.zeros((self.slots, C), np.int32)
+        pos0 = np.zeros((self.slots,), np.int32)
+        nst = np.zeros((self.slots,), np.int32)
+        prefilling = [False] * self.slots
         for s, req in enumerate(self.active):
             if req is None:
                 continue
+            pos0[s] = self.pos[s]
             if self.pending[s]:
-                tok[s, 0] = self.pending[s].popleft()
-            elif req.generated:
-                tok[s, 0] = req.generated[-1]
+                k = min(C, len(self.pending[s]))
+                for t in range(k):
+                    toks[s, t] = self.pending[s].popleft()
+                nst[s] = k
+                prefilling[s] = True
             else:
-                continue
-            pos[s] = self.pos[s]
-            feeding[s] = True
-        if not any(feeding):
-            return 0
-        logits, _, self.cache = self._step(self.params, self.cache,
-                                           jnp.asarray(tok), jnp.asarray(pos))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                toks[s, 0] = req.generated[-1]
+                nst[s] = 1
+        if not nst.any():
+            return len(self.queue)
+        self.ticks += 1
+        # decode-only ticks run a 1-step call: two compiled programs total
+        # (C ∈ {1, prefill_chunk}), no masked dead steps when nobody prefills
+        C_live = C if any(prefilling) else 1
+        self.cache, out_toks, out_scores = _chunk_step(
+            self.cfg, self.params, self.cache, jnp.asarray(toks[:, :C_live]),
+            jnp.asarray(pos0), jnp.asarray(nst),
+            use_window=self.use_window, impl=self.impl)
+        out_toks = np.asarray(out_toks)
+        out_scores = np.asarray(out_scores)
+        t_out = self._clock()
         for s, req in enumerate(self.active):
-            if req is None or not feeding[s]:
+            if req is None or nst[s] == 0:
                 continue
-            self.pos[s] += 1
-            if not self.pending[s]:  # decoding phase: the output token counts
-                req.generated.append(int(nxt[s]))
-                if (len(req.generated) >= req.max_new_tokens
-                        or int(nxt[s]) == req.eos_id
-                        or self.pos[s] >= self.max_len - 1):
-                    req.done = True
-                    self.active[s] = None
+            k = int(nst[s])
+            self.pos[s] += k
+            if prefilling[s]:
+                self.tokens_prefilled += k
+                if self.prefix_cache_size:
+                    self._prefix_store(s, req, int(self.pos[s]))
+                if not self.pending[s]:   # prompt consumed: first token is out
+                    req.score = float(out_scores[s, k - 1])
+                    self._emit(s, req, int(out_toks[s, k - 1]), t_out)
+            else:
+                self.tokens_decoded += 1
+                self._emit(s, req, int(out_toks[s, 0]), t_out)
         return sum(r is not None for r in self.active) + len(self.queue)
 
+    def _emit(self, s: int, req: Request, tok: int, now: float) -> None:
+        req.generated.append(tok)
+        if req.t_first_token is None:
+            req.t_first_token = now
+        if (len(req.generated) >= req.max_new_tokens or tok == req.eos_id
+                or self.pos[s] >= self.max_len - 1):
+            self._finish(req, s, now, status="done")
+
+    def _finish(self, req: Request, s: Optional[int], now: float, *,
+                status: str) -> None:
+        req.status = status
+        req.done = True
+        req.t_complete = now
+        if status == "done":
+            self.n_completed += 1
+        else:
+            self.n_expired += 1
+        if s is not None and self.active[s] is req:
+            self.active[s] = None
+
     def run(self, max_ticks: int = 10_000) -> None:
+        """Drive ``step`` until every request is finalized.  Raises
+        ``TicksExhausted`` (not a silent return) if ticks run out with
+        requests still queued or active."""
         for _ in range(max_ticks):
-            if self.step() == 0 and not self.queue:
+            if self.step() == 0:
                 return
+        if any(r is not None for r in self.active) or self.queue:
+            raise TicksExhausted(
+                f"{max_ticks} ticks exhausted with "
+                f"{sum(r is not None for r in self.active)} active and "
+                f"{len(self.queue)} queued requests")

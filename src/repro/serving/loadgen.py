@@ -1,0 +1,166 @@
+"""Synthetic-trace load generation + latency reporting for the serving engine.
+
+The ``serve_load`` benchmark tier (``benchmarks/run.py --only serve_load``),
+``launch/serve.py``, and ``scripts/hillclimb.py --serve-exp`` all drive the
+continuous-batching engine through this module:
+
+  * ``TraceConfig``/``make_trace`` — deterministic synthetic request traces:
+    ``batch`` (everything arrives at t=0 — the engine-bound comparison),
+    ``poisson`` (exponential inter-arrivals at ``rate`` req/s), and
+    ``bursty`` (``burst_size`` simultaneous arrivals per burst).  An optional
+    ``prefix_pool`` draws shared prompt prefixes so the engine's prefix
+    cache has something to hit.
+  * ``run_trace`` — paces a trace against the wall clock (arrivals before
+    "now" are submitted, then the engine ticks) until every request is
+    finalized.
+  * ``summarize`` — p50/p99 time-to-first-token, p50/p99 completion latency,
+    tokens/s, and the engine's tick/token/prefix counters — the JSON
+    artifact rows CI uploads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.engine import Request, ServingEngine
+
+
+@dataclasses.dataclass
+class TraceConfig:
+    kind: str = "poisson"              # poisson | bursty | batch
+    rate: float = 16.0                 # mean arrivals/s (poisson, bursty)
+    n_requests: int = 32
+    prompt_len: Tuple[int, int] = (8, 33)   # rng.randint [lo, hi)
+    max_new: Tuple[int, int] = (4, 9)
+    burst_size: int = 8
+    prefix_pool: int = 0               # >0: share prompts' first prefix_len toks
+    prefix_len: int = 12
+    eos_id: int = -1
+    deadline: Optional[float] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("poisson", "bursty", "batch"):
+            raise ValueError(f"unknown trace kind {self.kind!r}")
+
+
+def make_trace(tcfg: TraceConfig, vocab_size: int) -> List[Tuple[float, Request]]:
+    """[(arrival_s, Request)] sorted by arrival; fully seed-deterministic, so
+    the same config replayed through two engines compares like for like."""
+    rng = np.random.RandomState(tcfg.seed)
+    n = tcfg.n_requests
+    if tcfg.kind == "batch":
+        arrivals = np.zeros(n)
+    elif tcfg.kind == "poisson":
+        arrivals = np.cumsum(rng.exponential(1.0 / tcfg.rate, size=n))
+    else:  # bursty: burst_size simultaneous arrivals, bursts at rate req/s
+        arrivals = (np.arange(n) // tcfg.burst_size) * (tcfg.burst_size / tcfg.rate)
+    pool = [rng.randint(0, vocab_size, size=tcfg.prefix_len).tolist()
+            for _ in range(tcfg.prefix_pool)]
+    trace = []
+    for i in range(n):
+        plen = int(rng.randint(*tcfg.prompt_len))
+        if pool:
+            prefix = pool[int(rng.randint(len(pool)))]
+            tail = rng.randint(0, vocab_size,
+                               size=max(1, plen - len(prefix))).tolist()
+            prompt = prefix + tail
+        else:
+            prompt = rng.randint(0, vocab_size, size=plen).tolist()
+        req = Request(uid=i, prompt=prompt,
+                      max_new_tokens=int(rng.randint(*tcfg.max_new)),
+                      eos_id=tcfg.eos_id, deadline=tcfg.deadline)
+        trace.append((float(arrivals[i]), req))
+    return trace
+
+
+def run_trace(engine: ServingEngine, trace: List[Tuple[float, Request]], *,
+              max_ticks: int = 100_000) -> Tuple[List[Request], float]:
+    """Pace ``trace`` against the wall clock through ``engine``.  Returns
+    (requests, busy wall seconds).  Raises ``TicksExhausted``-style if the
+    engine cannot drain the trace within ``max_ticks`` device ticks."""
+    t0 = time.monotonic()
+    i, n = 0, len(trace)
+    in_flight = 0
+    while i < n or in_flight:
+        now = time.monotonic() - t0
+        while i < n and trace[i][0] <= now:
+            engine.add_request(trace[i][1])
+            i += 1
+        in_flight = engine.step()
+        if in_flight == 0 and i < n:
+            time.sleep(min(max(trace[i][0] - (time.monotonic() - t0), 0.0),
+                           0.05))
+        if engine.ticks > max_ticks:
+            raise RuntimeError(
+                f"trace not drained after {max_ticks} engine ticks "
+                f"({i}/{n} submitted, {in_flight} in flight)")
+    return [r for _, r in trace], time.monotonic() - t0
+
+
+def _pct(vals, q):
+    return float(np.percentile(vals, q)) if len(vals) else float("nan")
+
+
+def summarize(reqs: List[Request], wall: float,
+              engine: Optional[ServingEngine] = None) -> dict:
+    """The serve_load metrics record: latency percentiles + throughput +
+    engine counters."""
+    done = [r for r in reqs if r.status == "done"]
+    ttft = [r.ttft for r in done if r.ttft is not None]
+    lat = [r.latency for r in done if r.latency is not None]
+    n_tok = sum(len(r.generated) for r in done)
+    rec = {
+        "n_requests": len(reqs),
+        "completed": len(done),
+        "rejected": sum(r.status == "rejected" for r in reqs),
+        "expired": sum(r.status == "expired" for r in reqs),
+        "truncated": sum(r.truncated for r in reqs),
+        "generated_tokens": n_tok,
+        "tokens_per_s": n_tok / max(wall, 1e-9),
+        "wall_s": wall,
+        "ttft_p50_ms": _pct(ttft, 50) * 1e3,
+        "ttft_p99_ms": _pct(ttft, 99) * 1e3,
+        "latency_p50_ms": _pct(lat, 50) * 1e3,
+        "latency_p99_ms": _pct(lat, 99) * 1e3,
+    }
+    if engine is not None:
+        rec.update(ticks=engine.ticks,
+                   tokens_prefilled=engine.tokens_prefilled,
+                   tokens_decoded=engine.tokens_decoded,
+                   prefix_hits=engine.prefix_hits,
+                   prefix_misses=engine.prefix_misses)
+    return rec
+
+
+def serve_load_report(arch: str = "stablelm-1.6b", *, engine_kw: dict = None,
+                      trace_kw: dict = None, seed: int = 0) -> dict:
+    """One-stop runner for hillclimb/launch: build a smoke config + params,
+    serve one trace, return ``{"arch", "knobs", "trace", "metrics"}``."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    engine_kw = dict(engine_kw or {})
+    engine_kw.setdefault("slots", 4)
+    engine_kw.setdefault("max_len", 64)
+    engine_kw.setdefault("prefill_chunk", 8)
+    tcfg = TraceConfig(**(trace_kw or {}))
+    # warm the jit cache with a throwaway engine so the timed trace measures
+    # steady-state serving, not compilation (the chunk-step jit is
+    # module-level: same (cfg, shapes, chunk) reuses the compiled programs)
+    warm = ServingEngine(cfg, params, **engine_kw)
+    warm.add_request(Request(uid=-1, prompt=list(range(1, 12)),
+                             max_new_tokens=2))
+    warm.run()
+    eng = ServingEngine(cfg, params, **engine_kw)
+    reqs, wall = run_trace(eng, make_trace(tcfg, cfg.vocab_size))
+    return {"arch": arch, "knobs": engine_kw,
+            "trace": dataclasses.asdict(tcfg),
+            "metrics": summarize(reqs, wall, eng)}

@@ -20,9 +20,12 @@ Covers:
   * server momentum — β = 0 is bit-for-bit the plain path, β > 0 matches
     the manual m ← βm + (x̄ − x₀), x ← x₀ + m recursion over windows, and
     the buffer never enters the wire payload;
-  * the BCE objective seam — ``baselines.bce_step`` equals the manual BCE
-    formula, and the empty dual tree trains through both window paths with
-    zero dual payload.
+  * the BCE objective seam — the loss is logit-space BCE pinned against an
+    explicit sigmoid+log oracle with non-vanishing gradients (the old form
+    clipped the unbounded score logit into (0, 1) as if it were a
+    probability, so gradients vanished exactly outside that range),
+    ``baselines.bce_step`` equals the manual formula, and the empty dual
+    tree trains through both window paths with zero dual payload.
 """
 import os
 import subprocess
@@ -473,8 +476,8 @@ def test_config_rejects_bad_objective_and_momentum():
 # the BCE seam (dual-free objective)
 # --------------------------------------------------------------------------
 def test_bce_step_matches_manual_formula():
-    """baselines.bce_step now routes through the objective seam — it must
-    still compute exactly the clipped-BCE parallel-SGD step."""
+    """baselines.bce_step routes through the objective seam — it must
+    compute exactly the logit-space-BCE parallel-SGD step."""
     K, B = 3, 16
     key = jax.random.PRNGKey(0)
     params = baselines.bce_init(key, MCFG, K)
@@ -484,9 +487,9 @@ def test_bce_step_matches_manual_formula():
     def manual(p, b):
         inputs = {k: v for k, v in b.items() if k != "labels"}
         h, aux = M.score(MCFG, p, inputs, train=True)
-        h = jnp.clip(h, 1e-6, 1 - 1e-6)
         y = b["labels"]
-        return -jnp.mean(y * jnp.log(h) + (1 - y) * jnp.log(1 - h)) + 0.01 * aux
+        return -jnp.mean(y * jax.nn.log_sigmoid(h)
+                         + (1 - y) * jax.nn.log_sigmoid(-h)) + 0.01 * aux
 
     losses, grads = jax.vmap(jax.value_and_grad(manual))(params, wb)
     grads = jax.tree_util.tree_map(
@@ -495,6 +498,27 @@ def test_bce_step_matches_manual_formula():
     want = jax.tree_util.tree_map(lambda p, g: p - 0.1 * g, params, grads)
     assert abs(float(loss) - float(jnp.mean(losses))) < 1e-7
     assert _max_err(new_params, want) < 1e-7
+
+
+def test_bce_loss_is_logit_space():
+    """The vanishing-gradient regression: BCEObjective.loss consumes the
+    UNBOUNDED score logit.  The old form clipped h into (1e-6, 1-1e-6) and
+    took logs — any score outside (0, 1) saturated the clip and its
+    gradient was exactly zero.  Pin the loss against the explicit
+    sigmoid+log oracle and the gradient against (σ(h) − y)/n, which never
+    vanishes at finite logits."""
+    obj = objective.REGISTRY["bce"](p_pos=0.5)
+    h = jnp.asarray([-5.0, -0.3, 0.2, 4.0])
+    y = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    sig = 1.0 / (1.0 + np.exp(-np.asarray(h)))
+    want = -np.mean(np.asarray(y) * np.log(sig)
+                    + (1 - np.asarray(y)) * np.log(1 - sig))
+    got = float(obj.loss(h, y, {}))
+    assert abs(got - want) < 1e-6
+    grad = np.asarray(jax.grad(lambda h: obj.loss(h, y, {}))(h))
+    np.testing.assert_allclose(grad, (sig - np.asarray(y)) / 4, rtol=1e-5)
+    # the fix's point: the pre-fix clip zeroed the gradient at h=-5 and h=4
+    assert np.abs(grad).min() > 1e-4
 
 
 def test_bce_objective_trains_with_empty_dual_tree():

@@ -1,0 +1,296 @@
+"""Regression + behaviour tests for the continuous-batching serving engine.
+
+Each of the hardening fixes in ``serving/engine.py`` lands with a test that
+fails on the pre-fix engine:
+
+  * empty prompts used to livelock ``run()`` (slot admitted, nothing to feed,
+    silent return with the request never finalized) — now rejected at the
+    door, and ``run()`` raises ``TicksExhausted`` instead of returning
+    silently when ticks run out with work left;
+  * prompts longer than ``max_len`` used to wrap their cache writes back to
+    position 0 (``positions % window``), silently corrupting the slot — now
+    validated at admission (truncate, recorded on the request, or reject);
+  * ``_reset_slot`` used to skip any cache leaf without an ``.at`` attribute
+    (``hasattr`` guard), leaving e.g. numpy leaves of a host-roundtripped
+    cache permanently stale — now every leaf is reset and a leaf that does
+    not carry the slot axis at dim 0 raises.
+
+Plus the engine behaviours the bugfixes hang off: tick accounting for
+batched chunked prefill, FIFO/SJF admission, queue bounds, eos termination,
+deadline expiry, prefix-cache exactness, and chunk-size invariance of the
+generated tokens.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serving import decode as D
+from repro.serving.engine import Request, ServingEngine, TicksExhausted
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_smoke_config("stablelm-1.6b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg_params, **kw):
+    cfg, params = cfg_params
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 48)
+    return ServingEngine(cfg, params, **kw)
+
+
+def _serve_alone(cfg_params, prompt, max_new, **kw):
+    eng = _engine(cfg_params, slots=1, **kw)
+    req = Request(uid=0, prompt=list(prompt), max_new_tokens=max_new)
+    eng.add_request(req)
+    eng.run()
+    return req
+
+
+# --------------------------------------------------------------------------
+# admission-time validation (the hang/overflow fixes)
+# --------------------------------------------------------------------------
+def test_empty_prompt_rejected_at_admission(cfg_params):
+    """Pre-fix: an empty prompt was admitted to a slot with nothing to feed
+    and nothing generated — run() spun to max_ticks and returned with the
+    request still not done."""
+    eng = _engine(cfg_params)
+    req = Request(uid=0, prompt=[], max_new_tokens=4)
+    assert eng.add_request(req) is False
+    assert req.status == "rejected" and req.reject_reason == "empty_prompt"
+    assert req.done
+    # the engine is still fully serviceable afterwards
+    ok = Request(uid=1, prompt=[5, 6, 7], max_new_tokens=2)
+    assert eng.add_request(ok) is True
+    eng.run()
+    assert ok.status == "done" and len(ok.generated) == 2
+
+
+def test_non_positive_budget_rejected(cfg_params):
+    eng = _engine(cfg_params)
+    req = Request(uid=0, prompt=[1, 2], max_new_tokens=0)
+    assert eng.add_request(req) is False
+    assert req.reject_reason == "non_positive_max_new_tokens"
+
+
+def test_run_raises_when_ticks_exhausted(cfg_params):
+    """Pre-fix: run() silently returned with requests still in flight."""
+    eng = _engine(cfg_params, prefill_chunk=1)
+    eng.add_request(Request(uid=0, prompt=list(range(1, 30)),
+                            max_new_tokens=8))
+    with pytest.raises(TicksExhausted):
+        eng.run(max_ticks=3)
+
+
+def test_overlong_prompt_truncated_and_exact(cfg_params):
+    """Pre-fix: a prompt longer than max_len wrapped its cache writes back
+    to position 0 (positions % window), silently corrupting the slot and
+    producing tokens from a scrambled cache.  Now the prompt is truncated
+    at admission (recorded on the request) and the generated tokens match
+    serving the truncated prompt alone."""
+    cfg, _ = cfg_params
+    max_len = 16
+    prompt = list(np.random.RandomState(0).randint(
+        1, cfg.vocab_size, size=40))
+    req = Request(uid=0, prompt=prompt, max_new_tokens=4)
+    eng = _engine(cfg_params, slots=1, max_len=max_len)
+    assert eng.add_request(req) is True
+    eng.run()
+    assert req.truncated and req.status == "done"
+    assert req.prompt_used == prompt[:max_len - 1]
+    ref = _serve_alone(cfg_params, prompt[:max_len - 1], 4, max_len=max_len)
+    assert req.generated == ref.generated
+
+
+def test_overlong_prompt_rejected_under_reject_policy(cfg_params):
+    eng = _engine(cfg_params, max_len=16, on_overflow="reject")
+    req = Request(uid=0, prompt=list(range(1, 41)), max_new_tokens=4)
+    assert eng.add_request(req) is False
+    assert req.reject_reason == "prompt_too_long"
+
+
+# --------------------------------------------------------------------------
+# slot recycling (the stale-slot fix)
+# --------------------------------------------------------------------------
+def test_reset_slot_resets_numpy_leaves(cfg_params):
+    """Pre-fix regression: ``hasattr(old, "at")`` silently skipped numpy
+    leaves (a cache restored from host memory), leaving the slot's state
+    stale for the next request.  Every leaf must reset."""
+    cfg, _ = cfg_params
+    eng = _engine(cfg_params, slots=2, max_len=32)
+    req = Request(uid=0, prompt=list(range(1, 20)), max_new_tokens=4)
+    eng.add_request(req)
+    eng.run()
+    # host-roundtrip the cache (e.g. a checkpoint restore): all numpy leaves
+    eng.cache = jax.tree_util.tree_map(np.asarray, eng.cache)
+    eng.cache = eng._reset_slot(0)
+    fresh = D.init_cache(cfg, 1, 32, use_window=True, dtype=jnp.float32)
+    for got, want in zip(jax.tree_util.tree_leaves(eng.cache),
+                         jax.tree_util.tree_leaves(fresh)):
+        np.testing.assert_array_equal(np.asarray(got[0:1]), np.asarray(want))
+
+
+def test_reset_slot_raises_on_slotless_leaf(cfg_params):
+    """A cache leaf that does not carry the slot axis at dim 0 violates the
+    engine-wide contract and must raise, not be silently skipped."""
+    eng = _engine(cfg_params, slots=2)
+    leaves, treedef = jax.tree_util.tree_flatten(eng.cache)
+    leaves[0] = leaves[0][0]   # drop the slot axis on one leaf
+    eng.cache = jax.tree_util.tree_unflatten(treedef, leaves)
+    with pytest.raises(ValueError, match="slot axis"):
+        eng._reset_slot(0)
+
+
+def test_slot_recycling_is_exact(cfg_params):
+    """A short request served in a slot previously occupied by a long one
+    generates exactly what it generates alone."""
+    eng = _engine(cfg_params, slots=1, max_len=48)
+    long = Request(uid=0, prompt=list(range(1, 41)), max_new_tokens=6)
+    short = Request(uid=1, prompt=[7, 11, 13], max_new_tokens=4)
+    eng.add_request(long)
+    eng.add_request(short)
+    eng.run()
+    assert long.status == "done" and short.status == "done"
+    ref = _serve_alone(cfg_params, [7, 11, 13], 4)
+    assert short.generated == ref.generated
+
+
+# --------------------------------------------------------------------------
+# batched chunked prefill
+# --------------------------------------------------------------------------
+def test_tick_accounting(cfg_params):
+    """One slot, prompt of 20, chunk of 8, 4 new tokens: prefill takes
+    ceil(20/8)=3 ticks (the first token comes out of the last prefill
+    tick), decode takes the remaining 3."""
+    eng = _engine(cfg_params, slots=1, max_len=48, prefill_chunk=8)
+    req = Request(uid=0, prompt=list(range(1, 21)), max_new_tokens=4)
+    eng.add_request(req)
+    eng.run()
+    assert req.status == "done" and len(req.generated) == 4
+    assert eng.ticks == 6
+    assert eng.tokens_prefilled == 20
+    assert eng.tokens_decoded == 3
+
+
+def test_chunked_prefill_matches_token_per_tick(cfg_params):
+    """The tentpole's exactness claim: generated tokens are invariant to
+    prefill_chunk, including heterogeneous prompt lengths sharing a tick."""
+    prompts = [list(range(1, 25)), [3, 1, 4, 1, 5], list(range(40, 9, -1))]
+    outs = {}
+    for chunk in (1, 8):
+        eng = _engine(cfg_params, slots=2, max_len=48, prefill_chunk=chunk)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.add_request(r)
+        eng.run()
+        outs[chunk] = [r.generated for r in reqs]
+    assert outs[1] == outs[8]
+
+
+# --------------------------------------------------------------------------
+# admission order, bounds, termination, deadlines
+# --------------------------------------------------------------------------
+def test_fifo_admission_order_and_queue_bound(cfg_params):
+    eng = _engine(cfg_params, slots=1, queue_limit=2, prefill_chunk=4)
+    reqs = [Request(uid=i, prompt=[i + 1, i + 2], max_new_tokens=1)
+            for i in range(3)]
+    assert eng.add_request(reqs[0]) is True
+    assert eng.add_request(reqs[1]) is True
+    assert eng.add_request(reqs[2]) is False      # bounded queue
+    assert reqs[2].reject_reason == "queue_full"
+    eng.run()
+    assert reqs[0].t_admitted <= reqs[1].t_admitted
+    assert [r.status for r in reqs[:2]] == ["done", "done"]
+
+
+def test_sjf_admits_short_job_first(cfg_params):
+    eng = _engine(cfg_params, slots=1, admission="sjf")
+    long = Request(uid=0, prompt=list(range(1, 30)), max_new_tokens=1)
+    short = Request(uid=1, prompt=[5, 6], max_new_tokens=1)
+    eng.add_request(long)
+    eng.add_request(short)
+    eng.run()
+    assert short.t_admitted < long.t_admitted
+
+
+def test_eos_terminates_decode(cfg_params):
+    probe = _serve_alone(cfg_params, [2, 3, 5, 8], 1)
+    g0 = probe.generated[0]
+    req = Request(uid=0, prompt=[2, 3, 5, 8], max_new_tokens=8, eos_id=g0)
+    eng = _engine(cfg_params, slots=1)
+    eng.add_request(req)
+    eng.run()
+    assert req.generated == [g0] and req.status == "done"
+
+
+def test_deadline_expires_queued_and_active(cfg_params):
+    clk = {"t": 0.0}
+    eng = _engine(cfg_params, slots=1, prefill_chunk=2,
+                  clock=lambda: clk["t"])
+    slow = Request(uid=0, prompt=list(range(1, 30)), max_new_tokens=8,
+                   deadline=5.0)
+    queued = Request(uid=1, prompt=[4, 5], max_new_tokens=2, deadline=1.0)
+    eng.add_request(slow)
+    eng.add_request(queued)
+    eng.step()
+    clk["t"] = 2.0      # past queued's deadline, inside slow's
+    eng.step()
+    assert queued.status == "expired" and queued.done
+    clk["t"] = 6.0      # now past slow's too
+    eng.step()
+    assert slow.status == "expired"
+    assert eng.n_expired == 2
+    assert all(r is None for r in eng.active) and not eng.queue
+
+
+def test_latency_accounting_fields(cfg_params):
+    clk = {"t": 0.0}
+    eng = _engine(cfg_params, slots=1, prefill_chunk=8,
+                  clock=lambda: clk["t"])
+    req = Request(uid=0, prompt=[1, 2, 3], max_new_tokens=2)
+    eng.add_request(req)
+    clk["t"] = 1.0
+    eng.run()
+    assert req.t_arrival == 0.0 and req.t_admitted == 1.0
+    assert req.ttft == 1.0 and req.latency == 1.0
+    assert req.score is not None and np.isfinite(req.score)
+
+
+# --------------------------------------------------------------------------
+# prefix cache
+# --------------------------------------------------------------------------
+def test_prefix_cache_hit_is_exact(cfg_params):
+    """B's prompt extends A's completed prompt: B must hit the prefix cache
+    for len(A) tokens and still generate exactly what it generates alone."""
+    base = list(range(1, 13))
+    ext = base + [17, 19, 23]
+    eng = _engine(cfg_params, slots=1, prefix_cache_size=4)
+    a = Request(uid=0, prompt=base, max_new_tokens=2)
+    eng.add_request(a)
+    eng.run()
+    b = Request(uid=1, prompt=ext, max_new_tokens=4)
+    eng.add_request(b)
+    eng.run()
+    assert b.prefix_hit_tokens == len(base)
+    assert eng.prefix_hits == 1
+    ref = _serve_alone(cfg_params, ext, 4)
+    assert b.generated == ref.generated
+
+
+def test_prefix_cache_miss_on_disjoint_prompt(cfg_params):
+    eng = _engine(cfg_params, slots=1, prefix_cache_size=4)
+    a = Request(uid=0, prompt=list(range(1, 13)), max_new_tokens=1)
+    eng.add_request(a)
+    eng.run()
+    b = Request(uid=1, prompt=[40, 41, 42, 43], max_new_tokens=1)
+    eng.add_request(b)
+    eng.run()
+    assert b.prefix_hit_tokens == 0
+    assert eng.prefix_misses >= 1
