@@ -61,8 +61,9 @@ import numpy as np
 
 from repro.analysis import hlo as H
 from repro.configs.base import mlp_config
-from repro.core import coda, objective, schedules
+from repro.core import coda, schedules
 from repro.data import DataConfig, ShardedDataset
+from repro.metrics import streaming as SM
 from repro.models import model as M
 
 MCFG = mlp_config(n_features=32, d=64)
@@ -101,11 +102,14 @@ def _run(K, I, *, stages=3, T0=64, batch=32, seed=0, eta0=0.5, grow_I=False,
         h, _ = M.score(MCFG, p0, {"features": test["features"]})
         return h
 
+    auc_m = SM.make_metric("auc", "exact")
+    pauc_m = SM.make_metric("pauc", "exact", beta=pauc_beta)
+
     def auc(state):
-        return float(objective.roc_auc(scores(state), test["labels"]))
+        return auc_m.compute(scores(state), test["labels"])
 
     def pauc(state):
-        return objective.partial_auc(scores(state), test["labels"], pauc_beta)
+        return pauc_m.compute(scores(state), test["labels"])
 
     sched = schedules.ScheduleConfig(n_workers=K, eta0=eta0, T0=T0, I0=I,
                                      grow_I=grow_I)
@@ -609,6 +613,83 @@ def bench_moe_dispatch(fast=False, smoke=False):
 # --------------------------------------------------------------------------
 # serving (continuous-batching engine under synthetic load)
 # --------------------------------------------------------------------------
+def bench_streaming_metrics(fast=False, smoke=False):
+    """The streaming-metrics tentpole's measurement: sketch error vs the
+    exact oracle, and bytes held vs scores seen.
+
+    One seed-deterministic score stream (well-separated Gaussian mixture,
+    ~10k+ scores) is pushed through ``SketchMetric`` at a dyadic bins sweep
+    and through the materialise-everything ``ExactMetric`` oracle.
+    Acceptance, asserted here, for both AUC and pAUC@FPR<=0.3:
+
+      * |sketch − exact| <= resolution(state) + 1e-6 at every size (the
+        1e-6 absorbs the f32 noise of the oracle itself — the documented
+        bound is vs the true value, which f32 ``roc_auc`` only approximates
+        to ~1e-7);
+      * the resolution bound is monotone non-increasing under dyadic bin
+        refinement;
+      * merging 8 per-shard sketches (either association order) is bitwise
+        identical to sketching the stream in one pass;
+      * sketch state stays O(bins) while the exact state grows O(n).
+    """
+    rng = np.random.RandomState(0)
+    n = 12_000 if (smoke or fast) else 50_000
+    labels = (rng.uniform(size=n) < 0.7).astype(np.float32)
+    scores = np.where(labels > 0.5, rng.normal(0.9, 1.1, n),
+                      rng.normal(-0.7, 1.0, n)).astype(np.float32)
+
+    record = {"n": n, "beta": 0.3, "sweep": []}
+    for kind in ("auc", "pauc"):
+        exact = SM.make_metric(kind, "exact")
+        st_ex = exact.update(exact.init(), scores, labels)
+        truth = exact.finalize(st_ex)
+        bounds = []
+        for bins in ([64, 256, 1024] if (smoke or fast)
+                     else [64, 256, 1024, 4096]):
+            met = SM.make_metric(kind, "sketch", bins=bins)
+            t0 = time.time()
+            sk = met.update(met.init(), scores, labels)
+            us = (time.time() - t0) * 1e6
+            val, res = met.finalize(sk), met.resolution(sk)
+            err = abs(val - truth)
+            assert err <= res + 1e-6, \
+                f"{kind}@{bins}: err {err:.2e} > bound {res:.2e}"
+            bounds.append(res)
+            emit(f"streaming_metrics/{kind}/bins{bins}", us,
+                 f"value={val:.4f};exact={truth:.4f};err={err:.2e};"
+                 f"bound={res:.2e};state_bytes={met.state_bytes(sk)};"
+                 f"exact_bytes={exact.state_bytes(st_ex)};n={n}")
+            record["sweep"].append(
+                {"kind": kind, "bins": bins, "value": val, "exact": truth,
+                 "err": err, "bound": res,
+                 "state_bytes": met.state_bytes(sk),
+                 "exact_bytes": exact.state_bytes(st_ex)})
+        assert all(b2 <= b1 + 1e-12 for b1, b2 in zip(bounds, bounds[1:])), \
+            f"{kind}: bound not monotone under refinement: {bounds}"
+
+    # merge-of-shards == one-stream, any association order
+    met = SM.make_metric("auc", "sketch", bins=512)
+    whole = met.update(met.init(), scores, labels)
+    shards = [met.update(met.init(), s, l)
+              for s, l in zip(np.array_split(scores, 8),
+                              np.array_split(labels, 8))]
+    left = shards[0]
+    for s in shards[1:]:
+        left = met.merge(left, s)
+    right = shards[-1]
+    for s in reversed(shards[:-1]):
+        right = met.merge(s, right)
+    ok = (np.array_equal(left.pos, whole.pos)
+          and np.array_equal(left.neg, whole.neg)
+          and np.array_equal(right.pos, whole.pos)
+          and np.array_equal(right.neg, whole.neg))
+    assert ok, "merge-of-shards diverged from the one-stream sketch"
+    emit("streaming_metrics/merge_shards", 0.0,
+         f"shards=8;bitwise_identical={ok};bins=512")
+    record["merge_shards_identical"] = ok
+    emit_comm("streaming_metrics", record)
+
+
 def bench_serve_load(fast=False, smoke=False):
     """The serving tentpole's measurement: the continuous-batching engine
     under synthetic traces.
@@ -625,6 +706,11 @@ def bench_serve_load(fast=False, smoke=False):
     (b) ``poisson`` arrivals at a fixed rate with the prefix cache on and
         a shared-prefix prompt pool — the latency-percentile rows.
     (c) ``bursty`` arrivals — tail-latency under admission pressure.
+    (d) ``poisson`` arrivals with a labeled trace and a streaming-AUC
+        sketch on the engine: the ``streaming_auc`` row lands in the JSON
+        artifact next to the latency percentiles, asserted here to agree
+        with the exact metric over the same served (score, label) pairs
+        within the sketch's resolution bound.
 
     Every trace emits p50/p99 TTFT, p50/p99 completion latency and
     tokens/s rows plus a structured record for the JSON artifact."""
@@ -711,6 +797,36 @@ def bench_serve_load(fast=False, smoke=False):
         "chunked_speedup": speedup, "tokens_identical": toks_equal,
         "metrics": {label: r[1] for label, r in res.items()}})
 
+    # (d) labeled poisson trace: streaming AUC over served traffic
+    met = SM.make_metric("auc", "sketch", bins=512)
+    eng = engine(CHUNK, metric=met)
+    labeled_kw = dict(kind="poisson", rate=48.0, n_requests=n,
+                      prompt_len=(8, 33), max_new=(2, 5), labeled=True,
+                      seed=4)
+    trace = LG.make_trace(LG.TraceConfig(**labeled_kw), cfg.vocab_size)
+    reqs, wall = LG.run_trace(eng, trace)
+    m = LG.summarize(reqs, wall, eng)
+    assert "streaming_auc" in m, "labeled trace produced no streaming row"
+    sl = [(r.score, r.label) for r in reqs
+          if r.score is not None and r.label is not None]
+    ex = SM.make_metric("auc", "exact").compute(
+        np.asarray([s for s, _ in sl], np.float32),
+        np.asarray([l for _, l in sl], np.float32))
+    err = abs(m["streaming_auc"] - ex)
+    assert err <= m["streaming_resolution"] + 1e-6, \
+        f"served sketch AUC off by {err:.2e} > {m['streaming_resolution']:.2e}"
+    rows("serve_load/labeled", m)
+    emit("serve_load/labeled/streaming_auc", 0.0,
+         f"auc={m['streaming_auc']:.4f};exact={ex:.4f};"
+         f"res={m['streaming_resolution']:.2e};"
+         f"scored={m['streaming_scored']};"
+         f"state_bytes={m['streaming_state_bytes']}")
+    emit_comm("serve_load/labeled", {
+        "arch": arch, "knobs": {"slots": SLOTS, "max_len": MAX_LEN,
+                                "prefill_chunk": CHUNK,
+                                "metric_backend": "sketch"},
+        "trace": labeled_kw, "metrics": m})
+
 
 # --------------------------------------------------------------------------
 # roofline (deliverable g — reads the dry-run artifacts)
@@ -760,6 +876,7 @@ BENCHES = {
     "hetero_window": bench_hetero_window,
     "objective_sweep": bench_objective_sweep,
     "moe_dispatch": bench_moe_dispatch,
+    "streaming_metrics": bench_streaming_metrics,
     "serve_load": bench_serve_load,
     "roofline": bench_roofline,
 }

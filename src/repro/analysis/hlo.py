@@ -82,7 +82,9 @@ def collective_ops(hlo_text: str) -> List[dict]:
 def verify_window_payload(hlo_text: str, expected_bytes: int, *,
                           op: str = "all-reduce",
                           count: int = None,
-                          by_dtype: Dict[str, int] = None) -> List[dict]:
+                          by_dtype: Dict[str, int] = None,
+                          baseline_bytes: int = None,
+                          delta_bytes: int = None) -> List[dict]:
     """Assert a compiled CoDA/CODASCA window's wire traffic: all collectives
     are of kind ``op``, totalling ``expected_bytes`` result-shape bytes —
     and *no other* collective of any kind.
@@ -108,9 +110,25 @@ def verify_window_payload(hlo_text: str, expected_bytes: int, *,
         bytes), no op may be left over, and the buckets must sum to
         ``expected_bytes``.
 
+    ``baseline_bytes``/``delta_bytes`` (always both) additionally pin the
+    payload as an exact baseline + feature delta: ``expected_bytes`` must
+    equal their sum.  This is the streaming-eval assert — with the sketch
+    hook off the compiled wire bytes are the baseline *unchanged*
+    (``delta_bytes=0``), with it on they grow by exactly
+    ``coda.streaming_payload_bytes(state)`` (2·stream_bins·4 fp32) and not
+    a byte more, while the op-shape checks above still hold (the sketch
+    rides the existing fp32 bucket, it does not add a collective).
+
     Returns the op records on success so callers can additionally inspect
     dtypes / replica groups.
     """
+    if (baseline_bytes is None) != (delta_bytes is None):
+        raise ValueError("baseline_bytes and delta_bytes go together")
+    if baseline_bytes is not None and \
+            baseline_bytes + delta_bytes != expected_bytes:
+        raise AssertionError(
+            f"payload delta mismatch: baseline {baseline_bytes} + delta "
+            f"{delta_bytes} != expected {expected_bytes}")
     ops = collective_ops(hlo_text)
     stray = [o for o in ops if o["op"] != op]
     if stray:

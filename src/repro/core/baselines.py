@@ -59,9 +59,12 @@ def bce_step(mcfg: ModelConfig, params, batch, eta, *, impl="auto"):
                            impl=impl)
 
     def loss_fn(p, wb):
+        # _worker_loss returns (loss, scores): the scores ride as aux for
+        # the streaming-eval sketch; plain SGD only needs the loss
         return coda._worker_loss(mcfg, ccfg, obj, p, {}, wb)
 
-    losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(params, batch)
+    (losses, _), grads = jax.vmap(
+        jax.value_and_grad(loss_fn, has_aux=True))(params, batch)
     # synchronous data parallelism: average the gradients across workers
     grads = jax.tree_util.tree_map(
         lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape),

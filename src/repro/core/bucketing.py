@@ -239,27 +239,74 @@ def _unmats(meta, kloc, means, *, broadcast=True):
     return tree["params"], tree["duals"]
 
 
+def _sketch_mats(state, n_workers):
+    """The streaming-eval sketch deltas (``sk_new``) as wire rows riding the
+    fp32 bucket: each [K_loc, B] count leaf is PRE-SCALED by the global
+    worker count K, so the collective's *mean* is the exact global *sum*:
+    every partial numerator is an exact integer-valued fp32 and every
+    division (by K_loc locally, by the ring/pmean extent on the wire) has
+    an exactly-representable integer quotient — correctly-rounded fp32
+    division returns it exactly.  Returns ([] , None) when the sketch is
+    off."""
+    if "sk_new" not in state:
+        return [], None
+    if not n_workers:
+        raise ValueError("averaging a state with a streaming-eval sketch "
+                         "needs n_workers (the pre-scale that turns the "
+                         "wire mean into the exact count sum)")
+    flat, tdef = jax.tree_util.tree_flatten(state["sk_new"])
+    kloc = flat[0].shape[0]
+    mats = [(l.astype(jnp.float32) * np.float32(n_workers)).reshape(kloc, -1)
+            for l in flat]
+    return mats, (flat, tdef)
+
+
+def _apply_sketch_sums(new, smeta, sums):
+    """Fold the collective's exact delta sums into the replicated
+    accumulator and reset the deltas (the wire twin of
+    ``coda.merge_sketch``)."""
+    flat, tdef = smeta
+    delta = jax.tree_util.tree_unflatten(
+        tdef, [s.reshape(l.shape[1:]) for s, l in zip(sums, flat)])
+    new["sk_acc"] = jax.tree_util.tree_map(
+        lambda a, d: a + jnp.broadcast_to(d, a.shape), new["sk_acc"], delta)
+    new["sk_new"] = jax.tree_util.tree_map(jnp.zeros_like, new["sk_new"])
+    return new
+
+
 def average_state(state, wa, compress: Optional[str], *,
-                  ring: Optional[RingSpec] = None):
+                  ring: Optional[RingSpec] = None,
+                  n_workers: Optional[int] = None):
     """``coda.average`` semantics on a local worker shard: mean over the
     K_loc local workers, then over the worker mesh axes.  ``ring`` swaps
     the blocking pmean for the chunked ppermute rings (fp32 buckets only —
-    int8 + ring is rejected at config time)."""
+    int8 + ring is rejected at config time).  A streaming-eval sketch in
+    the state (``sk_new``/``sk_acc``) rides the same fp32 bucket — still
+    one all-reduce — and needs ``n_workers`` (see ``_sketch_mats``)."""
     mats, meta, kloc = _state_mats(state)
+    smats, smeta = _sketch_mats(state, n_workers)
     if ring is not None and compress:
         raise ValueError("ring averaging does not support compressed buckets")
-    means = int8_average(mats, wa) if compress == "int8" \
-        else (ring_mean_buckets(mats, ring) if ring is not None
-              else pmean_buckets(mats, wa))
-    tree, duals = _unmats(meta, kloc, means)
+    if compress == "int8":
+        if smats:  # unreachable via CoDAConfig; guard direct callers
+            raise ValueError("the streaming-eval sketch cannot ride int8 "
+                             "compressed buckets")
+        means = int8_average(mats, wa)
+    else:
+        means = ring_mean_buckets(mats + smats, ring) if ring is not None \
+            else pmean_buckets(mats + smats, wa)
+    tree, duals = _unmats(meta, kloc, means[:len(mats)])
     new = dict(state)
     new["params"] = tree
     new["duals"] = duals
+    if smeta is not None:
+        new = _apply_sketch_sums(new, smeta, means[len(mats):])
     return new
 
 
 def average_and_refresh(state, cv_new, wa, compress: Optional[str], *,
-                        ring: Optional[RingSpec] = None):
+                        ring: Optional[RingSpec] = None,
+                        n_workers: Optional[int] = None):
     """CODASCA window end: average the state tensors AND the per-worker
     control variates in one bucket.  The state mean is broadcast back (all
     workers restart from the synced iterate), the control mean becomes the
@@ -276,14 +323,18 @@ def average_and_refresh(state, cv_new, wa, compress: Optional[str], *,
     """
     mats, meta, kloc = _state_mats(state)
     cmats, cmeta, _ = _state_mats(cv_new)
+    smats, smeta = _sketch_mats(state, n_workers)
     if ring is not None:
         if compress:
             raise ValueError("ring averaging does not support compressed "
                              "buckets")
-        means = ring_mean_buckets(mats + cmats, ring)
+        means = ring_mean_buckets(mats + cmats + smats, ring)
     elif compress == "int8":
         from repro.core import coda
 
+        if smats:  # unreachable via CoDAConfig; guard direct callers
+            raise ValueError("the streaming-eval sketch cannot ride int8 "
+                             "compressed buckets")
         means = int8_average(mats + cmats, wa)
         # each worker re-applies the wire quantizer to its OWN variate rows
         # (locally — nothing extra crosses the wire), so cg == mean_k cv_k
@@ -294,13 +345,15 @@ def average_and_refresh(state, cv_new, wa, compress: Optional[str], *,
             stored.append((q.astype(jnp.float32) * s).astype(m.dtype))
         cmats = stored
     else:
-        means = pmean_buckets(mats + cmats, wa)
-    n = len(mats)
+        means = pmean_buckets(mats + cmats + smats, wa)
+    n, nc = len(mats), len(cmats)
     tree, duals = _unmats(meta, kloc, means[:n])
-    ctree, cduals = _unmats(cmeta, kloc, means[n:])
+    ctree, cduals = _unmats(cmeta, kloc, means[n:n + nc])
     new = dict(state)
     new["params"] = tree
     new["duals"] = duals
+    if smeta is not None:
+        new = _apply_sketch_sums(new, smeta, means[n + nc:])
     new["cg_params"], new["cg_duals"] = ctree, cduals
     cflat, ctdef = cmeta
     stored_flat = [m.reshape(l.shape) for m, l in zip(cmats, cflat)]

@@ -68,7 +68,7 @@ path (the momentum arithmetic is never traced).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -102,6 +102,13 @@ class CoDAConfig:
                                 # chains per dtype bucket and fit() feeds
                                 # fused window PAIRS so the first window's
                                 # ring hides under the second's compute
+    stream_bins: int = 0        # >0: per-worker streaming-eval score sketch
+                                # (repro.metrics.streaming) over the training
+                                # scores; the per-window deltas ride the
+                                # existing fp32 window bucket as exactly
+                                # 2·stream_bins·4 extra bytes — still ONE
+                                # all-reduce per window
+    stream_range: Tuple[float, float] = (-8.0, 8.0)  # sketch score range
     param_dtype: Any = jnp.float32
 
     def __post_init__(self):
@@ -127,6 +134,17 @@ class CoDAConfig:
             raise ValueError("overlapped ring averaging ships plain dtype "
                              "buckets; it cannot be combined with "
                              f"avg_compress={self.avg_compress!r}")
+        if self.stream_bins < 0:
+            raise ValueError(f"stream_bins must be >= 0, got "
+                             f"{self.stream_bins}")
+        if self.stream_bins and self.avg_compress:
+            raise ValueError("the streaming-eval sketch ships raw fp32 "
+                             "counts (int8 rounding would corrupt them); it "
+                             "cannot be combined with "
+                             f"avg_compress={self.avg_compress!r}")
+        if self.stream_bins and not self.stream_range[1] > self.stream_range[0]:
+            raise ValueError(f"stream_range must satisfy hi > lo, got "
+                             f"{self.stream_range}")
 
 
 # The training state is a plain dict pytree (stacked worker axis throughout).
@@ -151,6 +169,13 @@ def init_state(key, mcfg: ModelConfig, ccfg: CoDAConfig) -> CoDAState:
     if ccfg.server_momentum:
         state["srv_m"] = jax.tree_util.tree_map(
             lambda x: jnp.zeros(x.shape, jnp.float32), state["params"])
+    if ccfg.stream_bins:
+        # streaming-eval sketch (repro.metrics.streaming): sk_acc is the
+        # replicated global accumulator, sk_new the per-worker delta since
+        # the last window average (folded into sk_acc by the collective)
+        z = lambda: jnp.zeros((K, ccfg.stream_bins), jnp.float32)
+        state["sk_acc"] = {"pos": z(), "neg": z()}
+        state["sk_new"] = {"pos": z(), "neg": z()}
     if ccfg.algorithm == "codasca":
         from repro.core import codasca
         state = codasca.extend_state(state)
@@ -165,7 +190,20 @@ def _worker_loss(mcfg, ccfg, obj, params, duals, batch):
     h, aux = M.score(mcfg, params, inputs, use_window=ccfg.use_window,
                      train=True, impl=ccfg.impl)
     f = obj.loss(h, batch["labels"], duals)
-    return f + ccfg.moe_aux_coef * aux
+    return f + ccfg.moe_aux_coef * aux, h
+
+
+def grad_step_scores(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState,
+                     batch):
+    """Per-worker losses [K], raw primal/dual gradients (gp, gduals), and
+    the batch scores h [K, B] the loss already computed (the streaming-eval
+    sketch histograms them — no second forward pass)."""
+    obj = objective.for_config(ccfg)
+    vg = jax.value_and_grad(
+        lambda p_, d_, bt_: _worker_loss(mcfg, ccfg, obj, p_, d_, bt_),
+        argnums=(0, 1), has_aux=True)
+    (losses, hs), grads = jax.vmap(vg)(state["params"], state["duals"], batch)
+    return losses, grads, hs
 
 
 def grad_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch):
@@ -175,11 +213,8 @@ def grad_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch):
     them directly) and CODASCA (applies them with the control-variate
     correction and accumulates the raw values for the window-end variate
     refresh, core/codasca.py)."""
-    obj = objective.for_config(ccfg)
-    vg = jax.value_and_grad(
-        lambda p_, d_, bt_: _worker_loss(mcfg, ccfg, obj, p_, d_, bt_),
-        argnums=(0, 1))
-    return jax.vmap(vg)(state["params"], state["duals"], batch)
+    losses, grads, _ = grad_step_scores(mcfg, ccfg, state, batch)
+    return losses, grads
 
 
 def apply_grads(ccfg: CoDAConfig, state: CoDAState, grads, eta) -> CoDAState:
@@ -205,8 +240,25 @@ def local_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch,
     synchronous scalar take the mean; the sharded executor keeps the vector
     (per-worker loss spread is the heterogeneity signal CODASCA corrects).
     """
+    if "sk_new" in state:
+        losses, grads, hs = grad_step_scores(mcfg, ccfg, state, batch)
+        new = apply_grads(ccfg, state, grads, eta)
+        new["sk_new"] = sketch_update(ccfg, state["sk_new"], hs,
+                                      batch["labels"])
+        return new, losses
     losses, grads = grad_step(mcfg, ccfg, state, batch)
     return apply_grads(ccfg, state, grads, eta), losses
+
+
+def sketch_update(ccfg: CoDAConfig, sk, hs, labels):
+    """Scatter one local step's scores into the per-worker sketch deltas
+    ({"pos": [K, B], "neg": [K, B]}); shared by CoDA and CODASCA."""
+    from repro.metrics import streaming
+    lo, hi = ccfg.stream_range
+    upd = jax.vmap(lambda p, n, h, y: streaming.update_counts(
+        p, n, h, y, lo, hi))
+    pos, neg = upd(sk["pos"], sk["neg"], hs, labels)
+    return {"pos": pos, "neg": neg}
 
 
 def int8_quantize(xf, red_axes):
@@ -273,6 +325,23 @@ def average(state: CoDAState, compress: Optional[str] = None) -> CoDAState:
     new = dict(state)
     new["params"] = jax.tree_util.tree_map(avg, state["params"])
     new["duals"] = jax.tree_util.tree_map(avg, state["duals"])
+    if "sk_new" in state:
+        new = merge_sketch(new)
+    return new
+
+
+def merge_sketch(state: CoDAState) -> CoDAState:
+    """Fold the per-worker sketch deltas into the replicated accumulator at
+    a window average: sk_acc += Σ_k sk_new[k] (exact — integer-valued fp32
+    counts), then reset the deltas.  The vmap twin of the wire path in
+    core/bucketing (which ships n_workers·sk_new through the fp32 mean
+    bucket so the collective's mean IS this exact sum)."""
+    ssum = jax.tree_util.tree_map(
+        lambda l: jnp.sum(l, axis=0, keepdims=True), state["sk_new"])
+    new = dict(state)
+    new["sk_acc"] = jax.tree_util.tree_map(
+        lambda a, s: a + jnp.broadcast_to(s, a.shape), state["sk_acc"], ssum)
+    new["sk_new"] = jax.tree_util.tree_map(jnp.zeros_like, state["sk_new"])
     return new
 
 
@@ -379,6 +448,18 @@ _HLO_DTYPE = {"float32": "f32", "bfloat16": "bf16", "float16": "f16",
               "float64": "f64", "int8": "s8", "int32": "s32"}
 
 
+def streaming_payload_bytes(state: CoDAState) -> int:
+    """Extra fp32 bytes the streaming-eval sketch adds to the window
+    collective: the per-worker delta counts (2·stream_bins·4 — pos + neg
+    lanes of ``sk_new``).  0 when the sketch is off.  The sketch rides the
+    fp32 bucket ONCE (unlike the CODASCA variates it is not doubled: the
+    accumulator ``sk_acc`` is replicated and never shipped)."""
+    if "sk_new" not in state:
+        return 0
+    return sum(l.size // l.shape[0] * 4
+               for l in jax.tree_util.tree_leaves(state["sk_new"]))
+
+
 def window_payload_by_dtype(state: CoDAState,
                             compress: Optional[str] = None) -> Dict[str, int]:
     """Window-payload bytes per HLO dtype tag — the per-dtype-bucket view of
@@ -396,6 +477,9 @@ def window_payload_by_dtype(state: CoDAState,
         tag = _HLO_DTYPE[jnp.dtype(leaf.dtype).name]
         per = leaf.size // leaf.shape[0] * leaf.dtype.itemsize
         out[tag] = out.get(tag, 0) + mult * per
+    sk = streaming_payload_bytes(state)
+    if sk:
+        out["f32"] = out.get("f32", 0) + sk
     return out
 
 
@@ -406,9 +490,12 @@ def window_payload_bytes(state: CoDAState,
     CoDA: exactly ``model_bytes``.  CODASCA (detected by the control-
     variate fields in the state): the per-worker variates ride the same
     bucket, doubling the payload — 2 × model_bytes, still ONE all-reduce
-    (asserted against the compiled HLO in tests/test_codasca.py)."""
+    (asserted against the compiled HLO in tests/test_codasca.py).  The
+    streaming-eval sketch (``stream_bins > 0``) adds exactly
+    ``streaming_payload_bytes`` fp32 on top (not doubled — the sketch has
+    no control variate), asserted in tests/test_metrics.py."""
     mult = 2 if "cv_params" in state else 1
-    return mult * model_bytes(state, compress)
+    return mult * model_bytes(state, compress) + streaming_payload_bytes(state)
 
 
 def stage_payload_bytes(ccfg: CoDAConfig) -> int:

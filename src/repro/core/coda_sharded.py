@@ -150,7 +150,7 @@ class ShardedExecutor:
         st, losses = jax.lax.scan(step, st, bt, unroll=flags.scan_unroll())
         if communicate:
             st = bucketing.average_state(st, wa, ccfg.avg_compress or None,
-                                         ring=ring)
+                                         ring=ring, n_workers=ccfg.n_workers)
             if ccfg.server_momentum:
                 st = coda.server_momentum_step(st, start_params,
                                                ccfg.server_momentum)

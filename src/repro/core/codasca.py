@@ -70,7 +70,11 @@ def local_step(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, batch, eta):
     Returns (new_state, per_worker_losses [K], raw_grads) — the *raw*
     (uncorrected) gradients feed the window's variate refresh.
     """
-    losses, grads = coda.grad_step(mcfg, ccfg, state, batch)
+    if "sk_new" in state:
+        losses, grads, hs = coda.grad_step_scores(mcfg, ccfg, state, batch)
+    else:
+        losses, grads = coda.grad_step(mcfg, ccfg, state, batch)
+        hs = None
     gp, gd = grads
     # g + (c − c_k): the difference is computed FIRST so equal variates
     # contribute an exact fp zero (the homogeneous-data equivalence).
@@ -79,7 +83,11 @@ def local_step(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, batch, eta):
                                   state["cv_params"])
     gd_c = jax.tree_util.tree_map(corr, gd, state["cg_duals"],
                                   state["cv_duals"])
-    return coda.apply_grads(ccfg, state, (gp_c, gd_c), eta), losses, grads
+    new = coda.apply_grads(ccfg, state, (gp_c, gd_c), eta)
+    if hs is not None:
+        new["sk_new"] = coda.sketch_update(ccfg, state["sk_new"], hs,
+                                           batch["labels"])
+    return new, losses, grads
 
 
 def run_window(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, window_batch,
@@ -121,7 +129,8 @@ def run_window(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, window_batch,
             lambda g, w: (g / I).astype(w.dtype), acc, wire)
         state = bucketing.average_and_refresh(state, cv_new, wa,
                                               ccfg.avg_compress or None,
-                                              ring=ring)
+                                              ring=ring,
+                                              n_workers=ccfg.n_workers)
         if ccfg.server_momentum:
             state = coda.server_momentum_step(state, start_params,
                                               ccfg.server_momentum)

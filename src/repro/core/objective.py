@@ -19,8 +19,14 @@ stepping/averaging them.  This module is that seam.  An ``Objective`` owns
   * ``stage_duals``     — closed-form maximizer re-estimates at a stage
                           boundary (Alg. 1 lines 4-7: ``optimal_alpha``), one
                           fp32 scalar per ``stage_fields`` entry on the wire;
-  * ``eval_metric``     — the scalar the objective optimizes for reporting
-                          (AUC, partial AUC).
+  * ``metric``          — the scalar the objective optimizes for reporting
+                          (AUC, partial AUC), built as a mergeable
+                          ``repro.metrics.streaming.Metric`` with
+                          ``init``/``update``/``merge``/``finalize`` and two
+                          backends: ``exact`` (materialise everything —
+                          ``roc_auc``/``partial_auc`` below) and ``sketch``
+                          (fixed-size streaming histogram).  The old bare
+                          ``eval_metric`` callable is removed and raises.
 
 Everything downstream — the vmap oracle and shard_map executors
 (core/coda.py, core/coda_sharded.py), CODASCA control variates
@@ -210,8 +216,21 @@ class Objective:
         (one machine's view; the caller worker-means the results)."""
         return {}
 
-    def eval_metric(self, scores, labels) -> float:
-        return float(roc_auc(scores, labels))
+    def metric(self, backend: str = "exact", **kw):
+        """Build this objective's reporting metric as a mergeable
+        ``repro.metrics.streaming.Metric`` (``backend`` ∈ {exact, sketch};
+        sketch kwargs ``bins``/``lo``/``hi`` pass through)."""
+        from repro.metrics import streaming  # deferred: metrics finalizes here
+
+        return streaming.make_metric(self.metric_name, backend, **kw)
+
+    @property
+    def eval_metric(self):
+        raise AttributeError(
+            "Objective.eval_metric was removed by the Metric redesign: use "
+            "Objective.metric(backend) — a mergeable Metric with init/"
+            "update/merge/finalize (repro.metrics.streaming); one-shot "
+            "evaluation is metric('exact').compute(scores, labels).")
 
 
 def _zeros(K: int):
@@ -326,8 +345,11 @@ class PAUCDROObjective(Objective):
         mean_pos = jnp.sum(h * pos) / jnp.maximum(jnp.sum(pos), _EPS)
         return {"alpha": mean_neg - mean_pos}
 
-    def eval_metric(self, scores, labels) -> float:
-        return partial_auc(scores, labels, self.beta)
+    def metric(self, backend: str = "exact", **kw):
+        kw.setdefault("beta", self.beta)
+        from repro.metrics import streaming
+
+        return streaming.make_metric("pauc", backend, **kw)
 
 
 class BCEObjective(Objective):

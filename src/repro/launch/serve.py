@@ -8,6 +8,16 @@ Batching knobs (--slots, --prefill-chunk, --admission, --queue-limit,
 --prefix-cache) mirror ``ServingEngine``'s; trace knobs (--trace, --rate,
 --deadline) mirror ``loadgen.TraceConfig``'s.  ``scripts/hillclimb.py
 --serve-exp`` sweeps the same knobs into JSON artifacts.
+
+--labeled plants seed-deterministic ground-truth labels on the trace and
+attaches a streaming metric (shared flags with launch/train.py via
+repro.metrics.report: --metrics {exact,sketch}, --metric-interval N
+finished requests, --metric-bins) so the engine reports AUC over served
+traffic next to the latency percentiles:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+      --trace batch --requests 24 --labeled --metrics sketch \
+      --metric-interval 8
 """
 from __future__ import annotations
 
@@ -16,6 +26,8 @@ import argparse
 import jax
 
 from repro.configs import get_smoke_config
+from repro.metrics import report as metric_report
+from repro.metrics import streaming
 from repro.models import init_params
 from repro.serving import ServingEngine
 from repro.serving import loadgen as LG
@@ -39,21 +51,42 @@ def main():
                     help="mean arrivals/s for poisson/bursty traces")
     ap.add_argument("--deadline", type=float, default=None,
                     help="per-request deadline in seconds after arrival")
+    ap.add_argument("--labeled", action="store_true",
+                    help="plant ground-truth labels on the trace and report "
+                         "streaming AUC over served traffic")
+    ap.add_argument("--p-pos", type=float, default=0.7,
+                    help="positive ratio for --labeled traces")
     ap.add_argument("--seed", type=int, default=0)
+    metric_report.add_metric_args(ap)
     args = ap.parse_args()
 
     mcfg = get_smoke_config(args.arch)
     params = init_params(jax.random.PRNGKey(args.seed), mcfg)
+    met = rep = None
+    if args.labeled:
+        met = streaming.make_metric("auc", args.metrics,
+                                    bins=args.metric_bins)
+        rep = metric_report.IntervalReporter(met,
+                                             interval=args.metric_interval,
+                                             label="serve")
     eng = ServingEngine(mcfg, params, slots=args.slots, max_len=args.max_len,
                         prefill_chunk=args.prefill_chunk,
                         queue_limit=args.queue_limit,
                         admission=args.admission,
-                        prefix_cache_size=args.prefix_cache)
+                        prefix_cache_size=args.prefix_cache,
+                        metric=met)
     tcfg = LG.TraceConfig(kind=args.trace, rate=args.rate,
                           n_requests=args.requests,
                           max_new=(args.max_new, args.max_new + 1),
-                          deadline=args.deadline, seed=args.seed)
-    reqs, wall = LG.run_trace(eng, LG.make_trace(tcfg, mcfg.vocab_size))
+                          deadline=args.deadline, seed=args.seed,
+                          labeled=args.labeled, p_pos=args.p_pos)
+    on_step = None
+    if rep is not None and rep.interval > 0:
+        # ticks are finished *scored* requests; state is already on the
+        # engine, so the lazy state_fn is just an attribute read
+        on_step = lambda e: rep.tick(e.n_scored, lambda: e.metric_state)
+    reqs, wall = LG.run_trace(eng, LG.make_trace(tcfg, mcfg.vocab_size),
+                              on_step=on_step)
     for r in reqs[:4]:
         print(f"req {r.uid}: prompt[{len(r.prompt)}] {r.status} "
               f"-> {r.generated}")
@@ -66,6 +99,9 @@ def main():
     print(f"ttft p50/p99: {m['ttft_p50_ms']:.1f}/{m['ttft_p99_ms']:.1f} ms; "
           f"latency p50/p99: {m['latency_p50_ms']:.1f}/"
           f"{m['latency_p99_ms']:.1f} ms; ticks={m['ticks']}")
+    if rep is not None:
+        rep.report(f"final ({eng.n_scored} scored)", eng.metric_state,
+                   n_seen=eng.n_scored)
     assert all(r.done for r in reqs)
 
 

@@ -33,6 +33,15 @@ payload accounting adapts to the tree automatically.
 every window's averaged iterate (replicated server state, zero extra wire
 bytes; 0 = off).
 
+Metric reporting (shared flags with launch/serve.py via
+repro.metrics.report): --metrics exact evaluates the held-out test split at
+every --metric-interval windows through the exact Metric backend;
+--metrics sketch turns on the in-training streaming sketch
+(CoDAConfig.stream_bins = --metric-bins): every local step histograms the
+scores the loss already computed, the per-window merge rides the existing
+window all-reduce as 2·bins·4 extra fp32 bytes, and the report line shows
+the training-stream AUC with its resolution bound.
+
 Overlapped averaging (--overlap, shard_map only): the window all-reduce is
 rescheduled as C = --overlap-chunks ppermute ring chains per dtype bucket
 inside a fused two-window step, so the first window's wire time hides under
@@ -65,6 +74,8 @@ from repro.configs.base import mlp_config
 from repro.core import coda, objective, schedules
 from repro.data import DataConfig, ShardedDataset
 from repro.launch import mesh as mesh_mod
+from repro.metrics import report as metric_report
+from repro.metrics import streaming
 
 
 def data_config_for(mcfg, p_pos: float) -> DataConfig:
@@ -155,6 +166,7 @@ def main():
                          "process — jax locks the device count on first use)")
     ap.add_argument("--multi-pod", action="store_true",
                     help="use the 3-axis (pod, data, model) mesh layout")
+    metric_report.add_metric_args(ap)
     args = ap.parse_args()
 
     if args.force_host_devices:
@@ -190,7 +202,9 @@ def main():
                            pauc_beta=args.pauc_beta,
                            server_momentum=args.server_momentum,
                            overlap_chunks=args.overlap_chunks
-                           if args.overlap else 0)
+                           if args.overlap else 0,
+                           stream_bins=args.metric_bins
+                           if args.metrics == "sketch" else 0)
     sched = schedules.ScheduleConfig(n_workers=args.workers, eta0=args.eta0,
                                      T0=args.t0, I0=args.interval,
                                      p_pos=ds.p_pos)
@@ -211,23 +225,47 @@ def main():
         h, _ = M.score(mcfg, params0, inputs)
         return h
 
-    def eval_auc(state) -> float:
-        return float(objective.roc_auc(test_scores(state), test["labels"]))
+    # the eval hook reports through the shared metric plumbing: sketch mode
+    # lifts the in-training streaming accumulator (state["sk_acc"], merged on
+    # the window wire) to the host; exact mode scores the held-out split
+    met = obj.metric(args.metrics, bins=args.metric_bins,
+                     lo=ccfg.stream_range[0], hi=ccfg.stream_range[1]) \
+        if args.metrics == "sketch" else obj.metric("exact")
+    rep = metric_report.IntervalReporter(met, interval=args.metric_interval,
+                                         label="train")
+    n_evals = [0]
+
+    def eval_fn(state) -> float:
+        n_evals[0] += 1
+        if args.metrics == "sketch":
+            sk = streaming.sketch_from_rows(state["sk_acc"],
+                                            *ccfg.stream_range)
+            return rep.report(f"eval {n_evals[0]}", sk, n_seen=int(sk.count))
+        st = met.update(met.init(), test_scores(state), test["labels"])
+        return rep.report(f"eval {n_evals[0]}", st,
+                          n_seen=int(np.asarray(test["labels"]).size))
 
     t0 = time.time()
     res = coda.fit(
         key, mcfg, ccfg, sched, args.stages,
         sample_window=lambda k, i: adapt(ds.sample_window(k, i, args.batch)),
         sample_alpha_batch=lambda k, m: adapt(ds.sample_alpha_batch(k, m)),
+        eval_every=args.metric_interval,
+        eval_fn=eval_fn if args.metric_interval else None,
         executor=args.executor, mesh=mesh, policy=args.policy)
     dt = time.time() - t0
-    auc = eval_auc(res.state)
+    h_test = test_scores(res.state)
+    auc = streaming.make_metric("auc", "exact").compute(h_test, test["labels"])
     extra = ""
     if obj.metric_name != "auc":
-        m = obj.eval_metric(test_scores(res.state), test["labels"])
+        m = obj.metric("exact").compute(h_test, test["labels"])
         extra = f", test {obj.metric_name}@{args.pauc_beta:g}={m:.4f}"
     print(f"done: {res.iterations} iters, {res.comm_rounds} comm rounds, "
           f"{dt:.1f}s, test AUC={auc:.4f}{extra}")
+    if args.metrics == "sketch":
+        sk = streaming.sketch_from_rows(res.state["sk_acc"],
+                                        *ccfg.stream_range)
+        rep.report("final train-stream", sk, n_seen=int(sk.count))
     compress = args.compress or None
     total = coda.comm_bytes(schedules.stages(sched, args.stages), res.state,
                             compress,

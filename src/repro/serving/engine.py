@@ -67,6 +67,9 @@ class Request:
     prompt_used: List[int] = dataclasses.field(default_factory=list)
     prefix_hit_tokens: int = 0
     score: Optional[float] = None        # AUC-head logit at the last prompt token
+    label: Optional[float] = None        # ground truth when the trace carries
+                                         # one (loadgen labeled traces) — feeds
+                                         # the engine's streaming-AUC sketch
     # latency accounting (engine clock, seconds)
     t_arrival: Optional[float] = None
     t_admitted: Optional[float] = None
@@ -99,6 +102,7 @@ class ServingEngine:
                  impl: str = "auto", prefill_chunk: int = 8,
                  queue_limit: Optional[int] = None, admission: str = "fifo",
                  on_overflow: str = "truncate", prefix_cache_size: int = 0,
+                 metric=None,
                  clock: Callable[[], float] = time.monotonic):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
@@ -140,6 +144,14 @@ class ServingEngine:
         self.n_completed = 0
         self.n_rejected = 0
         self.n_expired = 0
+        # streaming metric over served traffic: a repro.metrics.streaming
+        # Metric (usually AUC, sketch backend).  Every finalized request
+        # that carries both a score and a ground-truth label is folded into
+        # the mergeable state — including expired requests that were scored
+        # before their deadline hit (they were served traffic too).
+        self.metric = metric
+        self.metric_state = metric.init() if metric is not None else None
+        self.n_scored = 0
 
     # -- admission ----------------------------------------------------------
     def add_request(self, req: Request) -> bool:
@@ -343,6 +355,24 @@ class ServingEngine:
             self.n_expired += 1
         if s is not None and self.active[s] is req:
             self.active[s] = None
+        if (self.metric is not None and req.score is not None
+                and req.label is not None):
+            self.metric_state = self.metric.update(
+                self.metric_state, np.asarray([req.score], np.float32),
+                np.asarray([req.label], np.float32))
+            self.n_scored += 1
+
+    def streaming_metrics(self) -> Optional[dict]:
+        """The engine's streaming-metric record (None when no metric is
+        attached): finalized value + resolution bound + state footprint."""
+        if self.metric is None:
+            return None
+        return {"metric": self.metric.name,
+                "backend": self.metric.backend,
+                "value": self.metric.finalize(self.metric_state),
+                "resolution": self.metric.resolution(self.metric_state),
+                "scored": self.n_scored,
+                "state_bytes": self.metric.state_bytes(self.metric_state)}
 
     def run(self, max_ticks: int = 10_000) -> None:
         """Drive ``step`` until every request is finalized.  Raises

@@ -9,7 +9,9 @@ continuous-batching engine through this module:
     ``poisson`` (exponential inter-arrivals at ``rate`` req/s), and
     ``bursty`` (``burst_size`` simultaneous arrivals per burst).  An optional
     ``prefix_pool`` draws shared prompt prefixes so the engine's prefix
-    cache has something to hit.
+    cache has something to hit; ``labeled=True`` plants seed-deterministic
+    ground-truth labels (prompts via the ``DataConfig`` motif machinery) so
+    the engine's streaming-AUC sketch measures a real signal.
   * ``run_trace`` — paces a trace against the wall clock (arrivals before
     "now" are submitted, then the engine ticks) until every request is
     finalized.
@@ -41,10 +43,22 @@ class TraceConfig:
     eos_id: int = -1
     deadline: Optional[float] = None
     seed: int = 0
+    labeled: bool = False              # plant seed-deterministic ground-truth
+                                       # labels: prompts come from the
+                                       # DataConfig token machinery (positives
+                                       # carry motif tokens) so the engine's
+                                       # streaming AUC is measured against a
+                                       # real signal.  Takes precedence over
+                                       # prefix_pool (labeled prompts are not
+                                       # pooled).
+    p_pos: float = 0.7                 # positive ratio for labeled traces
+    label_signal: float = 1.5          # motif strength (DataConfig.signal)
 
     def __post_init__(self):
         if self.kind not in ("poisson", "bursty", "batch"):
             raise ValueError(f"unknown trace kind {self.kind!r}")
+        if self.labeled and not 0.0 < self.p_pos < 1.0:
+            raise ValueError(f"p_pos must be in (0, 1), got {self.p_pos}")
 
 
 def make_trace(tcfg: TraceConfig, vocab_size: int) -> List[Tuple[float, Request]]:
@@ -60,10 +74,32 @@ def make_trace(tcfg: TraceConfig, vocab_size: int) -> List[Tuple[float, Request]
         arrivals = (np.arange(n) // tcfg.burst_size) * (tcfg.burst_size / tcfg.rate)
     pool = [rng.randint(0, vocab_size, size=tcfg.prefix_len).tolist()
             for _ in range(tcfg.prefix_pool)]
+    labels = toks = None
+    if tcfg.labeled:
+        # ground truth rides the trace: Bernoulli(p_pos) labels from the
+        # same seeded rng, prompts from the DataConfig token machinery
+        # (positives carry motif tokens at strength label_signal) drawn
+        # once at max length and truncated per request — the engine's
+        # prompt score has a real signal to recover
+        import jax
+        import jax.numpy as jnp
+
+        from repro.data import synthetic
+
+        labels = (rng.uniform(size=n) < tcfg.p_pos).astype(np.float32)
+        dcfg = synthetic.DataConfig(
+            kind="tokens", vocab_size=vocab_size,
+            seq_len=max(1, tcfg.prompt_len[1] - 1),
+            signal=tcfg.label_signal, p_pos=tcfg.p_pos)
+        toks = np.asarray(synthetic._draw(
+            jax.random.PRNGKey(tcfg.seed), dcfg, (n,),
+            jnp.asarray(labels))["tokens"])
     trace = []
     for i in range(n):
         plen = int(rng.randint(*tcfg.prompt_len))
-        if pool:
+        if toks is not None:
+            prompt = toks[i, :plen].astype(int).tolist()
+        elif pool:
             prefix = pool[int(rng.randint(len(pool)))]
             tail = rng.randint(0, vocab_size,
                                size=max(1, plen - len(prefix))).tolist()
@@ -72,16 +108,20 @@ def make_trace(tcfg: TraceConfig, vocab_size: int) -> List[Tuple[float, Request]
             prompt = rng.randint(0, vocab_size, size=plen).tolist()
         req = Request(uid=i, prompt=prompt,
                       max_new_tokens=int(rng.randint(*tcfg.max_new)),
-                      eos_id=tcfg.eos_id, deadline=tcfg.deadline)
+                      eos_id=tcfg.eos_id, deadline=tcfg.deadline,
+                      label=None if labels is None else float(labels[i]))
         trace.append((float(arrivals[i]), req))
     return trace
 
 
 def run_trace(engine: ServingEngine, trace: List[Tuple[float, Request]], *,
-              max_ticks: int = 100_000) -> Tuple[List[Request], float]:
+              max_ticks: int = 100_000,
+              on_step=None) -> Tuple[List[Request], float]:
     """Pace ``trace`` against the wall clock through ``engine``.  Returns
     (requests, busy wall seconds).  Raises ``TicksExhausted``-style if the
-    engine cannot drain the trace within ``max_ticks`` device ticks."""
+    engine cannot drain the trace within ``max_ticks`` device ticks.
+    ``on_step(engine)``, if given, runs after every engine tick — the hook
+    ``launch/serve.py`` reports streaming metrics from."""
     t0 = time.monotonic()
     i, n = 0, len(trace)
     in_flight = 0
@@ -91,6 +131,8 @@ def run_trace(engine: ServingEngine, trace: List[Tuple[float, Request]], *,
             engine.add_request(trace[i][1])
             i += 1
         in_flight = engine.step()
+        if on_step is not None:
+            on_step(engine)
         if in_flight == 0 and i < n:
             time.sleep(min(max(trace[i][0] - (time.monotonic() - t0), 0.0),
                            0.05))
@@ -133,13 +175,27 @@ def summarize(reqs: List[Request], wall: float,
                    tokens_decoded=engine.tokens_decoded,
                    prefix_hits=engine.prefix_hits,
                    prefix_misses=engine.prefix_misses)
+        sm = engine.streaming_metrics()
+        if sm is not None:
+            # e.g. streaming_auc — AUC over served traffic, next to the
+            # latency percentiles
+            rec["streaming_" + sm["metric"]] = sm["value"]
+            rec.update(streaming_metric=sm["metric"],
+                       streaming_backend=sm["backend"],
+                       streaming_resolution=sm["resolution"],
+                       streaming_scored=sm["scored"],
+                       streaming_state_bytes=sm["state_bytes"])
     return rec
 
 
 def serve_load_report(arch: str = "stablelm-1.6b", *, engine_kw: dict = None,
-                      trace_kw: dict = None, seed: int = 0) -> dict:
+                      trace_kw: dict = None, seed: int = 0,
+                      metric_backend: str = "") -> dict:
     """One-stop runner for hillclimb/launch: build a smoke config + params,
-    serve one trace, return ``{"arch", "knobs", "trace", "metrics"}``."""
+    serve one trace, return ``{"arch", "knobs", "trace", "metrics"}``.
+    ``metric_backend`` ("exact" | "sketch") attaches a streaming-AUC metric
+    to the engine — meaningful with a ``labeled`` trace, where the metrics
+    record gains the ``streaming_auc`` row."""
     import jax
 
     from repro.configs import get_smoke_config
@@ -152,6 +208,11 @@ def serve_load_report(arch: str = "stablelm-1.6b", *, engine_kw: dict = None,
     engine_kw.setdefault("max_len", 64)
     engine_kw.setdefault("prefill_chunk", 8)
     tcfg = TraceConfig(**(trace_kw or {}))
+    metric = None
+    if metric_backend:
+        from repro.metrics import streaming
+
+        metric = streaming.make_metric("auc", metric_backend)
     # warm the jit cache with a throwaway engine so the timed trace measures
     # steady-state serving, not compilation (the chunk-step jit is
     # module-level: same (cfg, shapes, chunk) reuses the compiled programs)
@@ -159,7 +220,7 @@ def serve_load_report(arch: str = "stablelm-1.6b", *, engine_kw: dict = None,
     warm.add_request(Request(uid=-1, prompt=list(range(1, 12)),
                              max_new_tokens=2))
     warm.run()
-    eng = ServingEngine(cfg, params, **engine_kw)
+    eng = ServingEngine(cfg, params, metric=metric, **engine_kw)
     reqs, wall = run_trace(eng, make_trace(tcfg, cfg.vocab_size))
     return {"arch": arch, "knobs": engine_kw,
             "trace": dataclasses.asdict(tcfg),

@@ -1,0 +1,391 @@
+"""Tests for the streaming-metrics subsystem (repro/metrics/streaming.py)
+and its integration into the training loop.
+
+The load-bearing claims, each pinned here:
+
+  * the sketch AUC/pAUC agree with an O(n^2) pairwise oracle within the
+    sketch's own computable ``resolution`` bound (property-based over
+    random streams, sizes, and bin counts — the bound is vs the TRUE value,
+    so a float64 oracle needs no fp slack);
+  * the bound is monotone non-increasing under dyadic bin refinement, and
+    the realised error shrinks with bins;
+  * ``merge`` is associative, commutative, has ``empty_sketch`` as
+    identity, and merging per-shard sketches is bitwise identical to
+    sketching the stream in one pass (the property the window wire relies
+    on);
+  * the host (NumPy) and traced (jnp ``update_counts``) binning paths
+    produce identical counts — the training sketch and the host-side
+    serving sketch histogram the same way;
+  * the ``exact`` backend is numerically identical to the old
+    ``objective.roc_auc`` / ``objective.partial_auc`` path it replaced, and
+    ``Objective.eval_metric`` now raises a clear migration error;
+  * with ``CoDAConfig.stream_bins`` on, a vmap training window accumulates
+    exactly the scores its local steps computed (replay oracle), replicates
+    the accumulator across worker rows, zeroes the deltas, and the payload
+    accounting reports exactly the 2*bins*4-byte delta;
+  * the sharded executor (subprocess, 8 forced host devices) matches the
+    vmap oracle bitwise on the sketch counts for coda AND codasca, and
+    ``analysis.hlo.verify_window_payload`` asserts the compiled window's
+    collective bytes split exactly into baseline + sketch delta (and stays
+    at baseline with the hook off).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs.base import mlp_config
+from repro.core import coda, objective
+from repro.metrics import streaming
+
+
+# --------------------------------------------------------------------------
+# O(n^2) oracles (float64: the bound is vs the true value)
+# --------------------------------------------------------------------------
+def _pairwise_auc(scores, labels):
+    s = np.asarray(scores, np.float64).ravel()
+    y = np.asarray(labels, np.float64).ravel()
+    pos, neg = s[y > 0.5], s[y <= 0.5]
+    if not len(pos) or not len(neg):
+        return 0.0
+    d = pos[:, None] - neg[None, :]
+    return float(((d > 0) + 0.5 * (d == 0)).mean())
+
+
+def _pairwise_pauc(scores, labels, beta):
+    # hardest ceil(beta*N) negatives; ties at the k-boundary are harmless
+    # (tied values contribute identically whichever side of the cut)
+    s = np.asarray(scores, np.float64).ravel()
+    y = np.asarray(labels, np.float64).ravel()
+    pos, neg = s[y > 0.5], np.sort(s[y <= 0.5])[::-1]
+    if not len(pos) or not len(neg):
+        return 0.0
+    hard = neg[:max(1, int(np.ceil(beta * len(neg))))]
+    d = pos[:, None] - hard[None, :]
+    return float(((d > 0) + 0.5 * (d == 0)).mean())
+
+
+def _stream(seed, n):
+    rng = np.random.RandomState(seed)
+    y = (rng.uniform(size=n) < 0.65).astype(np.float32)
+    s = np.where(y > 0.5, rng.normal(0.8, 1.5, n),
+                 rng.normal(-0.6, 1.4, n)).astype(np.float32)
+    return s, y
+
+
+# --------------------------------------------------------------------------
+# sketch vs oracle: within the computable bound (property-based)
+# --------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=2, max_value=160),
+       bins=st.sampled_from([4, 16, 64, 256]))
+def test_sketch_auc_within_resolution_of_pairwise_oracle(seed, n, bins):
+    s, y = _stream(seed, n)
+    met = streaming.make_metric("auc", "sketch", bins=bins)
+    sk = met.update(met.init(), s, y)
+    assert abs(met.finalize(sk) - _pairwise_auc(s, y)) \
+        <= met.resolution(sk) + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=2, max_value=160),
+       bins=st.sampled_from([4, 16, 64, 256]),
+       beta=st.sampled_from([0.1, 0.3, 0.5, 1.0]))
+def test_sketch_pauc_within_resolution_of_pairwise_oracle(seed, n, bins, beta):
+    s, y = _stream(seed, n)
+    met = streaming.make_metric("pauc", "sketch", beta=beta, bins=bins)
+    sk = met.update(met.init(), s, y)
+    assert abs(met.finalize(sk) - _pairwise_pauc(s, y, beta)) \
+        <= met.resolution(sk) + 1e-9
+
+
+def test_error_and_bound_shrink_with_bins():
+    s, y = _stream(7, 4000)
+    truth = _pairwise_auc(s, y)
+    prev_bound = np.inf
+    errs = {}
+    for bins in (16, 64, 256, 1024, 4096):
+        met = streaming.make_metric("auc", "sketch", bins=bins)
+        sk = met.update(met.init(), s, y)
+        res = met.resolution(sk)
+        errs[bins] = abs(met.finalize(sk) - truth)
+        assert errs[bins] <= res + 1e-9
+        assert res <= prev_bound + 1e-12, "bound grew under refinement"
+        prev_bound = res
+    assert errs[4096] < errs[16]
+    assert prev_bound < 1e-2  # 4096 bins resolve a 4k stream tightly
+
+
+def test_degenerate_conventions_match_exact_backend():
+    for backend in ("exact", "sketch"):
+        met = streaming.make_metric("auc", backend, bins=32)
+        assert met.finalize(met.init()) == 0.0                      # empty
+        one = met.update(met.init(), [0.3, 0.4], [1.0, 1.0])
+        assert met.finalize(one) == 0.0                             # one class
+        ties = met.update(met.init(), [0.5] * 6, [1, 0, 1, 0, 1, 0])
+        assert met.finalize(ties) == pytest.approx(0.5)             # all ties
+
+
+# --------------------------------------------------------------------------
+# merge algebra: the property the window wire relies on
+# --------------------------------------------------------------------------
+def _eq(a, b):
+    return (np.array_equal(a.pos, b.pos) and np.array_equal(a.neg, b.neg)
+            and a.lo == b.lo and a.hi == b.hi)
+
+
+def test_merge_is_associative_commutative_with_identity():
+    parts = [streaming.update(streaming.empty_sketch(64), *_stream(i, 50))
+             for i in range(3)]
+    a, b, c = parts
+    assert _eq(streaming.merge(a, b), streaming.merge(b, a))
+    assert _eq(streaming.merge(streaming.merge(a, b), c),
+               streaming.merge(a, streaming.merge(b, c)))
+    assert _eq(streaming.merge(a, streaming.empty_sketch(64)), a)
+    with pytest.raises(ValueError, match="incompatible"):
+        streaming.merge(a, streaming.empty_sketch(32))
+
+
+def test_merge_of_shards_equals_one_stream():
+    s, y = _stream(11, 999)
+    whole = streaming.update(streaming.empty_sketch(128), s, y)
+    shards = [streaming.update(streaming.empty_sketch(128), si, yi)
+              for si, yi in zip(np.array_split(s, 7), np.array_split(y, 7))]
+    acc = shards[0]
+    for sh in shards[1:]:
+        acc = streaming.merge(acc, sh)
+    assert _eq(acc, whole)
+
+
+def test_host_and_traced_binning_agree():
+    s, y = _stream(3, 777)
+    host = streaming.update(streaming.empty_sketch(64, -8.0, 8.0), s, y)
+    pos, neg = streaming.update_counts(
+        jnp.zeros(64, jnp.float32), jnp.zeros(64, jnp.float32),
+        jnp.asarray(s), jnp.asarray(y), -8.0, 8.0)
+    assert np.array_equal(np.asarray(pos), host.pos)
+    assert np.array_equal(np.asarray(neg), host.neg)
+
+
+# --------------------------------------------------------------------------
+# Metric API: exact backend identity + the eval_metric migration error
+# --------------------------------------------------------------------------
+def test_exact_backend_identical_to_old_objective_path():
+    s, y = _stream(5, 321)
+    assert streaming.make_metric("auc", "exact").compute(s, y) \
+        == float(objective.roc_auc(s, y))
+    assert streaming.make_metric("pauc", "exact", beta=0.3).compute(s, y) \
+        == float(objective.partial_auc(s, y, 0.3))
+
+
+def test_exact_backend_chunked_updates_match_one_shot():
+    s, y = _stream(9, 300)
+    met = streaming.make_metric("auc", "exact")
+    state = met.init()
+    for si, yi in zip(np.array_split(s, 5), np.array_split(y, 5)):
+        state = met.update(state, si, yi)
+    assert met.finalize(state) == met.compute(s, y)
+    assert met.state_bytes(state) == s.nbytes + y.nbytes
+
+
+def test_objective_metric_factory_and_eval_metric_removal():
+    auc_obj = objective.AUCObjective()
+    assert auc_obj.metric("exact").name == "auc"
+    dro = objective.PAUCDROObjective(beta=0.25)
+    met = dro.metric("sketch", bins=64)
+    assert met.name == "pauc" and met.beta == 0.25 and met.bins == 64
+    with pytest.raises(AttributeError, match="Objective.metric"):
+        auc_obj.eval_metric
+    with pytest.raises(ValueError, match="unknown metric kind"):
+        streaming.make_metric("f1", "exact")
+    with pytest.raises(ValueError, match="unknown metric backend"):
+        streaming.make_metric("auc", "approx")
+
+
+# --------------------------------------------------------------------------
+# training integration (vmap): replay oracle + payload accounting
+# --------------------------------------------------------------------------
+def _window_case(K=4, I=3, B=8, bins=16, seed=0, **kw):
+    mcfg = mlp_config(n_features=16, d=32)
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, stream_bins=bins, **kw)
+    key = jax.random.PRNGKey(seed)
+    st0 = coda.init_state(key, mcfg, ccfg)
+    ky, kx = jax.random.split(key)
+    y = (jax.random.uniform(ky, (I, K, B)) < 0.7).astype(jnp.float32)
+    x = jax.random.normal(kx, (I, K, B, 16)) + 0.3 * (y[..., None] * 2 - 1)
+    return mcfg, ccfg, st0, {"features": x, "labels": y}
+
+
+def test_window_sketch_matches_score_replay_oracle():
+    """The in-training sketch holds EXACTLY the histogram of the scores the
+    local steps computed: replay the window step by step with
+    ``grad_step_scores`` (same params trajectory — the sketch never feeds
+    back into the updates) and histogram the scores by hand."""
+    mcfg, ccfg, st0, wb = _window_case()
+    state, _ = coda.window_step(mcfg, ccfg, st0, wb, jnp.float32(0.1))
+
+    oracle = streaming.empty_sketch(ccfg.stream_bins, *ccfg.stream_range)
+    replay = st0
+    for i in range(wb["labels"].shape[0]):
+        batch = {k: v[i] for k, v in wb.items()}
+        _, _, hs = coda.grad_step_scores(mcfg, ccfg, replay, batch)
+        oracle = streaming.update(oracle, np.asarray(hs),
+                                  np.asarray(batch["labels"]))
+        replay, _ = coda.local_step(mcfg, ccfg, replay, batch,
+                                    jnp.float32(0.1))
+
+    got = streaming.sketch_from_rows(state["sk_acc"], *ccfg.stream_range)
+    assert np.array_equal(got.pos, oracle.pos)
+    assert np.array_equal(got.neg, oracle.neg)
+    I, K, B = wb["labels"].shape
+    assert got.count == I * K * B
+    # the accumulator is replicated across worker rows, the deltas are reset
+    for leaf in (state["sk_acc"]["pos"], state["sk_acc"]["neg"]):
+        assert np.array_equal(np.asarray(leaf),
+                              np.broadcast_to(np.asarray(leaf[0]), leaf.shape))
+    assert not np.asarray(state["sk_new"]["pos"]).any()
+    assert not np.asarray(state["sk_new"]["neg"]).any()
+
+
+def test_window_sketch_accumulates_across_windows_and_auc_within_bound():
+    mcfg, ccfg, st0, wb = _window_case(bins=128)
+    state = st0
+    seen_s, seen_y = [], []
+    for w in range(3):
+        replay = state
+        for i in range(wb["labels"].shape[0]):
+            batch = {k: v[i] for k, v in wb.items()}
+            _, _, hs = coda.grad_step_scores(mcfg, ccfg, replay, batch)
+            seen_s.append(np.asarray(hs).ravel())
+            seen_y.append(np.asarray(batch["labels"]).ravel())
+            replay, _ = coda.local_step(mcfg, ccfg, replay, batch,
+                                        jnp.float32(0.1))
+        state, _ = coda.window_step(mcfg, ccfg, state, wb, jnp.float32(0.1))
+    sk = streaming.sketch_from_rows(state["sk_acc"], *ccfg.stream_range)
+    I, K, B = wb["labels"].shape
+    assert sk.count == 3 * I * K * B
+    met = streaming.SketchMetric(bins=ccfg.stream_bins)
+    truth = _pairwise_auc(np.concatenate(seen_s), np.concatenate(seen_y))
+    assert abs(met.finalize(sk) - truth) <= met.resolution(sk) + 1e-9
+
+
+def test_streaming_payload_accounting():
+    mcfg, ccfg, st0, _ = _window_case(bins=16)
+    mcfg2, base_cfg, base_st, _ = _window_case(bins=0)
+    delta = 2 * 16 * 4
+    assert coda.streaming_payload_bytes(st0) == delta
+    assert coda.streaming_payload_bytes(base_st) == 0
+    assert coda.window_payload_bytes(st0) == \
+        coda.window_payload_bytes(base_st) + delta
+    by_dtype = coda.window_payload_by_dtype(st0)
+    assert by_dtype["f32"] == coda.window_payload_by_dtype(base_st)["f32"] + delta
+    # CODASCA doubles the model payload but NOT the sketch delta (the deltas
+    # ride the wire once; the correction variates don't histogram anything)
+    _, _, sca_st, _ = _window_case(bins=16, algorithm="codasca")
+    _, _, sca_base, _ = _window_case(bins=0, algorithm="codasca")
+    assert coda.window_payload_bytes(sca_st) == \
+        coda.window_payload_bytes(sca_base) + delta
+    with pytest.raises(ValueError, match="stream_bins"):
+        coda.CoDAConfig(n_workers=2, p_pos=0.7, stream_bins=-1)
+    with pytest.raises(ValueError, match="stream"):
+        coda.CoDAConfig(n_workers=2, p_pos=0.7, stream_bins=16,
+                        stream_range=(2.0, -2.0))
+
+
+def test_verify_window_payload_split_validation():
+    from repro.analysis import hlo as H
+    with pytest.raises(ValueError, match="go together"):
+        H.verify_window_payload("", 100, baseline_bytes=90)
+
+
+# --------------------------------------------------------------------------
+# sharded path (subprocess: 8 forced host devices)
+# --------------------------------------------------------------------------
+_PRELUDE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.analysis import hlo as H
+    from repro.configs.base import mlp_config
+    from repro.core import coda, codasca
+    from repro.metrics import streaming
+    mcfg = mlp_config(n_features=16, d=32)
+
+    def make_case(K, I, B=8, seed=0, **kw):
+        ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, **kw)
+        key = jax.random.PRNGKey(seed)
+        st0 = coda.init_state(key, mcfg, ccfg)
+        ky, kx = jax.random.split(key)
+        y = (jax.random.uniform(ky, (I, K, B)) < 0.7).astype(jnp.float32)
+        x = jax.random.normal(kx, (I, K, B, 16)) + 0.3 * (y[..., None] * 2 - 1)
+        return ccfg, st0, {"features": x, "labels": y}
+""")
+
+
+def _run_sub(script: str, timeout=900):
+    r = subprocess.run([sys.executable, "-c",
+                        _PRELUDE + textwrap.dedent(script)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env={**os.environ, "PYTHONPATH": "src"},
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "ALL OK" in r.stdout, r.stdout[-2000:]
+
+
+def test_shard_map_streaming_eval_matches_oracle_and_payload_delta():
+    """The CI matrix's streaming-eval case: with ``stream_bins`` on, the
+    sharded executor's window (coda AND codasca) lands the SAME sketch
+    counts as the vmap oracle — the merge rides the one window all-reduce
+    pre-scaled so the collective's mean is the exact integer sum — and
+    ``verify_window_payload`` asserts the collective bytes split exactly
+    into the no-sketch baseline plus the 2*bins*4 sketch delta.  With the
+    hook off the payload is byte-identical to the baseline."""
+    _run_sub("""
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    K, I, BINS = 8, 3, 16
+    delta = 2 * BINS * 4
+    for label, kw in [("coda", {}), ("codasca", dict(algorithm="codasca"))]:
+        base_cfg, base_st, wb = make_case(K, I, **kw)
+        ccfg, st0, wb = make_case(K, I, stream_bins=BINS, **kw)
+        wstep = codasca.window_step if ccfg.algorithm == "codasca" \\
+            else coda.window_step
+        exe = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh,
+                                 donate=False)
+        st, rt = exe.place(st0), st0
+        for _ in range(2):
+            st, _ = exe.window_step(st, wb, 0.1)
+            rt, _ = wstep(mcfg, ccfg, rt, wb, 0.1)
+        for f in ("pos", "neg"):
+            assert np.array_equal(np.asarray(st["sk_acc"][f]),
+                                  np.asarray(rt["sk_acc"][f])), (label, f)
+            assert not np.asarray(st["sk_new"][f]).any(), (label, f)
+        n = float(np.asarray(st["sk_acc"]["pos"][0]).sum()
+                  + np.asarray(st["sk_acc"]["neg"][0]).sum())
+        assert n == 2 * I * K * 8, n
+
+        # payload: baseline + exactly the sketch delta on the wire
+        base = coda.window_payload_bytes(base_st)
+        payload = coda.window_payload_bytes(st0)
+        assert payload == base + delta
+        txt = exe.window_fn(st0, wb).lower(
+            st0, wb, jnp.float32(0.1)).compile().as_text()
+        H.verify_window_payload(txt, payload, baseline_bytes=base,
+                                delta_bytes=delta)
+        # hook off: the compiled window is byte-identical to the baseline
+        bexe = coda.make_executor(mcfg, base_cfg, "shard_map", mesh=mesh,
+                                  donate=False)
+        btxt = bexe.window_fn(base_st, wb).lower(
+            base_st, wb, jnp.float32(0.1)).compile().as_text()
+        H.verify_window_payload(btxt, base)
+        print("OK", label, "payload", payload, "=", base, "+", delta)
+    print("ALL OK")
+    """)

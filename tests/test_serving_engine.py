@@ -294,3 +294,70 @@ def test_prefix_cache_miss_on_disjoint_prompt(cfg_params):
     eng.run()
     assert b.prefix_hit_tokens == 0
     assert eng.prefix_misses >= 1
+
+
+# --------------------------------------------------------------------------
+# streaming metrics over served traffic
+# --------------------------------------------------------------------------
+def test_streaming_metric_accumulates_labeled_requests(cfg_params):
+    """With a metric attached and a labeled trace, every finalized scored
+    request folds into the engine's streaming state, and the sketch AUC
+    agrees with the exact metric over the same served (score, label) pairs
+    within the sketch's resolution bound (+1e-6 fp slack: the oracle's
+    f32 score arithmetic carries ~1e-7 noise of its own)."""
+    from repro.metrics import streaming
+    from repro.serving import loadgen as LG
+
+    met = streaming.make_metric("auc", "sketch", bins=256)
+    eng = _engine(cfg_params, slots=2, metric=met)
+    tcfg = LG.TraceConfig(kind="batch", n_requests=12, prompt_len=(6, 20),
+                          max_new=(1, 3), labeled=True, seed=5)
+    cfg, _ = cfg_params
+    reqs, wall = LG.run_trace(eng, LG.make_trace(tcfg, cfg.vocab_size))
+    assert eng.n_scored == 12
+    assert all(r.label in (0.0, 1.0) for r in reqs)
+    sm = eng.streaming_metrics()
+    assert sm["metric"] == "auc" and sm["backend"] == "sketch"
+    assert sm["scored"] == 12 and sm["state_bytes"] == 2 * 256 * 4
+    exact = streaming.make_metric("auc", "exact").compute(
+        np.asarray([r.score for r in reqs], np.float32),
+        np.asarray([r.label for r in reqs], np.float32))
+    assert abs(sm["value"] - exact) <= sm["resolution"] + 1e-6
+    m = LG.summarize(reqs, wall, eng)
+    assert m["streaming_auc"] == sm["value"]
+    assert m["streaming_scored"] == 12
+
+
+def test_streaming_metric_ignores_unlabeled_requests(cfg_params):
+    from repro.metrics import streaming
+    from repro.serving import loadgen as LG
+
+    eng = _engine(cfg_params, slots=2,
+                  metric=streaming.make_metric("auc", "exact"))
+    cfg, _ = cfg_params
+    tcfg = LG.TraceConfig(kind="batch", n_requests=4, prompt_len=(6, 20),
+                          max_new=(1, 3), seed=1)  # labeled=False
+    reqs, wall = LG.run_trace(eng, LG.make_trace(tcfg, cfg.vocab_size))
+    assert eng.n_scored == 0
+    assert eng.streaming_metrics()["value"] == 0.0
+    # no metric attached -> no streaming rows at all
+    eng2 = _engine(cfg_params, slots=2)
+    assert eng2.streaming_metrics() is None
+    assert "streaming_auc" not in LG.summarize(reqs, wall, eng2)
+
+
+def test_labeled_trace_is_seed_deterministic(cfg_params):
+    from repro.serving import loadgen as LG
+
+    cfg, _ = cfg_params
+    tcfg = LG.TraceConfig(kind="batch", n_requests=6, labeled=True, seed=9)
+    a = LG.make_trace(tcfg, cfg.vocab_size)
+    b = LG.make_trace(tcfg, cfg.vocab_size)
+    assert [(r.prompt, r.label) for _, r in a] \
+        == [(r.prompt, r.label) for _, r in b]
+    c = LG.make_trace(LG.TraceConfig(kind="batch", n_requests=6,
+                                     labeled=True, seed=10), cfg.vocab_size)
+    assert [(r.prompt, r.label) for _, r in a] \
+        != [(r.prompt, r.label) for _, r in c]
+    with pytest.raises(ValueError, match="p_pos"):
+        LG.TraceConfig(labeled=True, p_pos=1.5)
