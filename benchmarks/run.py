@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import audit as A
 from repro.analysis import hlo as H
 from repro.configs.base import mlp_config
 from repro.core import coda, schedules
@@ -306,7 +307,7 @@ def bench_sharded_window(fast=False, smoke=False):
                 if not compress:
                     # the acceptance invariant, enforced at bench time too:
                     # ONE all-reduce, operand bytes == documented payload
-                    H.verify_window_payload(txt, payload)
+                    A.assert_window_payload(txt, payload)
 
 
 def bench_overlap_window(fast=False, smoke=False):
@@ -400,7 +401,7 @@ def bench_overlap_window(fast=False, smoke=False):
                 state0, wb2, jnp.float32(0.1)).compile().as_text()
             # chain independence is only analyzable when the local steps
             # lower as a while loop (I >= 2, see permute_chain_components)
-            H.verify_overlapped_window(txt, n_hops=n_hops,
+            A.assert_overlapped_window(txt, n_hops=n_hops,
                                        n_chains=n_chains if I > 1 else None)
             emit(f"{tag}/hlo", 0.0,
                  f"collective_permutes={n_hops};"

@@ -1,0 +1,172 @@
+"""Compiled-program audit CLI — the CI gate over the whole program registry.
+
+Runs the rule engine (src/repro/analysis/audit.py: R1 collective-placement,
+R2 donation, R3 host-sync/dtype lint, R4 recompile budget, R5 Pallas static
+checks) over every distinct program the repo builds:
+
+  * training: executors × {coda, codasca} × {fp32, int8} × {blocking,
+    overlap} (minus the combinations the config layer itself rejects —
+    int8 × overlap, sketch × int8)
+  * serving: the engine's two chunk programs (C = prefill_chunk, C = 1)
+    plus the live compile-count drive
+  * kernels: the static launch geometry of every Pallas kernel under each
+    dispatch impl
+
+and writes a JSON artifact (one record per leg + the aggregate verdict).
+Exit status is the gate: 0 iff every rule passed on every leg.
+
+Usage:
+  PYTHONPATH=src python scripts/audit.py --smoke --force-host-devices 8 \
+      --json audit.json
+  PYTHONPATH=src python scripts/audit.py --only sharded/codasca
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def build_legs(n_devices: int, *, smoke: bool) -> list:
+    """The audit matrix as (name, thunk) pairs.  Thunks are lazy so --only
+    filters before any compilation happens."""
+    from repro.analysis import audit
+    from repro.configs.base import mlp_config
+    from repro.core.coda import CoDAConfig
+    from repro.launch import mesh as M
+
+    if smoke:
+        mcfg = mlp_config(n_features=16, d=32)
+        window_lens = (1, 2)
+    else:
+        mcfg = mlp_config(n_features=64, d=128)
+        window_lens = (1, 2, 3)
+    I = max(window_lens)
+    K = n_devices
+
+    def ccfg_for(algorithm: str, compress: str, schedule: str) -> CoDAConfig:
+        return CoDAConfig(
+            n_workers=K, algorithm=algorithm, avg_compress=compress,
+            overlap_chunks=2 if schedule == "overlap" else 0)
+
+    legs = []
+
+    def training_leg(executor: str, algorithm: str, compress: str,
+                     schedule: str):
+        name = f"{executor}/{algorithm}/{compress or 'fp32'}/{schedule}"
+
+        def run():
+            ccfg = ccfg_for(algorithm, compress, schedule)
+            kw = dict(I=I, B=8, window_lens=window_lens, tag=name)
+            if executor == "shard_map":
+                kw.update(mesh=M.make_worker_mesh(K), policy="replica")
+            programs = audit.capture_training_programs(
+                mcfg, ccfg, executor=executor, **kw)
+            return audit.run_rules(programs, check_dispatch=False)
+
+        legs.append((name, run))
+
+    # the vmap oracle never overlaps (no wire to hide); the sharded
+    # executor runs the full schedule axis, minus int8 × overlap which the
+    # config layer rejects by construction
+    for algorithm in ("coda", "codasca"):
+        for compress in ("", "int8"):
+            training_leg("vmap", algorithm, compress, "blocking")
+            training_leg("shard_map", algorithm, compress, "blocking")
+            if not compress:
+                training_leg("shard_map", algorithm, compress, "overlap")
+
+    def serving_leg():
+        def run():
+            programs = audit.capture_serving_programs(
+                slots=2, max_len=32, prefill_chunk=4)
+            return audit.run_rules(programs, check_dispatch=False)
+        legs.append(("serving/chunk_step", run))
+
+    serving_leg()
+
+    def kernel_leg(impl: str):
+        def run():
+            launches = audit.capture_kernel_launches(impl=impl)
+            return audit.run_rules([], launches, rules={"R5"})
+        legs.append((f"kernels/{impl}", run))
+
+    for impl in ("auto", "ref", "pallas"):
+        kernel_leg(impl)
+    return legs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small model + short window axis (the CI matrix)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the audit artifact here")
+    ap.add_argument("--only", metavar="SUBSTR",
+                    help="run only legs whose name contains SUBSTR")
+    ap.add_argument("--list", action="store_true",
+                    help="print leg names and exit")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    metavar="N", help="force N XLA host devices (set before "
+                    "the first backend touch)")
+    args = ap.parse_args(argv)
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    if args.force_host_devices:
+        from repro.launch import mesh as M
+        M.force_host_device_count(args.force_host_devices)
+    import jax
+
+    n_devices = len(jax.devices())
+    legs = build_legs(n_devices, smoke=args.smoke)
+    if args.only:
+        legs = [(n, r) for n, r in legs if args.only in n]
+        if not legs:
+            print(f"no legs match --only {args.only!r}", file=sys.stderr)
+            return 2
+    if args.list:
+        for name, _ in legs:
+            print(name)
+        return 0
+
+    records, any_failed = [], False
+    for name, run in legs:
+        t0 = time.perf_counter()
+        try:
+            report = run().to_dict()
+        except Exception as e:  # a crashed capture is a failed leg, not a
+            report = {          # crashed gate — the artifact records it
+                "ok": False, "n_checked": 0, "n_findings": 1,
+                "rules": {"capture": {"checked": [], "findings": [
+                    {"program": name, "message": f"{type(e).__name__}: {e}"},
+                ]}}}
+        report["leg"] = name
+        report["seconds"] = round(time.perf_counter() - t0, 3)
+        records.append(report)
+        any_failed |= not report["ok"]
+        status = "ok" if report["ok"] else "FAIL"
+        print(f"[{status}] {name} ({report['n_checked']} checks, "
+              f"{report['n_findings']} findings, {report['seconds']}s)")
+        for rule, rec in report["rules"].items():
+            for f in rec["findings"]:
+                print(f"    [{rule}] {f['program']}: {f['message']}")
+
+    artifact = {
+        "ok": not any_failed,
+        "n_devices": n_devices,
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "legs": records,
+    }
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(artifact, fh, indent=2)
+        print(f"wrote {args.json}")
+    print("audit:", "ok" if artifact["ok"] else "FAILED")
+    return 1 if any_failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,1 +1,1 @@
-from repro.analysis import hlo  # noqa: F401
+from repro.analysis import audit, hlo  # noqa: F401

@@ -1,5 +1,5 @@
 """Compiled-artifact analysis: collective bytes from optimized HLO text and
-the three roofline terms (§Roofline of EXPERIMENTS.md).
+the three roofline terms (see docs/analysis.md).
 
 collective_bytes is NOT in cost_analysis(); we parse the optimized HLO and
 sum the result-shape bytes of every cross-device op.  ``collective_ops``
@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -31,17 +30,24 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 _SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# Matches the op name right after the result type.  The optional "-start"
+# suffix is captured so async collectives count ONCE, from their start op:
+# the matching "-done" line does not match at all (the regex requires "("
+# directly after the op name / "-start", and "-done(" has neither) — a
+# property tests/test_hlo_parser.py pins.  Tuple result types may nest
+# parens (multi-operand async collectives), hence the non-greedy paren
+# matcher with a bounded nesting depth of one.
 _OP_RE = re.compile(
-    r"=\s*(?P<type>\([^)]*\)|[\w\[\],]+(?:\{[^}]*\})?)\s*"
+    r"=\s*(?P<type>\((?:[^()]|\([^()]*\))*\)|[\w\[\],]+(?:\{[^}]*\})?)\s*"
     r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(")
+    r"(?P<start>-start)?\(")
 
 
 _GROUPS_RE = re.compile(r"replica_groups=(\{\{.*?\}\}|\{[^{}]*\})")
 
 
-def _dtype_bytes(type_str: str) -> Dict[str, int]:
-    out: Dict[str, int] = {}
+def _dtype_bytes(type_str: str) -> dict[str, int]:
+    out: dict[str, int] = {}
     for dt, dims in _SHAPE_RE.findall(type_str):
         if dt not in _DTYPE_BYTES:
             continue
@@ -57,19 +63,51 @@ def _shape_bytes(type_str: str) -> int:
     return sum(_dtype_bytes(type_str).values())
 
 
-def collective_ops(hlo_text: str) -> List[dict]:
+def _tuple_components(type_str: str) -> list[str]:
+    """Split a tuple type string at its TOP-LEVEL commas — one nesting level
+    deep, matching _OP_RE's type matcher.  Non-tuple types come back as a
+    single component."""
+    s = type_str.strip()
+    if not (s.startswith("(") and s.endswith(")")):
+        return [s]
+    parts, depth, cur = [], 0, []
+    for ch in s[1:-1]:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
+def collective_ops(hlo_text: str) -> list[dict]:
     """One record per collective op in the optimized HLO:
     {op, bytes, by_dtype, replica_groups}.  ``bytes`` are result-shape bytes
     (== per-participant operand bytes for all-reduce; the gathered size for
     all-gather).  ``replica_groups`` is the literal group string, so callers
-    can tell cross-worker reductions apart from any intra-group ones."""
+    can tell cross-worker reductions apart from any intra-group ones.
+
+    Async pairs count ONCE: the ``-start`` op is the record (only the
+    RESULT component of its (operands, results) tuple type is summed — the
+    operand alias would double the bytes) and the ``-done`` line never
+    matches."""
     ops = []
     for line in hlo_text.splitlines():
         m = _OP_RE.search(line)
         if not m:
             continue
         g = _GROUPS_RE.search(line)
-        by_dtype = _dtype_bytes(m.group("type"))
+        type_str = m.group("type")
+        if m.group("start"):
+            parts = _tuple_components(type_str)
+            if len(parts) >= 2:
+                type_str = parts[1]
+        by_dtype = _dtype_bytes(type_str)
         ops.append({
             "op": m.group("op"),
             "bytes": sum(by_dtype.values()),
@@ -82,9 +120,9 @@ def collective_ops(hlo_text: str) -> List[dict]:
 def verify_window_payload(hlo_text: str, expected_bytes: int, *,
                           op: str = "all-reduce",
                           count: int = None,
-                          by_dtype: Dict[str, int] = None,
+                          by_dtype: dict[str, int] = None,
                           baseline_bytes: int = None,
-                          delta_bytes: int = None) -> List[dict]:
+                          delta_bytes: int = None) -> list[dict]:
     """Assert a compiled CoDA/CODASCA window's wire traffic: all collectives
     are of kind ``op``, totalling ``expected_bytes`` result-shape bytes —
     and *no other* collective of any kind.
@@ -121,66 +159,16 @@ def verify_window_payload(hlo_text: str, expected_bytes: int, *,
 
     Returns the op records on success so callers can additionally inspect
     dtypes / replica groups.
+
+    This is the R1 collective-placement rule of the compiled-program
+    auditor — the checker lives in ``analysis/audit.py``
+    (``window_payload_problems``); this wrapper keeps the historical
+    assert-style entry point.
     """
-    if (baseline_bytes is None) != (delta_bytes is None):
-        raise ValueError("baseline_bytes and delta_bytes go together")
-    if baseline_bytes is not None and \
-            baseline_bytes + delta_bytes != expected_bytes:
-        raise AssertionError(
-            f"payload delta mismatch: baseline {baseline_bytes} + delta "
-            f"{delta_bytes} != expected {expected_bytes}")
-    ops = collective_ops(hlo_text)
-    stray = [o for o in ops if o["op"] != op]
-    if stray:
-        raise AssertionError(
-            f"expected only {op} ops, found {[(o['op'], o['bytes']) for o in stray]}")
-    if count is not None:
-        if len(ops) != count:
-            raise AssertionError(
-                f"expected exactly {count} {op} op(s), found "
-                f"{[(o['op'], o['bytes']) for o in ops]}")
-    elif by_dtype is None:
-        seen: Dict[str, int] = {}
-        for o in ops:
-            for dt in o["by_dtype"]:
-                seen[dt] = seen.get(dt, 0) + 1
-        dup = {dt: n for dt, n in seen.items() if n > 1}
-        if dup or not ops:
-            raise AssertionError(
-                f"expected one {op} per payload dtype bucket, found "
-                f"{[(o['op'], o['by_dtype']) for o in ops]}")
-    if by_dtype is not None:
-        if sum(by_dtype.values()) != expected_bytes:
-            raise AssertionError(
-                f"by_dtype buckets sum to {sum(by_dtype.values())}, "
-                f"expected_bytes says {expected_bytes}")
-        unmatched = list(ops)
-        for tag, b in sorted(by_dtype.items()):
-            hit = None
-            for o in unmatched:
-                if o["by_dtype"] == {tag: b}:
-                    hit = o          # verbatim wire dtype
-                    break
-                if tag in ("bf16", "f16") and o["by_dtype"] == {"f32": 2 * b}:
-                    hit = o          # float-normalized to f32, same elements
-                    break
-            if hit is None:
-                raise AssertionError(
-                    f"no {op} carries the {tag} bucket of {b} bytes "
-                    f"(ops: {[(o['op'], o['by_dtype']) for o in ops]})")
-            unmatched.remove(hit)
-        if unmatched:
-            raise AssertionError(
-                f"stray {op} beyond the accounted dtype buckets: "
-                f"{[(o['op'], o['by_dtype']) for o in unmatched]}")
-    else:
-        total = sum(o["bytes"] for o in ops)
-        if total != expected_bytes:
-            raise AssertionError(
-                f"window payload mismatch: HLO ships {total} bytes, "
-                f"accounting says {expected_bytes} "
-                f"({[(o['op'], o['bytes']) for o in ops]})")
-    return ops
+    from repro.analysis import audit
+    return audit.assert_window_payload(
+        hlo_text, expected_bytes, op=op, count=count, by_dtype=by_dtype,
+        baseline_bytes=baseline_bytes, delta_bytes=delta_bytes)
 
 
 _DOT_RE = re.compile(r"\b(dot|convolution)\(")
@@ -248,8 +236,8 @@ def permute_chain_components(hlo_text: str) -> int:
                   if ln.startswith("ENTRY ")), None)
     if start is None:
         raise AssertionError("no ENTRY computation in HLO text")
-    carried: Dict[str, frozenset] = {}
-    parent: Dict[int, int] = {}
+    carried: dict[str, frozenset] = {}
+    parent: dict[int, int] = {}
 
     def find(x):
         while parent[x] != x:
@@ -288,7 +276,7 @@ def permute_chain_components(hlo_text: str) -> int:
 
 def verify_overlapped_window(hlo_text: str, *, n_hops: int,
                              n_chains: int = None,
-                             require_compute_between: bool = True) -> List[dict]:
+                             require_compute_between: bool = True) -> list[dict]:
     """Assert the overlapped window-pair module's wire schedule: NO blocking
     all-reduce (or any other collective kind); the averaging is exactly
     ``n_hops`` ``collective-permute`` ops (C chunk chains × 2·(R−1) hops ×
@@ -307,45 +295,19 @@ def verify_overlapped_window(hlo_text: str, *, n_hops: int,
     around the averaging) rather than a scheduling guarantee — the
     falsifiable overlap invariants are the chain/hop/no-barrier checks
     above.  Returns the permute op records.
+
+    This is the ring form of the auditor's R1 collective-placement rule —
+    the checker lives in ``analysis/audit.py``
+    (``overlapped_window_problems``); this wrapper keeps the historical
+    assert-style entry point.
     """
-    ops = collective_ops(hlo_text)
-    stray = [o for o in ops if o["op"] != "collective-permute"]
-    if stray:
-        raise AssertionError(
-            "overlapped window must not contain blocking collectives, found "
-            f"{[(o['op'], o['bytes']) for o in stray]}")
-    if len(ops) != n_hops:
-        raise AssertionError(
-            f"expected {n_hops} collective-permute hops, found {len(ops)}")
-    if n_chains is not None:
-        got = permute_chain_components(hlo_text)
-        if got != n_chains:
-            raise AssertionError(
-                f"expected {n_chains} independent permute chains, found "
-                f"{got} — the chunked ring degenerated (de-chunked or "
-                "cross-chunk serialized)")
-    if require_compute_between and ops:
-        dotted = _dot_bearing_computations(hlo_text)
-        lines = hlo_text.splitlines()
-        hop_idx = [i for i, ln in enumerate(lines) if _OP_RE.search(ln)]
-        found = False
-        for ln in lines[hop_idx[0] + 1:hop_idx[-1]]:
-            if _DOT_RE.search(ln):          # an unfused dot right there
-                found = True
-                break
-            if any(c.lstrip("%") in dotted
-                   for c in _CALLEE_RE.findall(ln)):
-                found = True
-                break
-        if not found:
-            raise AssertionError(
-                "no dot-bearing compute scheduled between the first and last "
-                "ring hop — the two windows were not fused around the "
-                "averaging")
-    return ops
+    from repro.analysis import audit
+    return audit.assert_overlapped_window(
+        hlo_text, n_hops=n_hops, n_chains=n_chains,
+        require_compute_between=require_compute_between)
 
 
-def collective_bytes(hlo_text: str) -> Dict[str, dict]:
+def collective_bytes(hlo_text: str) -> dict[str, dict]:
     """Per-collective-kind {bytes, count, by_dtype} from optimized HLO."""
     out = {k: {"bytes": 0, "count": 0, "by_dtype": {}} for k in _COLLECTIVES}
     for rec in collective_ops(hlo_text):

@@ -9,7 +9,7 @@ from __future__ import annotations
 import json
 import os
 import re
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,7 @@ def _flatten(tree):
     return keys, leaves, treedef
 
 
-def save(directory: str, step: int, tree: Any, metadata: Optional[dict] = None) -> str:
+def save(directory: str, step: int, tree: Any, metadata: dict | None = None) -> str:
     path = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(path, exist_ok=True)
     keys, leaves, _ = _flatten(tree)
@@ -41,7 +41,7 @@ def save(directory: str, step: int, tree: Any, metadata: Optional[dict] = None) 
     return path
 
 
-def latest_step(directory: str) -> Optional[int]:
+def latest_step(directory: str) -> int | None:
     if not os.path.isdir(directory):
         return None
     steps = [int(m.group(1)) for d in os.listdir(directory)

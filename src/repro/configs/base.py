@@ -10,7 +10,6 @@ tests: <=2 layers, d_model <= 512, <= 4 experts).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -79,7 +78,7 @@ class ModelConfig:
     global_attn_every: int = 0  # hybrid: every Nth layer uses global attn
 
     # --- mixture of experts -------------------------------------------------
-    moe: Optional[MoEConfig] = None
+    moe: MoEConfig | None = None
 
     # --- state-space / hybrid ----------------------------------------------
     ssm_state: int = 0  # N for mamba-style SSM (hymba)
@@ -166,7 +165,7 @@ def input_specs(
     if shape.kind in ("train", "prefill"):
         assert B % n_workers == 0, (cfg.name, shape.name, n_workers)
         bw = B // n_workers
-        lead: Tuple[int, ...] = (window_steps, n_workers, bw)
+        lead: tuple[int, ...] = (window_steps, n_workers, bw)
         specs = {}
         if cfg.family == "vlm":
             n_txt = S - cfg.n_patches

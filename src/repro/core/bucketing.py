@@ -40,7 +40,6 @@ collapse to one chunk so the hop count stays proportional to real payload.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -274,9 +273,9 @@ def _apply_sketch_sums(new, smeta, sums):
     return new
 
 
-def average_state(state, wa, compress: Optional[str], *,
-                  ring: Optional[RingSpec] = None,
-                  n_workers: Optional[int] = None):
+def average_state(state, wa, compress: str | None, *,
+                  ring: RingSpec | None = None,
+                  n_workers: int | None = None):
     """``coda.average`` semantics on a local worker shard: mean over the
     K_loc local workers, then over the worker mesh axes.  ``ring`` swaps
     the blocking pmean for the chunked ppermute rings (fp32 buckets only —
@@ -304,9 +303,9 @@ def average_state(state, wa, compress: Optional[str], *,
     return new
 
 
-def average_and_refresh(state, cv_new, wa, compress: Optional[str], *,
-                        ring: Optional[RingSpec] = None,
-                        n_workers: Optional[int] = None):
+def average_and_refresh(state, cv_new, wa, compress: str | None, *,
+                        ring: RingSpec | None = None,
+                        n_workers: int | None = None):
     """CODASCA window end: average the state tensors AND the per-worker
     control variates in one bucket.  The state mean is broadcast back (all
     workers restart from the synced iterate), the control mean becomes the

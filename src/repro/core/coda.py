@@ -68,7 +68,8 @@ path (the momentum arithmetic is never traced).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -108,7 +109,7 @@ class CoDAConfig:
                                 # existing fp32 window bucket as exactly
                                 # 2·stream_bins·4 extra bytes — still ONE
                                 # all-reduce per window
-    stream_range: Tuple[float, float] = (-8.0, 8.0)  # sketch score range
+    stream_range: tuple[float, float] = (-8.0, 8.0)  # sketch score range
     param_dtype: Any = jnp.float32
 
     def __post_init__(self):
@@ -148,7 +149,7 @@ class CoDAConfig:
 
 
 # The training state is a plain dict pytree (stacked worker axis throughout).
-CoDAState = Dict[str, Any]
+CoDAState = dict[str, Any]
 
 
 def init_state(key, mcfg: ModelConfig, ccfg: CoDAConfig) -> CoDAState:
@@ -299,7 +300,7 @@ def server_momentum_step(state: CoDAState, start_params, beta: float):
     return new
 
 
-def average(state: CoDAState, compress: Optional[str] = None) -> CoDAState:
+def average(state: CoDAState, compress: str | None = None) -> CoDAState:
     """Periodic model averaging: one all-reduce over the worker axis.
 
     Every ``params`` leaf and every dual field is averaged — the payload is
@@ -428,7 +429,7 @@ def _payload_leaves(state: CoDAState):
         {"params": state["params"], "duals": state["duals"]})
 
 
-def model_bytes(state: CoDAState, compress: Optional[str] = None) -> int:
+def model_bytes(state: CoDAState, compress: str | None = None) -> int:
     """Bytes one worker ships per averaging round (params + dual tree).
 
     ``compress="int8"``: 1 byte/element payload + one fp32 scale per tensor
@@ -461,7 +462,7 @@ def streaming_payload_bytes(state: CoDAState) -> int:
 
 
 def window_payload_by_dtype(state: CoDAState,
-                            compress: Optional[str] = None) -> Dict[str, int]:
+                            compress: str | None = None) -> dict[str, int]:
     """Window-payload bytes per HLO dtype tag — the per-dtype-bucket view of
     ``window_payload_bytes`` (bucketing ships one collective per dtype, so a
     bf16-param state splits into a bf16 bucket and the f32 dual bucket).
@@ -472,7 +473,7 @@ def window_payload_by_dtype(state: CoDAState,
         raise ValueError("per-dtype payload is only defined for "
                          "uncompressed averaging")
     mult = 2 if "cv_params" in state else 1
-    out: Dict[str, int] = {}
+    out: dict[str, int] = {}
     for leaf in _payload_leaves(state):
         tag = _HLO_DTYPE[jnp.dtype(leaf.dtype).name]
         per = leaf.size // leaf.shape[0] * leaf.dtype.itemsize
@@ -484,7 +485,7 @@ def window_payload_by_dtype(state: CoDAState,
 
 
 def window_payload_bytes(state: CoDAState,
-                         compress: Optional[str] = None) -> int:
+                         compress: str | None = None) -> int:
     """Bytes one worker ships in the single window all-reduce.
 
     CoDA: exactly ``model_bytes``.  CODASCA (detected by the control-
@@ -511,7 +512,7 @@ def comm_rounds(stage_list) -> int:
 
 
 def comm_bytes(stage_list, state: CoDAState,
-               compress: Optional[str] = None, *,
+               compress: str | None = None, *,
                stage_bytes: int = 4) -> int:
     """Total bytes one worker ships over a schedule: one window payload per
     averaging round plus ``stage_bytes`` (one fp32 scalar per stage dual,
@@ -600,7 +601,7 @@ def fit(key, mcfg: ModelConfig, ccfg: CoDAConfig, sched: schedules.ScheduleConfi
         n_stages: int, sample_window: Callable[[Any, int], Any],
         sample_alpha_batch: Callable[[Any, int], Any],
         eval_every: int = 0,
-        eval_fn: Optional[Callable[[CoDAState], float]] = None,
+        eval_fn: Callable[[CoDAState], float] | None = None,
         executor: Any = "vmap", mesh=None, policy: str = "replica") -> FitResult:
     """Run CoDA for ``n_stages`` proximal-point stages.
 

@@ -64,7 +64,6 @@ the paper restricted to the scalar head:
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -179,12 +178,12 @@ class Objective:
     """
 
     name: str = ""
-    prox_refs: Tuple[str, ...] = ()     # duals under proximal regularization
-    descent: Tuple[str, ...] = ()       # min-player duals (projected descent)
-    stage_fields: Tuple[str, ...] = ()  # duals re-estimated at stage ends
+    prox_refs: tuple[str, ...] = ()     # duals under proximal regularization
+    descent: tuple[str, ...] = ()       # min-player duals (projected descent)
+    stage_fields: tuple[str, ...] = ()  # duals re-estimated at stage ends
     metric_name: str = "auc"
 
-    def init_duals(self, K: int) -> Dict[str, jax.Array]:
+    def init_duals(self, K: int) -> dict[str, jax.Array]:
         raise NotImplementedError
 
     def loss(self, h, y, duals):
@@ -211,7 +210,7 @@ class Objective:
         """Feasibility projection for ``descent`` fields (identity here)."""
         return value
 
-    def stage_duals(self, h, y, duals) -> Dict[str, jax.Array]:
+    def stage_duals(self, h, y, duals) -> dict[str, jax.Array]:
         """Closed-form re-estimates for ``stage_fields`` from a fresh batch
         (one machine's view; the caller worker-means the results)."""
         return {}
@@ -386,7 +385,7 @@ REGISTRY = {"auc": AUCObjective, "pauc_dro": PAUCDROObjective,
             "bce": BCEObjective}
 
 
-def names() -> Tuple[str, ...]:
+def names() -> tuple[str, ...]:
     return tuple(REGISTRY)
 
 

@@ -30,7 +30,6 @@ The batch partition has two modes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -141,8 +140,8 @@ class ShardedDataset:
     """
 
     def __init__(self, key, dcfg: DataConfig, n: int, n_workers: int,
-                 target_p: Optional[float] = None,
-                 dirichlet_alpha: Optional[float] = None):
+                 target_p: float | None = None,
+                 dirichlet_alpha: float | None = None):
         self.dcfg = dcfg
         kl, kx, kp = jax.random.split(key, 3)
         labels = (jax.random.uniform(kl, (n,)) < 0.5).astype(jnp.float32)

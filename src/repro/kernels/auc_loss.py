@@ -47,13 +47,23 @@ def _kernel(scal_ref, h_ref, y_ref, dh_ref, parts_ref, *, bt: int, T: int):
                        - 2 * p * (1 - p) * alpha * jnp.sum(live) / T)
 
 
+def launch_geometry(T: int, *, block: int = 1024) -> dict:
+    """Static launch geometry of one auc_loss call, shared with the
+    auditor's R5 rule (analysis/audit.py).  Note ``bt`` is NOT forced to a
+    multiple of 8 when T itself is small and ragged (e.g. T=12 → bt=12) —
+    the kernel masks the tail rows instead."""
+    bt = min(block, max(8, T))
+    n = -(-T // bt)
+    return {"bt": bt, "Tp": n * bt, "grid": (n,)}
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def auc_loss(h, y, a, b, alpha, p, *, block: int = 1024, interpret: bool = False):
     """Returns (loss, dh [T], da, db, dalpha) — see ref.auc_loss_ref."""
     T = h.shape[0]
-    bt = min(block, max(8, T))
-    n = -(-T // bt)
-    Tp = n * bt
+    g = launch_geometry(T, block=block)
+    bt, Tp = g["bt"], g["Tp"]
+    (n,) = g["grid"]
     hp = jnp.pad(h.astype(jnp.float32), (0, Tp - T))
     yp = jnp.pad(y.astype(jnp.float32), (0, Tp - T))
     scal = jnp.stack([jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
@@ -62,7 +72,7 @@ def auc_loss(h, y, a, b, alpha, p, *, block: int = 1024, interpret: bool = False
     kern = functools.partial(_kernel, bt=bt, T=T)
     dh, parts = pl.pallas_call(
         kern,
-        grid=(n,),
+        grid=g["grid"],
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((bt,), lambda i: (i,)),

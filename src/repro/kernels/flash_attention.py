@@ -16,7 +16,6 @@ Validated against ``ref.attention_full`` in interpret mode (tests/).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,7 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            causal: bool, window: Optional[int], bq: int, bk: int, n_kv: int,
+            causal: bool, window: int | None, bq: int, bk: int, n_kv: int,
             sm_scale: float):
     qi = pl.program_id(2)
     kj = pl.program_id(3)
@@ -78,10 +77,22 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def launch_geometry(B: int, S: int, H: int, KV: int, Skv: int, hd: int, *,
+                    block_q: int = 512, block_k: int = 512) -> dict:
+    """Static launch geometry of one flash_attention call, shared with the
+    auditor's R5 rule (analysis/audit.py).  The kernel does not pad the
+    sequence axes, so S/Skv must divide by the clipped blocks — the same
+    obligation the kernel asserts."""
+    bq = min(block_q, S)
+    bk = min(block_k, Skv)
+    return {"bq": bq, "bk": bk, "G": H // KV,
+            "grid": (B, H, S // bq, Skv // bk)}
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True,
-                    window: Optional[int] = None,
+                    window: int | None = None,
                     block_q: int = 512, block_k: int = 512,
                     interpret: bool = False):
     """q: [B, S, H, hd]; k/v: [B, Skv, KV, hd] -> [B, S, H, hd].
@@ -91,9 +102,9 @@ def flash_attention(q, k, v, *, causal: bool = True,
     """
     B, S, H, hd = q.shape
     Skv, KV = k.shape[1], k.shape[2]
-    G = H // KV
-    bq = min(block_q, S)
-    bk = min(block_k, Skv)
+    geo = launch_geometry(B, S, H, KV, Skv, hd, block_q=block_q,
+                          block_k=block_k)
+    bq, bk, G = geo["bq"], geo["bk"], geo["G"]
     assert S % bq == 0 and Skv % bk == 0, (S, bq, Skv, bk)
     n_kv = Skv // bk
 
@@ -102,7 +113,7 @@ def flash_attention(q, k, v, *, causal: bool = True,
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
 
-    grid = (B, H, S // bq, n_kv)
+    grid = geo["grid"]
     kern = functools.partial(
         _kernel, causal=causal, window=window, bq=bq, bk=bk, n_kv=n_kv,
         sm_scale=hd ** -0.5)

@@ -41,6 +41,22 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.ref import _round_up, grouped_layout
 
 
+def launch_geometry(N: int, K: int, E: int, F: int, *, block_m: int = 128,
+                    block_n: int = 128) -> dict:
+    """The static launch geometry of one grouped_matmul call — the single
+    source of truth shared with the compiled-program auditor's R5 rule
+    (analysis/audit.py): tile sizes, padded extents, and the grid, all
+    derivable from shapes alone (``Np`` is the static grouped_layout
+    bound, independent of the runtime group_sizes)."""
+    bm = min(block_m, _round_up(max(N, 1), 8))
+    bn = min(block_n, _round_up(F, 128))
+    Kp = _round_up(K, 128)
+    Fp = _round_up(F, bn)
+    Np = _round_up(max(N, 1), bm) + min(E, max(N, 1)) * bm
+    return {"bm": bm, "bn": bn, "Kp": Kp, "Fp": Fp, "Np": Np,
+            "grid": (Np // bm, Fp // bn)}
+
+
 def _kernel(tile_eid_ref, x_ref, w_ref, out_ref):
     del tile_eid_ref  # consumed by the weight index map
     out_ref[...] = jax.lax.dot_general(
@@ -59,12 +75,11 @@ def grouped_matmul(x, w, group_sizes, *, block_m: int = 128,
     N, K = x.shape
     E, Kw, F = w.shape
     assert K == Kw, (K, Kw)
-    bm = min(block_m, _round_up(max(N, 1), 8))
-    bn = min(block_n, _round_up(F, 128))
-    Kp = _round_up(K, 128)
-    Fp = _round_up(F, bn)
+    g = launch_geometry(N, K, E, F, block_m=block_m, block_n=block_n)
+    bm, bn, Kp, Fp = g["bm"], g["bn"], g["Kp"], g["Fp"]
 
     dst, tile_eid, Np = grouped_layout(group_sizes, N, bm)
+    assert Np == g["Np"], (Np, g["Np"])
     xp = jnp.zeros((Np, Kp), x.dtype).at[dst].set(
         jnp.pad(x, ((0, 0), (0, Kp - K))))
     wp = jnp.pad(w, ((0, 0), (0, Kp - K), (0, Fp - F)))
@@ -73,7 +88,7 @@ def grouped_matmul(x, w, group_sizes, *, block_m: int = 128,
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(Np // bm, Fp // bn),
+            grid=g["grid"],
             in_specs=[
                 pl.BlockSpec((bm, Kp), lambda t, f, eid: (t, 0)),
                 pl.BlockSpec((1, Kp, bn), lambda t, f, eid: (eid[t], 0, f)),

@@ -27,18 +27,25 @@ def _kernel(scal_ref, v_ref, g_ref, v0_ref, out_ref):
     out_ref[...] = out.astype(out_ref.dtype)
 
 
+def launch_geometry(N: int, *, block: int = 4096) -> dict:
+    """Static launch geometry of one prox_update call, shared with the
+    auditor's R5 rule (analysis/audit.py)."""
+    bt = min(block, max(8, N))
+    n = -(-N // bt)
+    return {"bt": bt, "Np": n * bt, "grid": (n,)}
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def prox_update(v, g, v0, eta, gamma, *, block: int = 4096, interpret: bool = False):
     """Flat arrays v, g, v0: [N].  eta may be traced; gamma static-ish scalar."""
     N = v.shape[0]
-    bt = min(block, max(8, N))
-    n = -(-N // bt)
-    Np = n * bt
+    geo = launch_geometry(N, block=block)
+    bt, Np = geo["bt"], geo["Np"]
     pad = lambda x: jnp.pad(x, (0, Np - N))
     scal = jnp.stack([jnp.asarray(eta, jnp.float32), jnp.asarray(gamma, jnp.float32)])
     out = pl.pallas_call(
         _kernel,
-        grid=(n,),
+        grid=geo["grid"],
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((bt,), lambda i: (i,)),

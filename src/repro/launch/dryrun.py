@@ -7,8 +7,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run: AOT ``.lower().compile()`` of every
 (architecture × input shape × mesh) combination against the production mesh,
-recording memory_analysis / cost_analysis / collective bytes for §Dry-run and
-§Roofline of EXPERIMENTS.md.
+recording memory_analysis / cost_analysis / collective bytes that feed the
+roofline model documented in docs/analysis.md.
 
   train_4k     -> CoDA window_step (local primal-dual step + averaging)
   prefill_32k  -> prefill_step (forward + stacked KV-cache emission)

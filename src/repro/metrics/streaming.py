@@ -96,13 +96,12 @@ through fp32 averaging the merged counts are exact.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 DEFAULT_BINS = 2048
-DEFAULT_RANGE: Tuple[float, float] = (-8.0, 8.0)
+DEFAULT_RANGE: tuple[float, float] = (-8.0, 8.0)
 
 
 # --------------------------------------------------------------------------
@@ -314,7 +313,7 @@ class ExactMetric(Metric):
 
     backend = "exact"
 
-    def __init__(self, beta: Optional[float] = None):
+    def __init__(self, beta: float | None = None):
         self.beta = None if beta is None else float(beta)
         self.name = "auc" if beta is None else "pauc"
 
@@ -351,7 +350,7 @@ class SketchMetric(Metric):
 
     backend = "sketch"
 
-    def __init__(self, beta: Optional[float] = None, *,
+    def __init__(self, beta: float | None = None, *,
                  bins: int = DEFAULT_BINS, lo: float = DEFAULT_RANGE[0],
                  hi: float = DEFAULT_RANGE[1]):
         empty_sketch(bins, lo, hi)  # validate once, loudly

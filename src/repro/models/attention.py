@@ -9,7 +9,6 @@ Cache layouts (per layer):
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +51,7 @@ def _project_qkv(cfg: ModelConfig, p, xq, xkv):
     return q, k, v
 
 
-def attend(cfg: ModelConfig, p, x, positions, *, window: Optional[int], causal=True,
+def attend(cfg: ModelConfig, p, x, positions, *, window: int | None, causal=True,
            x_kv=None, kv_positions=None, impl="auto", return_kv: bool = False):
     """Train/prefill attention.  ``x``: [B, S, d].  Returns [B, S, d]
     (and, with ``return_kv``, the rotated K/V for cache emission)."""
@@ -96,7 +95,7 @@ def _quantize_kv(x):
     return q, scale
 
 
-def decode_step(cfg: ModelConfig, p, cache, x, positions, *, window: Optional[int],
+def decode_step(cfg: ModelConfig, p, cache, x, positions, *, window: int | None,
                 update_cache=True):
     """One-token decode.  ``x``: [B, 1, d]; ``positions``: [B].
 

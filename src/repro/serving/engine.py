@@ -38,7 +38,7 @@ import dataclasses
 import time
 from collections import OrderedDict, deque
 from functools import partial
-from typing import Callable, List, Optional
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -55,35 +55,35 @@ class TicksExhausted(RuntimeError):
 @dataclasses.dataclass
 class Request:
     uid: int
-    prompt: List[int]
+    prompt: list[int]
     max_new_tokens: int = 16
     eos_id: int = -1
-    deadline: Optional[float] = None     # seconds after arrival; None = none
-    generated: List[int] = dataclasses.field(default_factory=list)
+    deadline: float | None = None     # seconds after arrival; None = none
+    generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
     status: str = "new"                  # new|queued|active|done|rejected|expired
     reject_reason: str = ""
     truncated: bool = False
-    prompt_used: List[int] = dataclasses.field(default_factory=list)
+    prompt_used: list[int] = dataclasses.field(default_factory=list)
     prefix_hit_tokens: int = 0
-    score: Optional[float] = None        # AUC-head logit at the last prompt token
-    label: Optional[float] = None        # ground truth when the trace carries
+    score: float | None = None        # AUC-head logit at the last prompt token
+    label: float | None = None        # ground truth when the trace carries
                                          # one (loadgen labeled traces) — feeds
                                          # the engine's streaming-AUC sketch
     # latency accounting (engine clock, seconds)
-    t_arrival: Optional[float] = None
-    t_admitted: Optional[float] = None
-    t_first_token: Optional[float] = None
-    t_complete: Optional[float] = None
+    t_arrival: float | None = None
+    t_admitted: float | None = None
+    t_first_token: float | None = None
+    t_complete: float | None = None
 
     @property
-    def ttft(self) -> Optional[float]:
+    def ttft(self) -> float | None:
         if self.t_first_token is None or self.t_arrival is None:
             return None
         return self.t_first_token - self.t_arrival
 
     @property
-    def latency(self) -> Optional[float]:
+    def latency(self) -> float | None:
         if self.t_complete is None or self.t_arrival is None:
             return None
         return self.t_complete - self.t_arrival
@@ -100,7 +100,7 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, use_window: bool = True,
                  impl: str = "auto", prefill_chunk: int = 8,
-                 queue_limit: Optional[int] = None, admission: str = "fifo",
+                 queue_limit: int | None = None, admission: str = "fifo",
                  on_overflow: str = "truncate", prefix_cache_size: int = 0,
                  metric=None,
                  clock: Callable[[], float] = time.monotonic):
@@ -131,7 +131,7 @@ class ServingEngine:
         self._fresh = D.init_cache(cfg, 1, max_len, use_window=use_window,
                                    dtype=jnp.float32)
         self.queue: deque[Request] = deque()
-        self.active: List[Optional[Request]] = [None] * slots
+        self.active: list[Request | None] = [None] * slots
         self.pos = np.zeros(slots, np.int32)            # next position per slot
         self.pending = [deque() for _ in range(slots)]  # unconsumed prompt toks
         self._prefix: OrderedDict = OrderedDict()       # prompt tuple -> slice
@@ -344,7 +344,7 @@ class ServingEngine:
                 or self.pos[s] >= self.max_len - 1):
             self._finish(req, s, now, status="done")
 
-    def _finish(self, req: Request, s: Optional[int], now: float, *,
+    def _finish(self, req: Request, s: int | None, now: float, *,
                 status: str) -> None:
         req.status = status
         req.done = True
@@ -362,7 +362,7 @@ class ServingEngine:
                 np.asarray([req.label], np.float32))
             self.n_scored += 1
 
-    def streaming_metrics(self) -> Optional[dict]:
+    def streaming_metrics(self) -> dict | None:
         """The engine's streaming-metric record (None when no metric is
         attached): finalized value + resolution bound + state footprint."""
         if self.metric is None:

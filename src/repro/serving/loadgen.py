@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -35,13 +34,13 @@ class TraceConfig:
     kind: str = "poisson"              # poisson | bursty | batch
     rate: float = 16.0                 # mean arrivals/s (poisson, bursty)
     n_requests: int = 32
-    prompt_len: Tuple[int, int] = (8, 33)   # rng.randint [lo, hi)
-    max_new: Tuple[int, int] = (4, 9)
+    prompt_len: tuple[int, int] = (8, 33)   # rng.randint [lo, hi)
+    max_new: tuple[int, int] = (4, 9)
     burst_size: int = 8
     prefix_pool: int = 0               # >0: share prompts' first prefix_len toks
     prefix_len: int = 12
     eos_id: int = -1
-    deadline: Optional[float] = None
+    deadline: float | None = None
     seed: int = 0
     labeled: bool = False              # plant seed-deterministic ground-truth
                                        # labels: prompts come from the
@@ -61,7 +60,7 @@ class TraceConfig:
             raise ValueError(f"p_pos must be in (0, 1), got {self.p_pos}")
 
 
-def make_trace(tcfg: TraceConfig, vocab_size: int) -> List[Tuple[float, Request]]:
+def make_trace(tcfg: TraceConfig, vocab_size: int) -> list[tuple[float, Request]]:
     """[(arrival_s, Request)] sorted by arrival; fully seed-deterministic, so
     the same config replayed through two engines compares like for like."""
     rng = np.random.RandomState(tcfg.seed)
@@ -114,9 +113,9 @@ def make_trace(tcfg: TraceConfig, vocab_size: int) -> List[Tuple[float, Request]
     return trace
 
 
-def run_trace(engine: ServingEngine, trace: List[Tuple[float, Request]], *,
+def run_trace(engine: ServingEngine, trace: list[tuple[float, Request]], *,
               max_ticks: int = 100_000,
-              on_step=None) -> Tuple[List[Request], float]:
+              on_step=None) -> tuple[list[Request], float]:
     """Pace ``trace`` against the wall clock through ``engine``.  Returns
     (requests, busy wall seconds).  Raises ``TicksExhausted``-style if the
     engine cannot drain the trace within ``max_ticks`` device ticks.
@@ -147,8 +146,8 @@ def _pct(vals, q):
     return float(np.percentile(vals, q)) if len(vals) else float("nan")
 
 
-def summarize(reqs: List[Request], wall: float,
-              engine: Optional[ServingEngine] = None) -> dict:
+def summarize(reqs: list[Request], wall: float,
+              engine: ServingEngine | None = None) -> dict:
     """The serve_load metrics record: latency percentiles + throughput +
     engine counters."""
     done = [r for r in reqs if r.status == "done"]

@@ -104,7 +104,7 @@ def test_lemma7_8_bounds(p, eta, seed):
     gamma = 0.5
     a = b = alpha = 0.0
     ref_a = ref_b = 0.0
-    for t in range(30):
+    for _t in range(30):
         key, kh, ky = jax.random.split(key, 3)
         h = jax.random.uniform(kh, (32,))
         y = (jax.random.uniform(ky, (32,)) < p).astype(jnp.float32)
@@ -166,7 +166,7 @@ def test_loss_decreases():
     ccfg = _ccfg(4)
     st_ = coda.init_state(key, MCFG, ccfg)
     losses = []
-    for t in range(25):
+    for _t in range(25):
         key, sk = jax.random.split(key)
         st_, ls = coda.window_step(MCFG, ccfg, st_, _window(sk, 2, 4, 32), 0.2)
         losses.append(float(jnp.mean(ls)))

@@ -190,7 +190,7 @@ def test_mixed_dtype_window_payload_verifies_per_dtype_bucket():
     bytes == ``window_payload_by_dtype``) instead of failing spuriously,
     while still rejecting a forced count=1 and a wrong per-dtype split."""
     _run("""
-    from repro.analysis import hlo as H
+    from repro.analysis import audit as A
     mesh = jax.make_mesh((8, 1), ("data", "model"))
     K, I, B = 8, 2, 8
     ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7,
@@ -209,15 +209,15 @@ def test_mixed_dtype_window_payload_verifies_per_dtype_bucket():
     payload = coda.window_payload_bytes(st0)
     by_dtype = coda.window_payload_by_dtype(st0)
     assert set(by_dtype) == {"bf16", "f32"}
-    ops = H.verify_window_payload(txt, payload, by_dtype=by_dtype)
+    ops = A.assert_window_payload(txt, payload, by_dtype=by_dtype)
     assert len(ops) == 2, ops           # one all-reduce per dtype bucket
     try:
-        H.verify_window_payload(txt, payload, count=1)
+        A.assert_window_payload(txt, payload, count=1)
         raise SystemExit("count=1 must fail on a mixed-dtype window")
     except AssertionError:
         pass
     try:
-        H.verify_window_payload(txt, payload,
+        A.assert_window_payload(txt, payload,
                                 by_dtype={"bf16": payload, "f32": 0})
         raise SystemExit("wrong per-dtype split must fail")
     except AssertionError:

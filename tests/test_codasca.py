@@ -302,6 +302,7 @@ _PRELUDE = textwrap.dedent("""
     import numpy as np
     from repro.configs.base import mlp_config
     from repro.core import coda, codasca
+    from repro.analysis import audit as A
     from repro.analysis import hlo as H
 
     mcfg = mlp_config(n_features=16, d=32)
@@ -386,7 +387,7 @@ def test_codasca_window_is_one_allreduce_of_double_payload():
     payload = coda.window_payload_bytes(st0)
     assert payload == 2 * coda.model_bytes(st0)
     for I in (1, 4, 8):
-        ops = H.verify_window_payload(window_txt(I), payload)
+        ops = A.assert_window_payload(window_txt(I), payload)
         assert "0,1,2,3,4,5,6,7" in ops[0]["replica_groups"], ops[0]
     assert H.collective_ops(window_txt(4, communicate=False)) == []
 
@@ -408,10 +409,10 @@ def test_codasca_window_is_one_allreduce_of_double_payload():
     sts = jax.eval_shape(lambda s: s, st0c)
     txt = exe0.window_fn(sts, wb).lower(
         sts, wb, jax.ShapeDtypeStruct((), jnp.float32)).compile().as_text()
-    H.verify_window_payload(txt, coda.model_bytes(st0c))
+    A.assert_window_payload(txt, coda.model_bytes(st0c))
     try:
-        H.verify_window_payload(txt, 2 * coda.model_bytes(st0c))
-        raise SystemExit("verify_window_payload missed a byte mismatch")
+        A.assert_window_payload(txt, 2 * coda.model_bytes(st0c))
+        raise SystemExit("assert_window_payload missed a byte mismatch")
     except AssertionError:
         pass
     print("ALL OK")

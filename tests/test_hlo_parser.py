@@ -1,0 +1,125 @@
+"""Unit tests for the analysis/hlo.py parser on hand-written HLO snippets.
+
+The parser regexes were historically exercised only through end-to-end
+compiles, which never emit some shapes the backends CAN produce — async
+``-start``/``-done`` pairs (a latency-hiding scheduler splits every
+collective), tuple-shaped collective results, nested tuple types on
+multi-operand async ops.  These snippets pin the contract directly:
+an async pair counts ONCE with the result component's bytes, a ``-done``
+line never matches, tuple results sum their components.
+"""
+import pytest
+
+from repro.analysis import hlo as H
+
+
+def _ops(text):
+    return H.collective_ops(text)
+
+
+def test_sync_all_reduce_counts_once():
+    txt = "%ar = f32[256]{0} all-reduce(%p0), replica_groups={{0,1}}"
+    (op,) = _ops(txt)
+    assert op["op"] == "all-reduce"
+    assert op["bytes"] == 256 * 4
+    assert op["by_dtype"] == {"f32": 1024}
+    assert op["replica_groups"] == "{{0,1}}"
+
+
+def test_async_pair_counts_once_from_start():
+    """A scheduler-split collective is ONE logical op: the -start line is
+    the record, the -done line matches nothing."""
+    txt = "\n".join([
+        "%ar-start = (f32[128]{0}, f32[128]{0}) all-reduce-start(%p0)",
+        "%unrelated = f32[128]{0} add(%a, %b)",
+        "%ar-done = f32[128]{0} all-reduce-done(%ar-start)",
+    ])
+    ops = _ops(txt)
+    assert len(ops) == 1
+    assert ops[0]["op"] == "all-reduce"
+    # the (operand, result) tuple must not double the bytes
+    assert ops[0]["bytes"] == 128 * 4
+
+
+def test_done_line_alone_never_matches():
+    txt = "%ar-done = f32[64]{0} all-reduce-done(%ar-start)"
+    assert _ops(txt) == []
+
+
+def test_async_all_gather_start():
+    txt = ("%ag-start = (s8[100]{0}, s8[800]{0}) all-gather-start(%p0), "
+           "replica_groups={{0,1,2,3,4,5,6,7}}")
+    (op,) = _ops(txt)
+    assert op["op"] == "all-gather"
+    assert op["by_dtype"] == {"s8": 800}    # gathered size, not the operand
+
+
+def test_async_multi_operand_nested_tuple():
+    """Combined async collectives carry ((operands...), (results...)) —
+    only the results component counts, summed across its members."""
+    txt = ("%ar-start = ((f32[16]{0}, s8[32]{0}), (f32[16]{0}, s8[32]{0})) "
+           "all-reduce-start(%a, %b)")
+    (op,) = _ops(txt)
+    assert op["by_dtype"] == {"f32": 64, "s8": 32}
+    assert op["bytes"] == 96
+
+
+def test_tuple_shaped_sync_result_sums_components():
+    """A non-async tuple-result collective reduces every component — all of
+    them are wire bytes."""
+    txt = "%ar = (f32[8]{0}, f32[24]{0}) all-reduce(%a, %b)"
+    (op,) = _ops(txt)
+    assert op["bytes"] == (8 + 24) * 4
+
+
+def test_collective_permute_and_mixed_kinds():
+    txt = "\n".join([
+        "%cp = bf16[64]{0} collective-permute(%x), "
+        "source_target_pairs={{0,1},{1,0}}",
+        "%rs = f32[32]{0} reduce-scatter(%y), replica_groups={{0,1}}",
+    ])
+    ops = _ops(txt)
+    assert [o["op"] for o in ops] == ["collective-permute", "reduce-scatter"]
+    assert ops[0]["by_dtype"] == {"bf16": 128}
+
+
+def test_non_collective_lines_ignored():
+    txt = "\n".join([
+        "%d = f32[8,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}",
+        "%allreduce_like_name = f32[8]{0} add(%a, %b)",
+        "%fusion.all-reduce.1 = f32[8]{0} fusion(%a), kind=kLoop",
+    ])
+    assert _ops(txt) == []
+
+
+def test_tuple_components_splitter():
+    assert H._tuple_components("f32[8]") == ["f32[8]"]
+    assert H._tuple_components("(f32[8], s8[4])") == ["f32[8]", "s8[4]"]
+    assert H._tuple_components("((f32[8], s8[4]), (f32[8], s8[4]))") == \
+        ["(f32[8], s8[4])", "(f32[8], s8[4])"]
+
+
+def test_collective_bytes_totals():
+    txt = "\n".join([
+        "%ar-start = (f32[128]{0}, f32[128]{0}) all-reduce-start(%p0)",
+        "%ar-done = f32[128]{0} all-reduce-done(%ar-start)",
+        "%ag = s8[800]{0} all-gather(%q)",
+    ])
+    out = H.collective_bytes(txt)
+    assert out["all-reduce"] == {"bytes": 512, "count": 1,
+                                 "by_dtype": {"f32": 512}}
+    assert out["all-gather"]["bytes"] == 800
+    assert out["total_count"] == 2
+    assert out["total_bytes"] == 1312
+
+
+def test_verify_window_payload_on_async_snippet():
+    """The delegating wrapper sees through the async split: one logical
+    all-reduce of the expected bytes."""
+    txt = "\n".join([
+        "%ar-start = (f32[100]{0}, f32[100]{0}) all-reduce-start(%p0)",
+        "%ar-done = f32[100]{0} all-reduce-done(%ar-start)",
+    ])
+    H.verify_window_payload(txt, 400)
+    with pytest.raises(AssertionError, match="payload mismatch"):
+        H.verify_window_payload(txt, 800)

@@ -259,7 +259,7 @@ def test_window_sketch_accumulates_across_windows_and_auc_within_bound():
     mcfg, ccfg, st0, wb = _window_case(bins=128)
     state = st0
     seen_s, seen_y = [], []
-    for w in range(3):
+    for _w in range(3):
         replay = state
         for i in range(wb["labels"].shape[0]):
             batch = {k: v[i] for k, v in wb.items()}
@@ -301,9 +301,9 @@ def test_streaming_payload_accounting():
 
 
 def test_verify_window_payload_split_validation():
-    from repro.analysis import hlo as H
+    from repro.analysis import audit as A
     with pytest.raises(ValueError, match="go together"):
-        H.verify_window_payload("", 100, baseline_bytes=90)
+        A.assert_window_payload("", 100, baseline_bytes=90)
 
 
 # --------------------------------------------------------------------------
@@ -314,7 +314,7 @@ _PRELUDE = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
     import numpy as np
-    from repro.analysis import hlo as H
+    from repro.analysis import audit as A
     from repro.configs.base import mlp_config
     from repro.core import coda, codasca
     from repro.metrics import streaming
@@ -378,14 +378,14 @@ def test_shard_map_streaming_eval_matches_oracle_and_payload_delta():
         assert payload == base + delta
         txt = exe.window_fn(st0, wb).lower(
             st0, wb, jnp.float32(0.1)).compile().as_text()
-        H.verify_window_payload(txt, payload, baseline_bytes=base,
+        A.assert_window_payload(txt, payload, baseline_bytes=base,
                                 delta_bytes=delta)
         # hook off: the compiled window is byte-identical to the baseline
         bexe = coda.make_executor(mcfg, base_cfg, "shard_map", mesh=mesh,
                                   donate=False)
         btxt = bexe.window_fn(base_st, wb).lower(
             base_st, wb, jnp.float32(0.1)).compile().as_text()
-        H.verify_window_payload(btxt, base)
+        A.assert_window_payload(btxt, base)
         print("OK", label, "payload", payload, "=", base, "+", delta)
     print("ALL OK")
     """)

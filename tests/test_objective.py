@@ -547,6 +547,7 @@ _PRELUDE = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
     import numpy as np
+    from repro.analysis import audit as A
     from repro.analysis import hlo as H
     from repro.configs.base import mlp_config
     from repro.core import coda, codasca
@@ -614,7 +615,7 @@ def test_pauc_dro_shard_map_matches_oracle_and_payload():
         payload = coda.window_payload_bytes(st0)
         txt = exe.window_fn(st0, wb).lower(
             st0, wb, jnp.float32(0.1)).compile().as_text()
-        H.verify_window_payload(txt, payload)
+        A.assert_window_payload(txt, payload)
         stxt = exe.stage_fn(st0, ab).lower(st0, ab).compile().as_text()
         sops = H.collective_ops(stxt)
         assert len(sops) == 1 and sops[0]["bytes"] == 4, sops

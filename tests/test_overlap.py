@@ -29,6 +29,7 @@ _PRELUDE = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
     import numpy as np
+    from repro.analysis import audit as A
     from repro.analysis import hlo as H
     from repro.configs.base import mlp_config
     from repro.core import bucketing, coda, codasca
@@ -146,14 +147,14 @@ def test_overlapped_hlo_is_chunked_permute_chains():
             # the chain-independence analysis needs the local steps to
             # lower as a while loop (I >= 2); an I=1 window inlines its
             # compute and legitimately chains the rings together
-            ops = H.verify_overlapped_window(
+            ops = A.assert_overlapped_window(
                 txt, n_hops=hops, n_chains=chains if I > 1 else None)
             assert all(o["op"] == "collective-permute" for o in ops)
             if I > 1:
                 # the analysis really counts chunk chains: demanding the
                 # de-chunked count must fail for C > 1 chunks
                 try:
-                    H.verify_overlapped_window(txt, n_hops=hops, n_chains=2)
+                    A.assert_overlapped_window(txt, n_hops=hops, n_chains=2)
                     raise SystemExit("chain check accepted wrong count")
                 except AssertionError:
                     pass
