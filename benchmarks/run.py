@@ -20,6 +20,12 @@ deliverable.  Prints ``name,us_per_call,derived`` CSV rows.
   hetero_window — heterogeneous shards: CoDA vs CODASCA final AUC at EQUAL
                   comm rounds for Dirichlet α ∈ {0.1, 1, ∞} × I ∈ {4,16,64},
                   plus the per-round payload each algorithm ships
+  fault_tolerance — robustness tier: clean vs fault-injected training
+                  (20% per-window dropout + 1-window stragglers with
+                  bounded staleness, seed-deterministic FaultPlan) at
+                  EQUAL comm rounds; asserts |ΔAUC| ≤ 0.02, bit-for-bit
+                  schedule replay, and the masked window's ONE-all-reduce
+                  payload contract (HLO legs need --force-host-devices 8)
   objective_sweep — pluggable objectives: full-AUC vs pAUC-DRO training at
                   EQUAL comm rounds on imbalanced Dirichlet(0.1) shards
                   with planted hard negatives; pAUC-DRO must win on
@@ -452,6 +458,126 @@ def bench_hetero_window(fast=False, smoke=False):
             })
 
 
+def bench_fault_tolerance(fast=False, smoke=False):
+    """The robustness tentpole's measurement: clean vs fault-injected
+    training at the SAME schedule — equal comm rounds — for CoDA and
+    CODASCA.  The injected run draws a seed-deterministic schedule of 20%
+    per-window dropout plus 1-window stragglers (merged with bounded
+    staleness, ``max_staleness=1``) from ``core/faults.FaultPlan``; the
+    masked participant-mean averaging must buy the fault tolerance without
+    giving up convergence.  Asserted here:
+
+      * |AUC_faulty − AUC_clean| <= 0.02 at equal comm rounds (the
+        acceptance criterion);
+      * the fault-injected run replays bit-for-bit from (PRNG seed,
+        fault seed) — two runs end in byte-identical states;
+      * the compiled masked window is still exactly ONE all-reduce per
+        dtype bucket, operand bytes == documented payload + the weight
+        lane(s), via the same audit R1 checker CI runs (needs >1 device;
+        emits a skip row otherwise)."""
+    from repro.core import schedules as SCH
+    K = 8
+    batch = 16 if smoke else 32
+    n_data = 2048 if smoke else 8192
+    stages = 2 if (fast or smoke) else 3
+    T0 = 24 if smoke else 64
+    I = 8
+    key = jax.random.PRNGKey(0)
+    dcfg = DataConfig(kind="features", n_features=32, signal=1.5)
+    ds = ShardedDataset(key, dcfg, n_data, K, target_p=0.71)
+    test = ds.full(1024)
+    auc_m = SM.make_metric("auc", "exact")
+
+    def final_auc(state):
+        p0 = jax.tree_util.tree_map(lambda x: x[0], state["params"])
+        h, _ = M.score(MCFG, p0, {"features": test["features"]})
+        return float(auc_m.compute(h, test["labels"]))
+
+    sched = SCH.ScheduleConfig(n_workers=K, eta0=0.5, T0=T0, I0=I)
+    fault_kw = dict(participation=0.8, straggler_prob=0.1,
+                    straggler_windows=1, max_staleness=1, fault_seed=7)
+    for algorithm in ("coda", "codasca"):
+        cfgs = {"clean": coda.CoDAConfig(n_workers=K, p_pos=ds.p_pos,
+                                         algorithm=algorithm),
+                "faulty": coda.CoDAConfig(n_workers=K, p_pos=ds.p_pos,
+                                          algorithm=algorithm, **fault_kw)}
+        res = {}
+        for name in ("clean", "faulty", "replay"):
+            ccfg = cfgs["faulty" if name == "replay" else name]
+            t0 = time.time()
+            r = coda.fit(key, MCFG, ccfg, sched, stages,
+                         lambda k, n: ds.sample_window(k, n, batch),
+                         ds.sample_alpha_batch)
+            wall = time.time() - t0
+            res[name] = r
+            if name != "replay":
+                tag = f"fault_tolerance/{algorithm}/{name}"
+                emit(f"{tag}/final_auc", wall / max(r.iterations, 1) * 1e6,
+                     round(final_auc(r.state), 4))
+                emit(f"{tag}/comm", 0.0,
+                     f"rounds={r.comm_rounds};"
+                     f"payload={coda.window_payload_bytes(r.state, masked=name == 'faulty')}")
+
+        # equal comm rounds: the fault schedule drops *contributions*, not
+        # collectives — every window still runs its one masked all-reduce
+        assert res["clean"].comm_rounds == res["faulty"].comm_rounds, \
+            (algorithm, res["clean"].comm_rounds, res["faulty"].comm_rounds)
+        gap = abs(final_auc(res["faulty"].state)
+                  - final_auc(res["clean"].state))
+        assert gap <= 0.02, (algorithm, gap)
+        emit(f"fault_tolerance/{algorithm}/auc_gap", 0.0, round(gap, 4))
+
+        # seed determinism: the faulty run replays byte-for-byte
+        replay_err = max(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+            lambda a, b: float(jnp.max(jnp.abs(
+                a.astype(jnp.float32) - b.astype(jnp.float32)))),
+            res["faulty"].state, res["replay"].state)))
+        assert replay_err == 0.0, (algorithm, replay_err)
+        emit(f"fault_tolerance/{algorithm}/replay_max_err", 0.0, replay_err)
+        emit_comm(f"fault_tolerance/{algorithm}", {
+            "algorithm": algorithm, "K": K, "fault_knobs": fault_kw,
+            "auc": {n: final_auc(res[n].state) for n in ("clean", "faulty")},
+            "auc_gap": gap, "replay_max_err": replay_err,
+            "comm_rounds": {n: res[n].comm_rounds
+                            for n in ("clean", "faulty")},
+            "payload_bytes": {
+                "clean": coda.window_payload_bytes(res["clean"].state),
+                "faulty": coda.window_payload_bytes(res["faulty"].state,
+                                                    masked=True)},
+        })
+
+    # masked window HLO contract: ONE all-reduce per dtype bucket, operand
+    # bytes == documented payload + weight lane(s) (the audit R1 checker)
+    if jax.device_count() < 2:
+        emit("fault_tolerance/hlo/skipped", 0.0,
+             "needs >1 device; rerun with --force-host-devices 8")
+        return
+    from repro.data.synthetic import sample_online
+    from repro.launch import mesh as MESH
+    mesh = MESH.make_worker_mesh()
+    Kd = jax.device_count()
+    for algorithm in ("coda", "codasca"):
+        ccfg = coda.CoDAConfig(n_workers=Kd, p_pos=0.7,
+                               algorithm=algorithm, **fault_kw)
+        exe = coda.make_executor(MCFG, ccfg, "shard_map", mesh=mesh,
+                                 donate=False)
+        wb = sample_online(key, dcfg, (4, Kd, 16))
+        state0 = coda.init_state(key, MCFG, ccfg)
+        fl = {"weights": jnp.ones((Kd,), jnp.float32),
+              "resync": jnp.ones((Kd,), jnp.float32)}
+        txt = exe.window_fn(state0, wb).lower(
+            state0, wb, jnp.float32(0.1), fl).compile().as_text()
+        payload = coda.window_payload_bytes(state0, masked=True)
+        A.assert_window_payload(
+            txt, payload,
+            by_dtype=coda.window_payload_by_dtype(state0, masked=True))
+        coll = H.collective_bytes(txt)
+        emit(f"fault_tolerance/hlo/{algorithm}", 0.0,
+             f"all_reduce_ops={coll['all-reduce']['count']};"
+             f"all_reduce_bytes={coll['all-reduce']['bytes']};"
+             f"masked_payload_bytes={payload}")
+
+
 def bench_objective_sweep(fast=False, smoke=False):
     """The objective-layer tentpole's measurement: full-AUC vs pAUC-DRO
     training at the SAME schedule — equal comm rounds, near-equal payload
@@ -875,6 +1001,7 @@ BENCHES = {
     "sharded_window": bench_sharded_window,
     "overlap_window": bench_overlap_window,
     "hetero_window": bench_hetero_window,
+    "fault_tolerance": bench_fault_tolerance,
     "objective_sweep": bench_objective_sweep,
     "moe_dispatch": bench_moe_dispatch,
     "streaming_metrics": bench_streaming_metrics,

@@ -46,19 +46,26 @@ def build_legs(n_devices: int, *, smoke: bool) -> list:
     I = max(window_lens)
     K = n_devices
 
-    def ccfg_for(algorithm: str, compress: str, schedule: str) -> CoDAConfig:
+    def ccfg_for(algorithm: str, compress: str, schedule: str,
+                 masked: bool = False) -> CoDAConfig:
+        kw = {}
+        if masked:      # partial participation: masked window contracts
+            kw = dict(participation=0.5, straggler_prob=0.25,
+                      max_staleness=1)
         return CoDAConfig(
             n_workers=K, algorithm=algorithm, avg_compress=compress,
-            overlap_chunks=2 if schedule == "overlap" else 0)
+            overlap_chunks=2 if schedule == "overlap" else 0, **kw)
 
     legs = []
 
     def training_leg(executor: str, algorithm: str, compress: str,
-                     schedule: str):
+                     schedule: str, masked: bool = False):
         name = f"{executor}/{algorithm}/{compress or 'fp32'}/{schedule}"
+        if masked:
+            name += "/masked"
 
         def run():
-            ccfg = ccfg_for(algorithm, compress, schedule)
+            ccfg = ccfg_for(algorithm, compress, schedule, masked)
             kw = dict(I=I, B=8, window_lens=window_lens, tag=name)
             if executor == "shard_map":
                 kw.update(mesh=M.make_worker_mesh(K), policy="replica")
@@ -77,6 +84,13 @@ def build_legs(n_devices: int, *, smoke: bool) -> list:
             training_leg("shard_map", algorithm, compress, "blocking")
             if not compress:
                 training_leg("shard_map", algorithm, compress, "overlap")
+
+    # partial participation: same R1 contract in masked-payload form — still
+    # exactly ONE all-reduce per dtype bucket, payload + the weight lane(s)
+    for algorithm in ("coda", "codasca"):
+        training_leg("shard_map", algorithm, "", "blocking", masked=True)
+        training_leg("shard_map", algorithm, "", "overlap", masked=True)
+    training_leg("shard_map", "coda", "int8", "blocking", masked=True)
 
     def serving_leg():
         def run():

@@ -641,10 +641,23 @@ def run_rules(programs, launches=(), *, rules=None,
 # --------------------------------------------------------------------------
 # program registry: training executors
 # --------------------------------------------------------------------------
-def _payload_by_dtype_or_none(state, mult_aware=True):
+def _payload_by_dtype_or_none(state, mult_aware=True, *, masked=False):
     from repro.core import coda
-    by_dtype = coda.window_payload_by_dtype(state)
+    by_dtype = coda.window_payload_by_dtype(state, masked=masked)
     return by_dtype if len(by_dtype) > 1 else None
+
+
+def _fault_vectors(ccfg, K: int, *, abstract: bool):
+    """The traced fault-vector argument the executors take when
+    ``ccfg.faults_enabled`` (full participation — the R1/R4 contracts are
+    shape properties, the schedule is data)."""
+    if not ccfg.faults_enabled:
+        return None
+    if abstract:
+        v = jax.ShapeDtypeStruct((K,), jnp.float32)
+        return {"weights": v, "resync": v}
+    return {"weights": jnp.ones((K,), jnp.float32),
+            "resync": jnp.ones((K,), jnp.float32)}
 
 
 def _abstract(tree):
@@ -688,13 +701,18 @@ def capture_vmap_programs(mcfg, ccfg, *, I: int = 2, B: int = 8,
     sts = _abstract(st0)
     wb, ab = _mlp_window(mcfg, K, I, B)
     eta = jax.ShapeDtypeStruct((), jnp.float32)
+    fls = _fault_vectors(ccfg, K, abstract=True)
+    fli = _fault_vectors(ccfg, K, abstract=False)
+    wargs = (sts, wb, eta) if fls is None else (sts, wb, eta, fls)
 
     # R4: drive the executor eagerly — repeats must not re-trace, distinct
-    # window lengths compile once each
+    # window lengths compile once each.  Under fault injection the fault
+    # vectors are a fixed-shape traced arg, so the budget is unchanged.
     st = exe.place(st0)
     for wl in tuple(window_lens) + (window_lens[0],):
         wbi = _concrete_window(key, mcfg, K, wl, B)
-        st, _ = exe.window_step(st, wbi, 0.1)
+        st, _ = exe.window_step(st, wbi, 0.1, **(
+            {} if fli is None else {"faults": fli}))
     abi = jax.tree_util.tree_map(
         lambda l: l[0], _concrete_window(key, mcfg, K, 1, B))
     st = exe.stage_end(st, abi)
@@ -704,7 +722,7 @@ def capture_vmap_programs(mcfg, ccfg, *, I: int = 2, B: int = 8,
     # executable per distinct window length, one stage program
     programs = [
         CompiledProgram.capture(
-            f"{tag}/window", exe._wstep, sts, wb, eta,
+            f"{tag}/window", exe._wstep, *wargs,
             expect={"collectives": {"kind": "none"},
                     "compiles": {"exact": len(set(window_lens))}},
             donated_leaves=n_state_leaves,
@@ -737,6 +755,10 @@ def capture_sharded_programs(mcfg, ccfg, mesh, *, policy: str = "replica",
     sts = _abstract(st0)
     wb, ab = _mlp_window(mcfg, K, I, B)
     eta = jax.ShapeDtypeStruct((), jnp.float32)
+    fls = _fault_vectors(ccfg, K, abstract=True)
+    fli = _fault_vectors(ccfg, K, abstract=False)
+    masked = fls is not None
+    wargs = (sts, wb, eta) if fls is None else (sts, wb, eta, fls)
     wired = bool(exe.worker_axes)        # K=1 degenerate partitions: no wire
     compress = ccfg.avg_compress or None
 
@@ -745,13 +767,14 @@ def capture_sharded_programs(mcfg, ccfg, mesh, *, policy: str = "replica",
     elif compress == "int8":
         window_expect = {
             "kind": "gather_pair",
-            "payload_bytes": coda.window_payload_bytes(st0, "int8"),
+            "payload_bytes": coda.window_payload_bytes(st0, "int8",
+                                                       masked=masked),
             "n_workers": K}
     else:
         window_expect = {
             "kind": "window",
-            "expected_bytes": coda.window_payload_bytes(st0)}
-        by_dtype = _payload_by_dtype_or_none(st0)
+            "expected_bytes": coda.window_payload_bytes(st0, masked=masked)}
+        by_dtype = _payload_by_dtype_or_none(st0, masked=masked)
         if by_dtype:
             window_expect["by_dtype"] = by_dtype
 
@@ -764,11 +787,11 @@ def capture_sharded_programs(mcfg, ccfg, mesh, *, policy: str = "replica",
     programs = [
         CompiledProgram.capture(
             f"{tag}/local_steps", exe.window_fn(sts, wb, communicate=False),
-            sts, wb, eta,
+            *wargs,
             expect={"collectives": {"kind": "none"}},
             donated_leaves=n_state_leaves),
         CompiledProgram.capture(
-            f"{tag}/window", exe.window_fn(sts, wb), sts, wb, eta,
+            f"{tag}/window", exe.window_fn(sts, wb), *wargs,
             expect={"collectives": window_expect},
             donated_leaves=n_state_leaves),
         CompiledProgram.capture(
@@ -784,14 +807,22 @@ def capture_sharded_programs(mcfg, ccfg, mesh, *, policy: str = "replica",
         mats, _, _ = bucketing._state_mats(st0)
         if "cv_params" in st0:
             mats = mats * 2              # variates ride the same buckets
+        if masked:                       # weight lane(s) ride the f32 bucket
+            n_lanes = 2 if "cv_params" in st0 else 1
+            mats = mats + [jnp.zeros((K, n_lanes), jnp.float32)]
         ring = exe._ring_spec()
         sizes = bucketing.bucket_sizes(mats)
         n_hops = 2 * bucketing.ring_hop_count(sizes, ring)      # 2 rings/pair
         n_chains = 2 * bucketing.ring_chain_count(sizes, ring)
+        if masked:
+            v2 = jax.ShapeDtypeStruct((2, K), jnp.float32)
+            pargs = (sts, wb2, eta, {"weights": v2, "resync": v2})
+        else:
+            pargs = (sts, wb2, eta)
         # chain independence needs the local steps to lower as a while loop
         # (I >= 2); an I=1 window inlines and legitimately merges the chains
         programs.append(CompiledProgram.capture(
-            f"{tag}/pair", exe.window_pair_fn(sts, wb2), sts, wb2, eta,
+            f"{tag}/pair", exe.window_pair_fn(sts, wb2), *pargs,
             expect={"collectives": {
                 "kind": "ring", "n_hops": n_hops,
                 "n_chains": n_chains if I > 1 else None}},
@@ -803,14 +834,15 @@ def capture_sharded_programs(mcfg, ccfg, mesh, *, policy: str = "replica",
     # explicitly place()d state keys differently from the jit's own output
     # sharding, so the very first dispatch compiles a startup-only variant —
     # the budget pins the steady state after it.
+    fkw = {} if fli is None else {"faults": fli}
     st = exe.place(st0)
     st, _ = exe.window_step(
-        st, _concrete_window(key, mcfg, K, window_lens[0], B), 0.1)
+        st, _concrete_window(key, mcfg, K, window_lens[0], B), 0.1, **fkw)
     fn = exe.window_fn(sts, wb)          # same cache entry the drive uses
     fn.clear_cache()
     for wl in tuple(window_lens) + (window_lens[0],):
         wbi = _concrete_window(key, mcfg, K, wl, B)
-        st, _ = exe.window_step(st, wbi, 0.1)
+        st, _ = exe.window_step(st, wbi, 0.1, **fkw)
     n_expected = len(set(window_lens))
     programs.append(CompiledProgram(
         name=f"{tag}/window_cache",

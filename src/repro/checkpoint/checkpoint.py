@@ -41,6 +41,14 @@ def save(directory: str, step: int, tree: Any, metadata: dict | None = None) -> 
     return path
 
 
+def load_metadata(directory: str, step: int) -> dict:
+    """The user metadata dict ``save`` stored with this step (the loop
+    counters the crash-recovery resume in ``coda.fit`` restarts from)."""
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)["metadata"]
+
+
 def latest_step(directory: str) -> int | None:
     if not os.path.isdir(directory):
         return None

@@ -104,10 +104,11 @@ def bucket_sizes(mats) -> Dict:
     return out
 
 
-def _ring_chunk_mean(chunk, ring: RingSpec):
-    """Mean of a [m] chunk over the ring: reduce-scatter (R−1 ppermute
+def _ring_chunk_sum(chunk, ring: RingSpec):
+    """Sum of a [m] chunk over the ring: reduce-scatter (R−1 ppermute
     hops, each shard ends fully summed on one device) then all-gather
-    (R−1 more hops).  Returns the [m] mean."""
+    (R−1 more hops).  Returns the [m] sum (``_ring_chunk_mean`` divides
+    by R; the masked path divides by the on-wire weight sum instead)."""
     R, axis = ring.size, ring.axis
     m = chunk.shape[0]
     s = -(-m // R)                       # ring shard length (padded)
@@ -133,54 +134,93 @@ def _ring_chunk_mean(chunk, ring: RingSpec):
         cur = jax.lax.ppermute(cur, axis, perm)
         out = jax.lax.dynamic_update_slice(out, cur[None],
                                            ((own - 1 - t) % R, 0))
-    return out.reshape(-1)[:m] / R
+    return out.reshape(-1)[:m]
 
 
-def ring_mean_buckets(mats, ring: RingSpec):
-    """``pmean_buckets`` semantics lowered as chunked ppermute rings: per
-    dtype bucket, local mean over the K_loc rows, then C independent
-    reduce-scatter/all-gather chains over the ring axis."""
+def _ring_chunk_mean(chunk, ring: RingSpec):
+    """Mean of a [m] chunk over the ring (the unmasked overlapped path)."""
+    return _ring_chunk_sum(chunk, ring) / ring.size
+
+
+def _ring_buckets(mats, ring: RingSpec, *, mean: bool):
+    """Per-dtype bucket reduction lowered as chunked ppermute rings: local
+    reduce over the K_loc rows, then C independent reduce-scatter/all-gather
+    chains over the ring axis.  ``mean=True`` is the classical averaging;
+    ``mean=False`` carries the raw sum (the masked path divides by the
+    on-wire weight sum instead of the ring size)."""
+    local_red = jnp.mean if mean else jnp.sum
+    chunk_red = _ring_chunk_mean if mean else _ring_chunk_sum
     by_dtype = {}
     for i, m in enumerate(mats):
         by_dtype.setdefault(jnp.dtype(m.dtype), []).append(i)
     out = [None] * len(mats)
     for idxs in by_dtype.values():
         buf = jnp.concatenate([mats[i] for i in idxs], axis=1)
-        local = jnp.mean(buf, axis=0)          # [N] this shard's average
+        local = local_red(buf, axis=0)         # [N] this shard's partial
         n = local.shape[0]
         if ring.size == 1:
-            mean = local                       # degenerate: no wire
+            red = local                        # degenerate: no wire
         else:
             # near-even split (sizes differ by ≤ 1, never 0): a ceil-based
             # split could leave empty trailing chunks whose zero-byte
             # permute chains XLA may DCE, breaking ring_hop_count
             offs = _chunk_offsets(n, _n_chunks(n, ring))
-            mean = jnp.concatenate([
-                _ring_chunk_mean(local[lo:hi], ring)
+            red = jnp.concatenate([
+                chunk_red(local[lo:hi], ring)
                 for lo, hi in zip(offs[:-1], offs[1:])])
         offs = np.cumsum([0] + [mats[i].shape[1] for i in idxs])
         for j, i in enumerate(idxs):
-            out[i] = mean[offs[j]:offs[j + 1]]
+            out[i] = red[offs[j]:offs[j + 1]]
     return out
 
 
-def pmean_buckets(mats, wa):
-    """Mean the [K_loc, n_i] matrices over the global worker axis, shipping
-    one concatenated bucket per dtype (one all-reduce each; exactly one for
-    the default all-fp32 state).  Returns the [n_i] means."""
+def ring_mean_buckets(mats, ring: RingSpec):
+    """``pmean_buckets`` semantics lowered as chunked ppermute rings."""
+    return _ring_buckets(mats, ring, mean=True)
+
+
+def ring_sum_buckets(mats, ring: RingSpec):
+    """``psum_buckets`` semantics lowered as chunked ppermute rings (the
+    masked overlapped path: rows arrive pre-scaled, the weight lane rides
+    the f32 bucket)."""
+    return _ring_buckets(mats, ring, mean=False)
+
+
+def _reduce_buckets(mats, wa, *, mean: bool):
+    """Reduce the [K_loc, n_i] matrices over the global worker axis,
+    shipping one concatenated bucket per dtype (one all-reduce each;
+    exactly one for the default all-fp32 state).  Returns [n_i] vectors."""
+    local_red = jnp.mean if mean else jnp.sum
+    wire_red = jax.lax.pmean if mean else jax.lax.psum
     by_dtype = {}
     for i, m in enumerate(mats):
         by_dtype.setdefault(jnp.dtype(m.dtype), []).append(i)
     out = [None] * len(mats)
     for idxs in by_dtype.values():
         buf = jnp.concatenate([mats[i] for i in idxs], axis=1)
-        mean = jnp.mean(buf, axis=0)
+        red = local_red(buf, axis=0)
         if wa:
-            mean = jax.lax.pmean(mean, wa)
+            red = wire_red(red, wa)
         offs = np.cumsum([0] + [mats[i].shape[1] for i in idxs])
         for j, i in enumerate(idxs):
-            out[i] = mean[offs[j]:offs[j + 1]]
+            out[i] = red[offs[j]:offs[j + 1]]
     return out
+
+
+def pmean_buckets(mats, wa):
+    """Per-dtype bucketed cross-worker MEAN (the unmasked window layout)."""
+    return _reduce_buckets(mats, wa, mean=True)
+
+
+def psum_buckets(mats, wa):
+    """Per-dtype bucketed cross-worker SUM — the masked-window collective.
+
+    An exact masked mean cannot be a rescaled pmean (mean-then-rescale
+    rounds twice); instead every row is pre-scaled by its worker's weight,
+    the buckets are SUMMED, and a weight lane riding the f32 bucket carries
+    Σu so the division happens once, after the wire.  Same op count as
+    ``pmean_buckets``: still exactly one all-reduce per dtype bucket."""
+    return _reduce_buckets(mats, wa, mean=False)
 
 
 def int8_average(mats, wa):
@@ -359,4 +399,232 @@ def average_and_refresh(state, cv_new, wa, compress: str | None, *,
     stored_tree = jax.tree_util.tree_unflatten(ctdef, stored_flat)
     new["cv_params"] = stored_tree["params"]
     new["cv_duals"] = stored_tree["duals"]
+    return new
+
+
+# --------------------------------------------------------------------------
+# masked (partial-participation) averaging — core/faults.py feeds the masks
+# --------------------------------------------------------------------------
+# The fault-tolerant window replaces the bucketed MEAN with an exact masked
+# weighted mean over the participants:
+#
+#     merged = Σ_k u_k · x_k / Σ_k u_k
+#
+# computed as ONE bucketed all-reduce per dtype, exactly like the unmasked
+# layout: every row is pre-scaled by its worker's weight u_k BEFORE the
+# collective (absent workers contribute exact zeros — u ∈ {0, 1} and
+# power-of-two staleness discounts round-trip every float dtype exactly),
+# the buckets are SUMMED (psum — a rescaled pmean would round twice), and a
+# tiny f32 *weight lane* rides the f32 bucket so Σu crosses the wire inside
+# the same collective: the masked payload is the unmasked payload + 4 bytes
+# (+ 8 for CODASCA, which also ships the binary participant count Σm for
+# the variate refresh).  After the wire, ``resync`` selects per worker:
+# participants and re-syncing workers adopt the merged state, mid-straggle
+# workers (resync 0) keep their own iterate.
+
+
+def _masked_sketch_mats(state, m):
+    """The streaming-eval sketch deltas under the masked SUM collective:
+    rows pre-scaled by the binary participation mask only (no mean
+    pre-scale — the wire op is already a sum), so participants' exact
+    integer-valued fp32 counts fold in and absent workers' deltas stay
+    local, merging at their next participating window."""
+    if "sk_new" not in state:
+        return [], None
+    flat, tdef = jax.tree_util.tree_flatten(state["sk_new"])
+    kloc = flat[0].shape[0]
+    mats = [l.astype(jnp.float32).reshape(kloc, -1) * m[:, None]
+            for l in flat]
+    return mats, (flat, tdef)
+
+
+def _apply_masked_sketch_sums(new, smeta, sums, m):
+    """Fold the participants' delta sums into the replicated accumulator;
+    reset only the participants' deltas (binary mask — the multiply is
+    exact)."""
+    flat, tdef = smeta
+    delta = jax.tree_util.tree_unflatten(
+        tdef, [s.reshape(l.shape[1:]) for s, l in zip(sums, flat)])
+    new["sk_acc"] = jax.tree_util.tree_map(
+        lambda a, d: a + jnp.broadcast_to(d, a.shape), new["sk_acc"], delta)
+    keep = 1.0 - m
+    new["sk_new"] = jax.tree_util.tree_map(
+        lambda l: l * keep.reshape((l.shape[0],) + (1,) * (l.ndim - 1)),
+        new["sk_new"])
+    return new
+
+
+def _select_rows(meta, kloc, merged, take):
+    """The post-collective state update: rows with ``take > 0``
+    (participants + re-syncing workers) adopt the merged value, rows with
+    ``take == 0`` (mid-straggle workers that never saw the broadcast) keep
+    their own iterate."""
+    flat, tdef = meta
+    outs = []
+    for leaf, v in zip(flat, merged):
+        mg = jnp.broadcast_to(
+            v.astype(leaf.dtype).reshape(leaf.shape[1:]), leaf.shape)
+        t = take.reshape((kloc,) + (1,) * (leaf.ndim - 1))
+        outs.append(jnp.where(t > 0, mg, leaf))
+    tree = jax.tree_util.tree_unflatten(tdef, outs)
+    return tree["params"], tree["duals"]
+
+
+def masked_int8_average(mats, lane_idx, lanes, wa):
+    """``int8_average`` under partial participation: the s8 payload is the
+    same per-worker quantized rows (weights never touch the int8 bucket —
+    scaling quantized rows would corrupt the shared quantizer), and the f32
+    weight lanes are appended to the *scales* gather, so after the same
+    all-gather pair every shard holds the full [K] weight vectors and the
+    weighted dequantized mean is computed redundantly everywhere.
+
+    ``lanes``: [K_loc, n_lanes] f32 weight columns; ``lane_idx[i]`` names
+    which lane weights tensor i (state rows ride the participation weight
+    u, CODASCA variate rows the binary mask m).  Wire cost over the
+    unmasked pair: 4·n_lanes extra f32 bytes per worker."""
+    from repro.core import coda
+
+    qs, scales = [], []
+    for m in mats:
+        q, scale = coda.int8_quantize(m.astype(jnp.float32), (1,))
+        qs.append(q)
+        scales.append(scale)
+    qbuf = jnp.concatenate(qs, axis=1)                # [K_loc, N] int8
+    sbuf = jnp.concatenate(scales + [lanes], axis=1)  # [K_loc, L + n_lanes]
+    if wa:
+        qbuf = jax.lax.all_gather(qbuf, wa, axis=0, tiled=True)
+        sbuf = jax.lax.all_gather(sbuf, wa, axis=0, tiled=True)
+    L = len(mats)
+    lanebuf = sbuf[:, L:]                             # [K, n_lanes]
+    totals = jnp.maximum(jnp.sum(lanebuf, axis=0), 1.0)
+    out, off = [], 0
+    for i, m in enumerate(mats):
+        n = m.shape[1]
+        deq = qbuf[:, off:off + n].astype(jnp.float32) * sbuf[:, i:i + 1]
+        w = lanebuf[:, lane_idx[i]:lane_idx[i] + 1]
+        out.append((jnp.sum(deq * w, axis=0) / totals[lane_idx[i]])
+                   .astype(m.dtype))
+        off += n
+    return out
+
+
+def masked_average_state(state, faults, wa, compress: str | None, *,
+                         ring: RingSpec | None = None):
+    """``average_state`` under partial participation: the exact
+    u-weighted mean over the participants, still one collective per dtype
+    bucket (psum / ring-sum / int8 gather pair), with the weight lane
+    riding the f32 bucket.  ``faults``: {"weights": [K_loc] f32,
+    "resync": [K_loc] f32} from ``core.faults.FaultPlan.window``."""
+    u = faults["weights"].astype(jnp.float32)
+    r = faults["resync"].astype(jnp.float32)
+    m = (u > 0).astype(jnp.float32)
+    mats, meta, kloc = _state_mats(state)
+    smats, smeta = _masked_sketch_mats(state, m)
+    n = len(mats)
+    if ring is not None and compress:
+        raise ValueError("ring averaging does not support compressed buckets")
+    if compress == "int8":
+        if smats:  # unreachable via CoDAConfig; guard direct callers
+            raise ValueError("the streaming-eval sketch cannot ride int8 "
+                             "compressed buckets")
+        means = masked_int8_average(mats, [0] * n, u[:, None], wa)
+        ssums = []
+    else:
+        scaled = [mt * u.astype(mt.dtype)[:, None] for mt in mats]
+        lane = u[:, None]            # Σu crosses inside the f32 bucket
+        allm = scaled + [lane] + smats
+        sums = ring_sum_buckets(allm, ring) if ring is not None \
+            else psum_buckets(allm, wa)
+        W = jnp.maximum(sums[n][0], 1.0)
+        means = [s.astype(jnp.float32) / W for s in sums[:n]]
+        ssums = sums[n + 1:]
+    take = jnp.maximum(m, r)
+    params, duals = _select_rows(meta, kloc, means, take)
+    new = dict(state)
+    new["params"] = params
+    new["duals"] = duals
+    if smeta is not None:
+        new = _apply_masked_sketch_sums(new, smeta, ssums, m)
+    return new
+
+
+def masked_average_and_refresh(state, cv_new, faults, wa,
+                               compress: str | None, *,
+                               ring: RingSpec | None = None):
+    """``average_and_refresh`` under partial participation (the CODASCA
+    bookkeeping of Yuan et al. 2021 extended to sampled clients):
+
+      * state rows merge with the participation weights u (stale deltas
+        discounted), exactly like ``masked_average_state``;
+      * the variates refresh ONLY over the participants: fresh cv rows are
+        pre-scaled by the binary mask m, a second weight lane ships
+        P = Σm, and the new global variate is cg = Σ_k m_k·cv_new_k / P —
+        the exact participant mean;
+      * each participant stores its own fresh cv_new (re-quantized under
+        int8, as in the unmasked path); an absent worker keeps its old
+        c_k, so its corrections stay consistent until it rejoins.
+
+    Still ONE collective per dtype bucket; masked payload = unmasked
+    + 8 bytes (the u and m lanes)."""
+    u = faults["weights"].astype(jnp.float32)
+    r = faults["resync"].astype(jnp.float32)
+    m = (u > 0).astype(jnp.float32)
+    mats, meta, kloc = _state_mats(state)
+    cmats, cmeta, _ = _state_mats(cv_new)
+    smats, smeta = _masked_sketch_mats(state, m)
+    n, nc = len(mats), len(cmats)
+    lanes = jnp.stack([u, m], axis=1)        # [K_loc, 2] f32
+    if ring is not None:
+        if compress:
+            raise ValueError("ring averaging does not support compressed "
+                             "buckets")
+        scaled = [mt * u.astype(mt.dtype)[:, None] for mt in mats]
+        cscaled = [mt * m.astype(mt.dtype)[:, None] for mt in cmats]
+        sums = ring_sum_buckets(scaled + cscaled + [lanes] + smats, ring)
+    elif compress == "int8":
+        from repro.core import coda
+
+        if smats:  # unreachable via CoDAConfig; guard direct callers
+            raise ValueError("the streaming-eval sketch cannot ride int8 "
+                             "compressed buckets")
+        all_means = masked_int8_average(mats + cmats, [0] * n + [1] * nc,
+                                        lanes, wa)
+        means, cmeans = all_means[:n], all_means[n:]
+        ssums = []
+        # each worker re-applies the wire quantizer to its OWN variate rows
+        # (locally), so cg == participant-mean of the stored cv_k exactly
+        stored = []
+        for mt in cmats:
+            q, s = coda.int8_quantize(mt.astype(jnp.float32), (1,))
+            stored.append((q.astype(jnp.float32) * s).astype(mt.dtype))
+        cmats = stored
+    else:
+        scaled = [mt * u.astype(mt.dtype)[:, None] for mt in mats]
+        cscaled = [mt * m.astype(mt.dtype)[:, None] for mt in cmats]
+        sums = psum_buckets(scaled + cscaled + [lanes] + smats, wa)
+    if compress != "int8":
+        W = jnp.maximum(sums[n + nc][0], 1.0)
+        P = jnp.maximum(sums[n + nc][1], 1.0)
+        means = [s.astype(jnp.float32) / W for s in sums[:n]]
+        cmeans = [s.astype(jnp.float32) / P for s in sums[n:n + nc]]
+        ssums = sums[n + nc + 1:]
+    take = jnp.maximum(m, r)
+    params, duals = _select_rows(meta, kloc, means, take)
+    ctree, cduals = _unmats(cmeta, kloc, cmeans)
+    new = dict(state)
+    new["params"] = params
+    new["duals"] = duals
+    if smeta is not None:
+        new = _apply_masked_sketch_sums(new, smeta, ssums, m)
+    new["cg_params"], new["cg_duals"] = ctree, cduals
+    # cv_k ← fresh variate for participants, unchanged for absent workers
+    cflat, ctdef = cmeta
+    fresh_flat = [mt.reshape(l.shape) for mt, l in zip(cmats, cflat)]
+    fresh = jax.tree_util.tree_unflatten(ctdef, fresh_flat)
+    old = {"params": state["cv_params"], "duals": state["cv_duals"]}
+    msel = lambda f_, o_: jnp.where(
+        m.reshape((kloc,) + (1,) * (o_.ndim - 1)) > 0,
+        f_.astype(o_.dtype), o_)
+    cv = jax.tree_util.tree_map(msel, fresh, old)
+    new["cv_params"], new["cv_duals"] = cv["params"], cv["duals"]
     return new

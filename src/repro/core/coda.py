@@ -110,7 +110,33 @@ class CoDAConfig:
                                 # 2·stream_bins·4 extra bytes — still ONE
                                 # all-reduce per window
     stream_range: tuple[float, float] = (-8.0, 8.0)  # sketch score range
+    # -- fault tolerance (core/faults.py) ----------------------------------
+    # any non-default value below switches both executors to the MASKED
+    # window averaging: an exact weighted mean over the participating
+    # workers, still one all-reduce per dtype bucket, with a tiny f32
+    # weight lane riding the f32 bucket (+4 B, +8 B for CODASCA).  All
+    # defaults = faults off = bit-for-bit the classical full-participation
+    # path (the masked code is never traced).
+    participation: float = 1.0    # per-window per-worker participation prob
+    straggler_prob: float = 0.0   # per-window prob a worker's delta is late
+    straggler_windows: int = 1    # straggler delay, measured in windows
+    max_staleness: int = 0        # merge stale deltas up to this delay;
+                                  # beyond it the delta is dropped and the
+                                  # worker re-syncs from the merged state
+    staleness_discount: float = 0.5  # weight discount per window of delay
+                                     # (powers of two stay exact in bf16)
+    fault_seed: int = 0           # replay seed for the fault schedule
+    crashes: tuple = ()           # ((worker, window), ...) permanent deaths
     param_dtype: Any = jnp.float32
+
+    @property
+    def faults_enabled(self) -> bool:
+        """True when any fault knob is active — the static switch that
+        makes the executors trace the masked window (with the per-window
+        fault vectors as a TRACED argument, so the schedule never causes a
+        recompile)."""
+        return (self.participation < 1.0 or self.straggler_prob > 0.0
+                or bool(self.crashes))
 
     def __post_init__(self):
         # validate once here: the sharded executor dispatches on these with
@@ -146,6 +172,27 @@ class CoDAConfig:
         if self.stream_bins and not self.stream_range[1] > self.stream_range[0]:
             raise ValueError(f"stream_range must satisfy hi > lo, got "
                              f"{self.stream_range}")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError(f"participation must be in (0, 1], got "
+                             f"{self.participation}")
+        if not 0.0 <= self.straggler_prob < 1.0:
+            raise ValueError(f"straggler_prob must be in [0, 1), got "
+                             f"{self.straggler_prob}")
+        if self.straggler_windows < 1:
+            raise ValueError(f"straggler_windows must be >= 1, got "
+                             f"{self.straggler_windows}")
+        if self.max_staleness < 0:
+            raise ValueError(f"max_staleness must be >= 0, got "
+                             f"{self.max_staleness}")
+        if not 0.0 < self.staleness_discount <= 1.0:
+            raise ValueError(f"staleness_discount must be in (0, 1], got "
+                             f"{self.staleness_discount}")
+        if self.faults_enabled and self.server_momentum:
+            raise ValueError(
+                "server momentum keeps a replicated buffer that assumes "
+                "every worker holds the synced iterate after each window; "
+                "it cannot be combined with partial participation / fault "
+                "injection (participation < 1, stragglers, or crashes)")
 
 
 # The training state is a plain dict pytree (stacked worker axis throughout).
@@ -347,11 +394,18 @@ def merge_sketch(state: CoDAState) -> CoDAState:
 
 
 def window_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState,
-                window_batch, eta, *, communicate: bool = True):
+                window_batch, eta, *, communicate: bool = True,
+                faults=None):
     """``I`` local steps + (optionally) one averaging.
 
     ``window_batch`` leaves: [I, K, per_worker_batch, ...].  ``I = 1,
     communicate=True`` is exactly NP-PPD-SG; ``K = 1`` is PPD-SG.
+
+    ``faults``: the per-window fault vectors ({"weights": [K] f32,
+    "resync": [K] f32}, core/faults.py) switching the averaging to the
+    exact masked participant mean — the vmap oracle models the same mask
+    semantics as the sharded executor (core/bucketing with ``wa=()``), so
+    the two paths stay equivalence-testable under injected faults.
     """
 
     def body(st, wb):
@@ -363,8 +417,13 @@ def window_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState,
     state, losses = jax.lax.scan(body, state, window_batch,
                                  unroll=flags.scan_unroll())
     if communicate:
-        state = average(state, compress=ccfg.avg_compress or None)
-        if ccfg.server_momentum:
+        if faults is not None:
+            from repro.core import bucketing
+            state = bucketing.masked_average_state(
+                state, faults, (), ccfg.avg_compress or None)
+        else:
+            state = average(state, compress=ccfg.avg_compress or None)
+        if ccfg.server_momentum:  # rejected with faults at config time
             state = server_momentum_step(state, start_params,
                                          ccfg.server_momentum)
     return state, jnp.mean(losses, axis=1)
@@ -461,14 +520,25 @@ def streaming_payload_bytes(state: CoDAState) -> int:
                for l in jax.tree_util.tree_leaves(state["sk_new"]))
 
 
+def mask_payload_bytes(state: CoDAState) -> int:
+    """Extra f32 bytes the MASKED (partial-participation) window adds to
+    the collective: the participation-weight lane (Σu, 4 bytes) plus, for
+    CODASCA states, the binary participant-count lane (Σm, 4 more) — the
+    two scalars core/bucketing ships inside the f32 bucket so the masked
+    mean divides exactly once, after the wire."""
+    return 8 if "cv_params" in state else 4
+
+
 def window_payload_by_dtype(state: CoDAState,
-                            compress: str | None = None) -> dict[str, int]:
+                            compress: str | None = None, *,
+                            masked: bool = False) -> dict[str, int]:
     """Window-payload bytes per HLO dtype tag — the per-dtype-bucket view of
     ``window_payload_bytes`` (bucketing ships one collective per dtype, so a
     bf16-param state splits into a bf16 bucket and the f32 dual bucket).
     Works off the payload tree structure, whatever the objective's dual
     layout is.  Only meaningful for the uncompressed layouts (fp-dtype
-    pmean or ring)."""
+    pmean or ring).  ``masked=True`` adds the fault-tolerant weight lanes
+    to the f32 bucket (``mask_payload_bytes``)."""
     if compress:
         raise ValueError("per-dtype payload is only defined for "
                          "uncompressed averaging")
@@ -481,11 +551,14 @@ def window_payload_by_dtype(state: CoDAState,
     sk = streaming_payload_bytes(state)
     if sk:
         out["f32"] = out.get("f32", 0) + sk
+    if masked:
+        out["f32"] = out.get("f32", 0) + mask_payload_bytes(state)
     return out
 
 
 def window_payload_bytes(state: CoDAState,
-                         compress: str | None = None) -> int:
+                         compress: str | None = None, *,
+                         masked: bool = False) -> int:
     """Bytes one worker ships in the single window all-reduce.
 
     CoDA: exactly ``model_bytes``.  CODASCA (detected by the control-
@@ -494,9 +567,14 @@ def window_payload_bytes(state: CoDAState,
     (asserted against the compiled HLO in tests/test_codasca.py).  The
     streaming-eval sketch (``stream_bins > 0``) adds exactly
     ``streaming_payload_bytes`` fp32 on top (not doubled — the sketch has
-    no control variate), asserted in tests/test_metrics.py."""
+    no control variate), asserted in tests/test_metrics.py.  The masked
+    (partial-participation) window adds ``mask_payload_bytes`` on top of
+    everything — the weight lanes ride the f32 bucket (or the int8 pair's
+    f32 scales gather), still the same collective count."""
     mult = 2 if "cv_params" in state else 1
-    return mult * model_bytes(state, compress) + streaming_payload_bytes(state)
+    return (mult * model_bytes(state, compress)
+            + streaming_payload_bytes(state)
+            + (mask_payload_bytes(state) if masked else 0))
 
 
 def stage_payload_bytes(ccfg: CoDAConfig) -> int:
@@ -561,9 +639,17 @@ class VmapExecutor:
             wstep = codasca.window_step
         else:
             wstep = window_step
-        self._wstep = jax.jit(
-            lambda st, wb, eta: wstep(mcfg, ccfg, st, wb, eta),
-            donate_argnums=dn)
+        if ccfg.faults_enabled:
+            # the fault vectors are a TRACED argument (shapes fixed at
+            # [K]), so the per-window schedule never recompiles anything
+            self._wstep = jax.jit(
+                lambda st, wb, eta, fl: wstep(mcfg, ccfg, st, wb, eta,
+                                              faults=fl),
+                donate_argnums=dn)
+        else:
+            self._wstep = jax.jit(
+                lambda st, wb, eta: wstep(mcfg, ccfg, st, wb, eta),
+                donate_argnums=dn)
         self._send = jax.jit(
             lambda st, ab: stage_end(mcfg, ccfg, st, ab, resync=False),
             donate_argnums=dn)
@@ -571,7 +657,18 @@ class VmapExecutor:
     def place(self, state: CoDAState) -> CoDAState:
         return state  # default device placement
 
-    def window_step(self, state: CoDAState, wb, eta):
+    def window_step(self, state: CoDAState, wb, eta, *, faults=None):
+        if self.ccfg.faults_enabled:
+            if faults is None:
+                raise ValueError(
+                    "CoDAConfig enables fault injection; window_step needs "
+                    "the per-window fault vectors (coda.fit builds them "
+                    "from the FaultPlan)")
+            return self._wstep(state, wb, eta, faults)
+        if faults is not None:
+            raise ValueError(
+                "fault vectors passed but CoDAConfig has fault injection "
+                "disabled (set participation / straggler / crash knobs)")
         return self._wstep(state, wb, eta)
 
     def stage_end(self, state: CoDAState, ab) -> CoDAState:
@@ -602,7 +699,9 @@ def fit(key, mcfg: ModelConfig, ccfg: CoDAConfig, sched: schedules.ScheduleConfi
         sample_alpha_batch: Callable[[Any, int], Any],
         eval_every: int = 0,
         eval_fn: Callable[[CoDAState], float] | None = None,
-        executor: Any = "vmap", mesh=None, policy: str = "replica") -> FitResult:
+        executor: Any = "vmap", mesh=None, policy: str = "replica",
+        fault_plan=None, ckpt_dir: str = "", ckpt_every: int = 0,
+        resume: bool = False) -> FitResult:
     """Run CoDA for ``n_stages`` proximal-point stages.
 
     ``sample_window(key, I)`` must return a batch pytree with leading
@@ -616,43 +715,98 @@ def fit(key, mcfg: ModelConfig, ccfg: CoDAConfig, sched: schedules.ScheduleConfi
     the second window's compute.  An odd trailing window falls back to the
     single-window step; the first-half payloads are accounted as
     ``overlapped_bytes``, everything else as ``exposed_bytes``.
+
+    Fault tolerance: when ``ccfg.faults_enabled`` (or an explicit
+    ``fault_plan``, a ``core.faults.FaultPlan``) the loop feeds each window
+    its seed-deterministic fault vectors and the executors run the masked
+    averaging.  ``ckpt_dir`` + ``ckpt_every`` save ``{"state", "key"}`` +
+    the loop counters every ``ckpt_every`` windows (at window boundaries —
+    the only points where the state is meaningful to restart from);
+    ``resume=True`` restores the latest checkpoint and continues
+    bitwise-identically to the uninterrupted run: the PRNG key, the fp32
+    state, and the fault schedule (replayed from its seed + global window
+    counter) all round-trip exactly (tests/test_checkpoint.py).
     """
     exe = executor if hasattr(executor, "window_step") else \
         make_executor(mcfg, ccfg, executor, mesh=mesh, policy=policy)
     state = exe.place(init_state(key, mcfg, ccfg))
     stage_list = schedules.stages(sched, n_stages)
+    if fault_plan is None and ccfg.faults_enabled:
+        from repro.core import faults as _faults
+        fault_plan = _faults.FaultPlan.from_config(ccfg)
+    masked = fault_plan is not None
     history = []
     rounds = 0
     iters = 0
     exposed = overlapped = 0
-    payload = window_payload_bytes(state, ccfg.avg_compress or None)
+    gw = 0           # global window counter: fault schedule + ckpt steps
+    start_stage = start_w = 0
+    payload = window_payload_bytes(state, ccfg.avg_compress or None,
+                                   masked=masked)
     stage_payload = stage_payload_bytes(ccfg)
     pairs = getattr(exe, "overlap_pairs", False)
 
-    for st in stage_list:
+    if ckpt_dir:
+        from repro.checkpoint import checkpoint as _ckpt
+    if ckpt_dir and resume:
+        step = _ckpt.latest_step(ckpt_dir)
+        if step is not None:
+            restored = _ckpt.restore(ckpt_dir, step,
+                                     {"state": state, "key": key})
+            meta = _ckpt.load_metadata(ckpt_dir, step)
+            state = exe.place(restored["state"])
+            key = restored["key"]
+            start_stage, start_w = meta["stage"], meta["w"]
+            rounds, iters, gw = meta["rounds"], meta["iters"], meta["gw"]
+            exposed, overlapped = meta["exposed"], meta["overlapped"]
+            history = [tuple(h) for h in meta["history"]]
+
+    def window_faults(w0: int, n: int):
+        """Fault vectors for windows w0..w0+n−1 (stacked on a leading pair
+        axis when n > 1)."""
+        us, rs = zip(*(fault_plan.window(w0 + j) for j in range(n)))
+        if n == 1:
+            return {"weights": jnp.asarray(us[0]),
+                    "resync": jnp.asarray(rs[0])}
+        return {"weights": jnp.stack([jnp.asarray(x) for x in us]),
+                "resync": jnp.stack([jnp.asarray(x) for x in rs])}
+
+    for si, st in enumerate(stage_list):
+        if si < start_stage:
+            continue
         n_windows = -(-st.T // st.I)
-        w = 0
+        w = start_w if si == start_stage else 0
         while w < n_windows:
             key, sk = jax.random.split(key)
             if pairs and w + 1 < n_windows:
                 wb = sample_window(sk, 2 * st.I)
                 wb = jax.tree_util.tree_map(
                     lambda l: l.reshape((2, st.I) + l.shape[1:]), wb)
-                state, losses = exe.window_pair_step(state, wb, st.eta)
+                if masked:
+                    state, losses = exe.window_pair_step(
+                        state, wb, st.eta, faults=window_faults(gw, 2))
+                else:
+                    state, losses = exe.window_pair_step(state, wb, st.eta)
                 rounds += 2
                 iters += 2 * st.I
                 overlapped += payload
                 exposed += payload
                 done = 2
                 w += 2
+                gw += 2
             else:
                 wb = sample_window(sk, st.I)
-                state, losses = exe.window_step(state, wb, st.eta)
+                if masked:
+                    state, losses = exe.window_step(
+                        state, wb, st.eta, faults=window_faults(gw, 1))
+                else:
+                    state, losses = exe.window_step(state, wb, st.eta)
                 rounds += 1
                 iters += st.I
                 exposed += payload
                 done = 1
                 w += 1
+                gw += 1
             history.append((st.s, iters, float(jnp.mean(losses))))
             # a pair completes TWO windows in one step: honor the per-window
             # eval cadence if either of them hits it (a mid-pair state does
@@ -660,6 +814,12 @@ def fit(key, mcfg: ModelConfig, ccfg: CoDAConfig, sched: schedules.ScheduleConfi
             if eval_fn is not None and eval_every and any(
                     j % eval_every == 0 for j in range(w - done + 1, w + 1)):
                 history.append((st.s, iters, float(eval_fn(state))))
+            if ckpt_dir and ckpt_every and gw % ckpt_every == 0:
+                _ckpt.save(ckpt_dir, gw, {"state": state, "key": key},
+                           {"stage": si, "w": w, "rounds": rounds,
+                            "iters": iters, "gw": gw, "exposed": exposed,
+                            "overlapped": overlapped,
+                            "history": [list(h) for h in history]})
         key, sk = jax.random.split(key)
         state = exe.stage_end(state, sample_alpha_batch(sk, st.m))
         rounds += 1

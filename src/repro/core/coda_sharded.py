@@ -132,15 +132,18 @@ class ShardedExecutor:
             for t in trees)
 
     # -- window -----------------------------------------------------------
-    def _one_window(self, st, bt, eta, *, communicate, ring):
+    def _one_window(self, st, bt, eta, *, communicate, ring, fl=None):
         """One window's worth of per-shard work: I local steps + (optionally)
         the combined averaging — blocking pmean bucket by default, chunked
-        ppermute rings when ``ring`` is given.  Runs INSIDE shard_map."""
+        ppermute rings when ``ring`` is given, the masked participant mean
+        when ``fl`` (the per-window fault vectors, sliced to this shard's
+        workers) is given.  Runs INSIDE shard_map."""
         mcfg, ccfg, wa = self.mcfg, self.ccfg, self.worker_axes
         if ccfg.algorithm == "codasca":
             from repro.core import codasca
             return codasca.run_window(mcfg, ccfg, st, bt, eta, wa=wa,
-                                      communicate=communicate, ring=ring)
+                                      communicate=communicate, ring=ring,
+                                      faults=fl)
 
         def step(s, b):
             return coda.local_step(mcfg, ccfg, s, b, eta)
@@ -149,41 +152,78 @@ class ShardedExecutor:
         start_params = st["params"]
         st, losses = jax.lax.scan(step, st, bt, unroll=flags.scan_unroll())
         if communicate:
-            st = bucketing.average_state(st, wa, ccfg.avg_compress or None,
-                                         ring=ring, n_workers=ccfg.n_workers)
-            if ccfg.server_momentum:
+            if fl is not None:
+                st = bucketing.masked_average_state(
+                    st, fl, wa, ccfg.avg_compress or None, ring=ring)
+            else:
+                st = bucketing.average_state(st, wa,
+                                             ccfg.avg_compress or None,
+                                             ring=ring,
+                                             n_workers=ccfg.n_workers)
+            if ccfg.server_momentum:  # rejected with faults at config time
                 st = coda.server_momentum_step(st, start_params,
                                                ccfg.server_momentum)
         return st, losses  # losses: [I, K_loc]
 
+    def _fault_specs(self, lead, *, paired: bool = False):
+        """PartitionSpecs for the fault-vector dict: each [K] vector is
+        sharded over the worker axes exactly like a state leading axis, so
+        every shard sees its own workers' weights ([2, K] leaves under the
+        fused pair get the worker axis second)."""
+        from jax.sharding import PartitionSpec as P
+        spec = P(None, lead) if paired else P(lead)
+        return {"weights": spec, "resync": spec}
+
     def window_fn(self, state, wb, *, communicate: bool = True):
         """The jitted window step for these arg structures (also the hook
-        the HLO tests use: ``.lower(state, wb, eta)``)."""
+        the HLO tests use: ``.lower(state, wb, eta)`` — with the fault
+        vectors as a fourth traced arg when ``ccfg.faults_enabled``)."""
         key = self._key(("window", communicate), state, wb)
         if key in self._fns:
             return self._fns[key]
         lead = self.worker_axes if self.worker_axes else None
+        faulty = self.ccfg.faults_enabled
 
-        def body(st, bt, eta):
-            return self._one_window(st, bt, eta, communicate=communicate,
-                                    ring=None)
+        if faulty:
+            def body(st, bt, eta, fl):
+                return self._one_window(st, bt, eta, communicate=communicate,
+                                        ring=None, fl=fl)
+        else:
+            def body(st, bt, eta):
+                return self._one_window(st, bt, eta, communicate=communicate,
+                                        ring=None)
 
         st_specs = rules.shardmap_state_specs(state, self.mesh, self.policy)
         bt_specs = rules.shardmap_batch_specs(wb, self.mesh, self.policy,
                                               self.ccfg.n_workers,
                                               worker_dim=1)
         from jax.sharding import PartitionSpec as P
+        in_specs = (st_specs, bt_specs, P())
+        if faulty:
+            in_specs = in_specs + (self._fault_specs(lead),)
         sm = _shard_map(body, mesh=self.mesh,
-                        in_specs=(st_specs, bt_specs, P()),
+                        in_specs=in_specs,
                         out_specs=(st_specs, P(None, lead)),
                         check_rep=False)
         fn = jax.jit(sm, donate_argnums=self._donate)
         self._fns[key] = fn
         return fn
 
-    def window_step(self, state, wb, eta, *, communicate: bool = True):
-        return self.window_fn(state, wb, communicate=communicate)(
-            state, wb, eta)
+    def window_step(self, state, wb, eta, *, communicate: bool = True,
+                    faults=None):
+        fn = self.window_fn(state, wb, communicate=communicate)
+        if self.ccfg.faults_enabled:
+            if faults is None:
+                raise ValueError(
+                    "CoDAConfig enables fault injection; window_step needs "
+                    "the per-window fault vectors (coda.fit builds them "
+                    "from the FaultPlan)")
+            return fn(state, wb, eta, faults)
+        if faults is not None:
+            raise ValueError(
+                "fault vectors passed but CoDAConfig has fault injection "
+                "disabled (set participation / straggler / crash knobs)")
+        return fn(state, wb, eta)
 
     # -- fused window pair (the overlapped schedule) ----------------------
     def window_pair_fn(self, state, wb2, *, communicate: bool = True):
@@ -205,31 +245,56 @@ class ShardedExecutor:
             return self._fns[key]
         ring = self._ring_spec()
         lead = self.worker_axes if self.worker_axes else None
+        faulty = self.ccfg.faults_enabled
 
-        def body(st, bt2, eta):
-            take = lambda i: jax.tree_util.tree_map(lambda l: l[i], bt2)
-            st, l1 = self._one_window(st, take(0), eta,
-                                      communicate=communicate, ring=ring)
-            st, l2 = self._one_window(st, take(1), eta,
-                                      communicate=communicate, ring=ring)
+        def run_pair(st, bt2, eta, fl2=None):
+            take = lambda t, i: jax.tree_util.tree_map(lambda l: l[i], t)
+            flt = lambda i: None if fl2 is None else take(fl2, i)
+            st, l1 = self._one_window(st, take(bt2, 0), eta,
+                                      communicate=communicate, ring=ring,
+                                      fl=flt(0))
+            st, l2 = self._one_window(st, take(bt2, 1), eta,
+                                      communicate=communicate, ring=ring,
+                                      fl=flt(1))
             return st, jnp.concatenate([l1, l2], axis=0)  # [2I, K_loc]
+
+        if faulty:
+            def body(st, bt2, eta, fl2):
+                return run_pair(st, bt2, eta, fl2)
+        else:
+            def body(st, bt2, eta):
+                return run_pair(st, bt2, eta)
 
         st_specs = rules.shardmap_state_specs(state, self.mesh, self.policy)
         bt_specs = rules.shardmap_batch_specs(wb2, self.mesh, self.policy,
                                               self.ccfg.n_workers,
                                               worker_dim=2)
         from jax.sharding import PartitionSpec as P
+        in_specs = (st_specs, bt_specs, P())
+        if faulty:
+            in_specs = in_specs + (self._fault_specs(lead, paired=True),)
         sm = _shard_map(body, mesh=self.mesh,
-                        in_specs=(st_specs, bt_specs, P()),
+                        in_specs=in_specs,
                         out_specs=(st_specs, P(None, lead)),
                         check_rep=False)
         fn = jax.jit(sm, donate_argnums=self._donate)
         self._fns[key] = fn
         return fn
 
-    def window_pair_step(self, state, wb2, eta, *, communicate: bool = True):
-        return self.window_pair_fn(state, wb2, communicate=communicate)(
-            state, wb2, eta)
+    def window_pair_step(self, state, wb2, eta, *, communicate: bool = True,
+                         faults=None):
+        fn = self.window_pair_fn(state, wb2, communicate=communicate)
+        if self.ccfg.faults_enabled:
+            if faults is None:
+                raise ValueError(
+                    "CoDAConfig enables fault injection; window_pair_step "
+                    "needs the per-window fault vectors (leaves [2, K])")
+            return fn(state, wb2, eta, faults)
+        if faults is not None:
+            raise ValueError(
+                "fault vectors passed but CoDAConfig has fault injection "
+                "disabled (set participation / straggler / crash knobs)")
+        return fn(state, wb2, eta)
 
     # -- stage boundary ---------------------------------------------------
     def stage_fn(self, state, ab):

@@ -91,12 +91,18 @@ def local_step(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, batch, eta):
 
 
 def run_window(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, window_batch,
-               eta, *, wa=(), communicate: bool = True, ring=None):
+               eta, *, wa=(), communicate: bool = True, ring=None,
+               faults=None):
     """I corrected local steps + the single combined all-reduce.
 
     ``wa``: worker mesh axes ((),) for the vmap oracle.  ``ring``: a
     ``bucketing.RingSpec`` to lower the combined averaging as chunked
     ppermute rings instead of the blocking pmean (the overlapped path).
+    ``faults``: per-window fault vectors (core/faults.py) switching the
+    combined collective to the masked form — state rows merge over the
+    participation weights, the variates refresh over the participants only
+    (``cg == participant mean``, absent workers keep their old c_k; see
+    ``bucketing.masked_average_and_refresh``).
     Returns (new_state, losses [I, K_loc]).
 
     The raw-gradient accumulator feeding the variate refresh runs in fp32
@@ -127,19 +133,24 @@ def run_window(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, window_batch,
         wire = {"params": state["params"], "duals": state["duals"]}
         cv_new = jax.tree_util.tree_map(
             lambda g, w: (g / I).astype(w.dtype), acc, wire)
-        state = bucketing.average_and_refresh(state, cv_new, wa,
-                                              ccfg.avg_compress or None,
-                                              ring=ring,
-                                              n_workers=ccfg.n_workers)
-        if ccfg.server_momentum:
+        if faults is not None:
+            state = bucketing.masked_average_and_refresh(
+                state, cv_new, faults, wa, ccfg.avg_compress or None,
+                ring=ring)
+        else:
+            state = bucketing.average_and_refresh(state, cv_new, wa,
+                                                  ccfg.avg_compress or None,
+                                                  ring=ring,
+                                                  n_workers=ccfg.n_workers)
+        if ccfg.server_momentum:  # rejected with faults at config time
             state = coda.server_momentum_step(state, start_params,
                                               ccfg.server_momentum)
     return state, losses
 
 
 def window_step(mcfg: ModelConfig, ccfg: coda.CoDAConfig, state, window_batch,
-                eta, *, communicate: bool = True):
+                eta, *, communicate: bool = True, faults=None):
     """Vmap-oracle window: same surface as ``coda.window_step``."""
     state, losses = run_window(mcfg, ccfg, state, window_batch, eta,
-                               wa=(), communicate=communicate)
+                               wa=(), communicate=communicate, faults=faults)
     return state, jnp.mean(losses, axis=1)

@@ -42,6 +42,14 @@ scores the loss already computed, the per-window merge rides the existing
 window all-reduce as 2·bins·4 extra fp32 bytes, and the report line shows
 the training-stream AUC with its resolution bound.
 
+Fault tolerance (--participation / --straggler-prob / --max-staleness /
+--fault-seed): a seed-deterministic FaultPlan (core/faults.py) drops a
+fraction of per-window contributions and delays stragglers; the window
+all-reduce switches to the masked participant mean (still ONE collective,
+payload + a tiny weight lane).  --ckpt-every N + --ckpt-dir save
+crash-recovery checkpoints at window boundaries; --resume restarts
+bitwise-identically to the uninterrupted run.
+
 Overlapped averaging (--overlap, shard_map only): the window all-reduce is
 rescheduled as C = --overlap-chunks ppermute ring chains per dtype bucket
 inside a fused two-window step, so the first window's wire time hides under
@@ -137,7 +145,32 @@ def main():
     ap.add_argument("--dirichlet-alpha", type=float, default=float("inf"),
                     help="Dirichlet(α) label-skew across the K shards "
                          "(inf = IID even split, the paper's setting)")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="per-window probability a worker's contribution "
+                         "makes the merge (< 1 turns on the fault-injection "
+                         "harness: masked participant-mean averaging, same "
+                         "ONE all-reduce per window)")
+    ap.add_argument("--straggler-prob", type=float, default=0.0,
+                    help="per-window probability a worker starts straggling "
+                         "(its contributions arrive --straggler-windows "
+                         "windows late)")
+    ap.add_argument("--straggler-windows", type=int, default=1,
+                    help="how many windows a straggler's contribution lags")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="merge straggler contributions up to this many "
+                         "windows late (staleness-discounted weight); later "
+                         "arrivals are dropped and the worker re-synced")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic fault schedule "
+                         "(core/faults.FaultPlan — replayable)")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="with --ckpt-dir: save state + loop counters every "
+                         "N windows (crash-recovery checkpoints; resume "
+                         "with --resume)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt-dir "
+                         "(bitwise-identical to the uninterrupted run)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--executor", choices=["vmap", "shard_map"],
                     default="vmap",
@@ -204,7 +237,17 @@ def main():
                            overlap_chunks=args.overlap_chunks
                            if args.overlap else 0,
                            stream_bins=args.metric_bins
-                           if args.metrics == "sketch" else 0)
+                           if args.metrics == "sketch" else 0,
+                           participation=args.participation,
+                           straggler_prob=args.straggler_prob,
+                           straggler_windows=args.straggler_windows,
+                           max_staleness=args.max_staleness,
+                           fault_seed=args.fault_seed)
+    if ccfg.faults_enabled:
+        print(f"fault injection: participation={args.participation:g} "
+              f"straggler_prob={args.straggler_prob:g} "
+              f"(lag {args.straggler_windows}, max_staleness "
+              f"{args.max_staleness}) seed={args.fault_seed}")
     sched = schedules.ScheduleConfig(n_workers=args.workers, eta0=args.eta0,
                                      T0=args.t0, I0=args.interval,
                                      p_pos=ds.p_pos)
@@ -252,7 +295,9 @@ def main():
         sample_alpha_batch=lambda k, m: adapt(ds.sample_alpha_batch(k, m)),
         eval_every=args.metric_interval,
         eval_fn=eval_fn if args.metric_interval else None,
-        executor=args.executor, mesh=mesh, policy=args.policy)
+        executor=args.executor, mesh=mesh, policy=args.policy,
+        ckpt_dir=args.ckpt_dir if args.ckpt_every else "",
+        ckpt_every=args.ckpt_every, resume=args.resume)
     dt = time.time() - t0
     h_test = test_scores(res.state)
     auc = streaming.make_metric("auc", "exact").compute(h_test, test["labels"])
@@ -276,7 +321,10 @@ def main():
         print(f"overlap: {res.overlapped_bytes:,} bytes hidden under "
               f"next-window compute, {res.exposed_bytes:,} exposed "
               f"(chunks={args.overlap_chunks})")
-    if args.ckpt_dir:
+    if args.ckpt_dir and not args.ckpt_every:
+        # final-state export only; --ckpt-every owns the directory for the
+        # crash-recovery window checkpoints (their metadata carries the
+        # loop counters --resume restarts from)
         path = checkpoint.save(args.ckpt_dir, res.iterations, res.state,
                                {"auc": auc, "arch": mcfg.name})
         print("checkpoint:", path)

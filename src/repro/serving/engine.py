@@ -49,7 +49,16 @@ from repro.serving import decode as D
 
 
 class TicksExhausted(RuntimeError):
-    """``run()`` ran out of ticks with requests still queued or active."""
+    """``run()`` ran out of ticks with requests still queued or active.
+
+    ``records`` carries the partial per-request state of everything still
+    in flight (uid, status, tokens generated so far, positions consumed,
+    timestamps) so the caller can account for the unfinished work instead
+    of losing the whole trace."""
+
+    def __init__(self, message: str, records: list[dict] | None = None):
+        super().__init__(message)
+        self.records = records or []
 
 
 @dataclasses.dataclass
@@ -61,8 +70,11 @@ class Request:
     deadline: float | None = None     # seconds after arrival; None = none
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    status: str = "new"                  # new|queued|active|done|rejected|expired
+    status: str = "new"          # new|queued|active|done|rejected|expired|failed
     reject_reason: str = ""
+    failure_reason: str = ""     # set when status == "failed" (or when the
+                                 # metric fold failed on an otherwise-served
+                                 # request — outcome kept, failure recorded)
     truncated: bool = False
     prompt_used: list[int] = dataclasses.field(default_factory=list)
     prefix_hit_tokens: int = 0
@@ -144,6 +156,7 @@ class ServingEngine:
         self.n_completed = 0
         self.n_rejected = 0
         self.n_expired = 0
+        self.n_failed = 0
         # streaming metric over served traffic: a repro.metrics.streaming
         # Metric (usually AUC, sketch backend).  Every finalized request
         # that carries both a score and a ground-truth label is folded into
@@ -324,16 +337,29 @@ class ServingEngine:
                 continue
             k = int(nst[s])
             self.pos[s] += k
-            if prefilling[s]:
-                self.tokens_prefilled += k
-                if self.prefix_cache_size:
-                    self._prefix_store(s, req, int(self.pos[s]))
-                if not self.pending[s]:   # prompt consumed: first token is out
-                    req.score = float(out_scores[s, k - 1])
-                    self._emit(s, req, int(out_toks[s, k - 1]), t_out)
-            else:
-                self.tokens_decoded += 1
-                self._emit(s, req, int(out_toks[s, 0]), t_out)
+            # a per-request scoring failure finalizes THAT request with a
+            # recorded failure status (its latency accounting intact) and
+            # frees the slot — it must not tear down the rest of the trace
+            try:
+                if prefilling[s]:
+                    self.tokens_prefilled += k
+                    if self.prefix_cache_size:
+                        self._prefix_store(s, req, int(self.pos[s]))
+                    if not self.pending[s]:  # prompt consumed: first token out
+                        req.score = float(out_scores[s, k - 1])
+                        self._emit(s, req, int(out_toks[s, k - 1]), t_out)
+                else:
+                    self.tokens_decoded += 1
+                    self._emit(s, req, int(out_toks[s, 0]), t_out)
+            except Exception as e:
+                reason = f"{type(e).__name__}: {e}"
+                if req.done:    # finalized before the failure: keep the
+                    req.failure_reason = reason  # outcome, record the fault
+                    if self.active[s] is req:
+                        self.active[s] = None
+                else:
+                    self._finish(req, s, self._clock(), status="failed",
+                                 reason=reason)
         return sum(r is not None for r in self.active) + len(self.queue)
 
     def _emit(self, s: int, req: Request, tok: int, now: float) -> None:
@@ -345,22 +371,31 @@ class ServingEngine:
             self._finish(req, s, now, status="done")
 
     def _finish(self, req: Request, s: int | None, now: float, *,
-                status: str) -> None:
+                status: str, reason: str = "") -> None:
         req.status = status
         req.done = True
         req.t_complete = now
+        if reason:
+            req.failure_reason = reason
         if status == "done":
             self.n_completed += 1
+        elif status == "failed":
+            self.n_failed += 1
         else:
             self.n_expired += 1
         if s is not None and self.active[s] is req:
             self.active[s] = None
         if (self.metric is not None and req.score is not None
                 and req.label is not None):
-            self.metric_state = self.metric.update(
-                self.metric_state, np.asarray([req.score], np.float32),
-                np.asarray([req.label], np.float32))
-            self.n_scored += 1
+            # a broken metric fold must not un-serve the request: the
+            # outcome stands, the fault is recorded on the request
+            try:
+                self.metric_state = self.metric.update(
+                    self.metric_state, np.asarray([req.score], np.float32),
+                    np.asarray([req.label], np.float32))
+                self.n_scored += 1
+            except Exception as e:
+                req.failure_reason = f"metric: {type(e).__name__}: {e}"
 
     def streaming_metrics(self) -> dict | None:
         """The engine's streaming-metric record (None when no metric is
@@ -374,15 +409,28 @@ class ServingEngine:
                 "scored": self.n_scored,
                 "state_bytes": self.metric.state_bytes(self.metric_state)}
 
+    def _partial_record(self, req: Request) -> dict:
+        return {"uid": req.uid, "status": req.status,
+                "generated": list(req.generated),
+                "prompt_consumed": len(req.prompt_used) - (
+                    len(self.pending[self.active.index(req)])
+                    if req in self.active else len(req.prompt_used)),
+                "score": req.score,
+                "t_arrival": req.t_arrival, "t_admitted": req.t_admitted,
+                "t_first_token": req.t_first_token}
+
     def run(self, max_ticks: int = 10_000) -> None:
         """Drive ``step`` until every request is finalized.  Raises
         ``TicksExhausted`` (not a silent return) if ticks run out with
-        requests still queued or active."""
+        requests still queued or active — the exception's ``records`` list
+        carries the partial per-request state of everything in flight."""
         for _ in range(max_ticks):
             if self.step() == 0:
                 return
-        if any(r is not None for r in self.active) or self.queue:
+        in_flight = [r for r in self.active if r is not None] + list(self.queue)
+        if in_flight:
             raise TicksExhausted(
                 f"{max_ticks} ticks exhausted with "
                 f"{sum(r is not None for r in self.active)} active and "
-                f"{len(self.queue)} queued requests")
+                f"{len(self.queue)} queued requests",
+                records=[self._partial_record(r) for r in in_flight])

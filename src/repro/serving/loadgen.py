@@ -159,6 +159,7 @@ def summarize(reqs: list[Request], wall: float,
         "completed": len(done),
         "rejected": sum(r.status == "rejected" for r in reqs),
         "expired": sum(r.status == "expired" for r in reqs),
+        "failed": sum(r.status == "failed" for r in reqs),
         "truncated": sum(r.truncated for r in reqs),
         "generated_tokens": n_tok,
         "tokens_per_s": n_tok / max(wall, 1e-9),

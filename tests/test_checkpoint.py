@@ -1,0 +1,120 @@
+"""Crash-recovery regression tests for the windowed-training checkpoints.
+
+The contract (core/coda.fit + checkpoint/): a run killed mid-flight resumes
+from the latest window-boundary checkpoint and finishes BITWISE-identical
+to the uninterrupted run — fp32 state, PRNG key, loop counters, loss
+history, and comm accounting all round-trip exactly.  The fault schedule is
+a pure function of (fault_seed, global window index), so the same holds
+under fault injection: the resumed run replays the exact dropout/straggler
+vectors the dead run would have seen.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import mlp_config
+from repro.core import coda, schedules
+
+MCFG = mlp_config(n_features=8, d=16)
+K, I, B, F = 4, 2, 4, 8
+SCHED = schedules.ScheduleConfig(n_workers=K, eta0=0.3, T0=8, I0=I)
+N_STAGES = 2  # practical mode triples T stagewise: 4 + 12 = 16 windows
+
+
+def _sample_window(key, n_steps):
+    kf, kl = jax.random.split(key)
+    y = (jax.random.uniform(kl, (n_steps, K, B)) < 0.6).astype(jnp.float32)
+    x = jax.random.normal(kf, (n_steps, K, B, F)) \
+        + 0.3 * (y[..., None] * 2 - 1)
+    return {"features": x, "labels": y}
+
+
+def _sample_alpha(key, m):
+    kf, kl = jax.random.split(key)
+    y = (jax.random.uniform(kl, (K, m)) < 0.6).astype(jnp.float32)
+    x = jax.random.normal(kf, (K, m, F)) + 0.3 * (y[..., None] * 2 - 1)
+    return {"features": x, "labels": y}
+
+
+class _Crash(RuntimeError):
+    pass
+
+
+def _crashing_sampler(n_calls: int):
+    """A sample_window that dies on its (n_calls+1)-th draw — the window
+    loop never reaches that window, exactly like a mid-run worker death."""
+    seen = {"n": 0}
+
+    def sample(key, n_steps):
+        if seen["n"] >= n_calls:
+            raise _Crash(f"simulated crash at window draw {seen['n']}")
+        seen["n"] += 1
+        return _sample_window(key, n_steps)
+
+    return sample
+
+
+def _fit(ccfg, **kw):
+    return coda.fit(jax.random.PRNGKey(0), MCFG, ccfg, SCHED, N_STAGES,
+                    _sample_window, _sample_alpha, **kw)
+
+
+def _assert_identical(a: coda.FitResult, b: coda.FitResult):
+    for pa, pb in zip(jax.tree_util.tree_leaves(a.state),
+                      jax.tree_util.tree_leaves(b.state)):
+        assert jnp.array_equal(pa, pb), "state leaf differs after resume"
+    assert a.history == b.history
+    assert a.comm_rounds == b.comm_rounds
+    assert a.iterations == b.iterations
+    assert a.exposed_bytes == b.exposed_bytes
+    assert a.overlapped_bytes == b.overlapped_bytes
+
+
+@pytest.mark.parametrize("faulted", [False, True],
+                         ids=["clean", "fault-injected"])
+def test_crash_resume_is_bitwise_identical(tmp_path, faulted):
+    kw = dict(participation=0.7, straggler_prob=0.2, max_staleness=1,
+              fault_seed=11) if faulted else {}
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.6, **kw)
+    want = _fit(ccfg)
+
+    d = str(tmp_path / "run")
+    with pytest.raises(_Crash):
+        coda.fit(jax.random.PRNGKey(0), MCFG, ccfg, SCHED, N_STAGES,
+                 _crashing_sampler(5), _sample_alpha,
+                 ckpt_dir=d, ckpt_every=2)
+    # died after 5 window draws -> checkpoints at gw = 2 and 4 exist
+    assert ckpt.latest_step(d) == 4
+    meta = ckpt.load_metadata(d, 4)
+    assert meta["gw"] == 4 and meta["rounds"] == 4
+
+    got = _fit(ccfg, ckpt_dir=d, ckpt_every=2, resume=True)
+    _assert_identical(want, got)
+    # the resumed run kept checkpointing past the crash point
+    assert ckpt.latest_step(d) == 16
+
+
+def test_resume_without_checkpoint_starts_fresh(tmp_path):
+    """resume=True against an empty directory is a cold start, not an
+    error — the launcher can always pass --resume."""
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.6)
+    want = _fit(ccfg)
+    got = _fit(ccfg, ckpt_dir=str(tmp_path / "empty"), ckpt_every=4,
+               resume=True)
+    _assert_identical(want, got)
+
+
+def test_checkpoint_cadence_and_metadata_roundtrip(tmp_path):
+    """Checkpoints land only at window boundaries on the ckpt_every grid,
+    and the metadata carries everything fit() needs to resume."""
+    d = str(tmp_path / "run")
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.6)
+    _fit(ccfg, ckpt_dir=d, ckpt_every=2)
+    assert ckpt.latest_step(d) == 16
+    for step in range(2, 17, 2):
+        meta = ckpt.load_metadata(d, step)
+        assert meta["gw"] == step
+        for k in ("stage", "w", "rounds", "iters", "exposed",
+                  "overlapped", "history"):
+            assert k in meta, k

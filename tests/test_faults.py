@@ -1,0 +1,390 @@
+"""Fault-injection harness tests (core/faults.py + the masked window path).
+
+Covers the FaultPlan determinism contract (seed replay, random access),
+the schedule semantics (dropout/straggle/crash vectors, the never-all-absent
+guard, staleness bounds), the CoDAConfig fault-knob validation, and the
+masked window math on the vmap oracle:
+
+  * the masked merge IS the exact weighted participant mean (bitwise
+    against the hand-computed prescale-sum-divide);
+  * CODASCA variate invariants at p = 0.5: ``cg`` equals the exact
+    participant mean of the fresh variates, absent workers keep their old
+    ``c_k``;
+  * mid-straggle workers (resync 0) keep their own iterate;
+  * all-ones fault vectors match the unmasked path to fp32 tolerance, and
+    p = 1.0 IS the unmasked path (``faults_enabled`` gates at config);
+  * composite liveness (hypothesis): dirichlet partitions + participation
+    masks never leave a window without participants or a participant
+    without data, and a window that sees no positives takes the guarded
+    finite path, not NaN.
+
+The masked shard_map equivalence + compiled-HLO payload contracts live in
+tests/test_masked_window.py (they need forced host devices).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs.base import mlp_config
+from repro.core import coda, faults
+
+MCFG = mlp_config(n_features=8, d=16)
+K, I, B = 4, 2, 4
+
+
+def _wb(key, labels=None):
+    kf, kl = jax.random.split(key)
+    y = labels if labels is not None else (
+        jax.random.uniform(kl, (I, K, B)) < 0.5).astype(jnp.float32)
+    x = jax.random.normal(kf, (I, K, B, 8)) + 0.3 * (y[..., None] * 2 - 1)
+    return {"features": x, "labels": y}
+
+
+# --------------------------------------------------------------------------
+# FaultPlan: determinism + schedule semantics
+# --------------------------------------------------------------------------
+def test_plan_replays_from_seed():
+    kw = dict(n_workers=6, seed=3, dropout=0.4, straggle=0.2,
+              straggle_windows=2, max_staleness=2)
+    a, b = faults.FaultPlan(**kw), faults.FaultPlan(**kw)
+    # b is driven out of order: random access must agree with sequential
+    for w in [5, 0, 11, 3, 7]:
+        u2, r2 = b.window(w)
+        u1, r1 = a.window(w)
+        assert np.array_equal(u1, u2) and np.array_equal(r1, r2), w
+        assert u1.dtype == np.float32 and r1.dtype == np.float32
+    # a different seed diverges somewhere in the first dozen windows
+    c = faults.FaultPlan(**{**kw, "seed": 4})
+    assert any(not np.array_equal(a.window(w)[0], c.window(w)[0])
+               for w in range(12))
+
+
+def test_plan_vectors_are_copies():
+    plan = faults.FaultPlan(n_workers=4, dropout=0.5)
+    u, _ = plan.window(0)
+    u[:] = -1.0
+    u2, _ = plan.window(0)
+    assert float(u2.min()) >= 0.0
+
+
+def test_plan_never_all_absent():
+    # dropout just under the validation bound: the guard must re-admit one
+    # dropped worker whenever the draw empties the window
+    plan = faults.FaultPlan(n_workers=4, seed=0, dropout=0.99)
+    for w in range(50):
+        u, r = plan.window(w)
+        assert u.sum() > 0.0, w
+        assert np.all(r == 1.0), w  # pure dropout: everyone resyncs
+
+
+def test_plan_crash_semantics():
+    plan = faults.FaultPlan(n_workers=3, crashes=((0, 2), (2, 4)))
+    for w in range(8):
+        u, r = plan.window(w)
+        if w >= 2:
+            assert u[0] == 0.0 and r[0] == 1.0, w  # dead: tracks merged state
+        if w >= 4:
+            assert u[2] == 0.0 and r[2] == 1.0, w
+        assert u[1] == 1.0  # no other faults configured
+    # every worker crashed: nothing left to train — loud, not a hang
+    dead = faults.FaultPlan(n_workers=2, crashes=((0, 0), (1, 3)))
+    for w in range(3):
+        dead.window(w)
+    with pytest.raises(RuntimeError, match="crashed"):
+        dead.window(3)
+
+
+def test_plan_crash_entry_validation():
+    with pytest.raises(ValueError):
+        faults.FaultPlan(n_workers=2, crashes=((5, 0),))
+    with pytest.raises(ValueError):
+        faults.FaultPlan(n_workers=2, crashes=((0, -1),))
+
+
+def _episode_invariants(plan, d, max_staleness, discount, n=60):
+    """Scan the schedule and check every straggle episode's shape: at most
+    ``d`` consecutive (u=0, r=0) windows; an uninterrupted episode of
+    exactly ``d`` resolves next window to the discounted merge (d <=
+    max_staleness) or the drop+resync (u=0, r=1) otherwise."""
+    KK = plan.n_workers
+    wins = [plan.window(w) for w in range(n)]
+    allowed = {0.0, 1.0, np.float32(discount) ** d}
+    run = np.zeros(KK, int)
+    saw_arrival = False
+    for w, (u, r) in enumerate(wins):
+        for k in range(KK):
+            assert float(u[k]) in allowed, (w, k, u[k])
+            assert r[k] in (0.0, 1.0)
+            if r[k] == 0.0:
+                assert u[k] == 0.0, (w, k)  # keep-own-state only when absent
+                run[k] += 1
+                assert run[k] <= d, (w, k)  # bounded in-flight time
+            else:
+                if run[k] == d:             # uninterrupted episode resolved
+                    want = np.float32(discount) ** d \
+                        if d <= max_staleness else 0.0
+                    assert float(u[k]) == float(want), (w, k, u[k])
+                    saw_arrival = True
+                run[k] = 0
+    assert saw_arrival, "schedule never exercised a straggler arrival"
+
+
+def test_plan_straggler_merges_within_staleness_bound():
+    _episode_invariants(
+        faults.FaultPlan(n_workers=4, seed=1, straggle=0.5,
+                         straggle_windows=2, max_staleness=2),
+        d=2, max_staleness=2, discount=0.5)
+
+
+def test_plan_straggler_dropped_beyond_staleness_bound():
+    plan = faults.FaultPlan(n_workers=4, seed=1, straggle=0.5,
+                            straggle_windows=2, max_staleness=1)
+    _episode_invariants(plan, d=2, max_staleness=1, discount=0.5)
+    # no fractional weights anywhere: too-stale deltas never merge
+    assert all(set(np.unique(plan.window(w)[0])) <= {0.0, 1.0}
+               for w in range(60))
+
+
+def test_plan_participants_mask():
+    plan = faults.FaultPlan(n_workers=4, seed=1, straggle=0.5,
+                            straggle_windows=2, max_staleness=2)
+    for w in range(20):
+        u, _ = plan.window(w)
+        m = plan.participants(w)
+        assert np.array_equal(m, (u > 0).astype(np.float32))
+
+
+def test_plan_from_config_maps_knobs():
+    ccfg = coda.CoDAConfig(n_workers=5, participation=0.8,
+                           straggler_prob=0.1, straggler_windows=3,
+                           max_staleness=2, staleness_discount=0.25,
+                           fault_seed=9, crashes=((1, 4),))
+    plan = faults.FaultPlan.from_config(ccfg)
+    assert plan.n_workers == 5 and plan.seed == 9
+    assert plan.dropout == pytest.approx(0.2)
+    assert plan.straggle == 0.1 and plan.straggle_windows == 3
+    assert plan.max_staleness == 2 and plan.staleness_discount == 0.25
+    assert plan.crashes == ((1, 4),)
+
+
+# --------------------------------------------------------------------------
+# CoDAConfig fault knobs
+# --------------------------------------------------------------------------
+def test_config_fault_knob_validation():
+    for bad in (dict(participation=0.0), dict(participation=1.5),
+                dict(straggler_prob=1.0), dict(straggler_windows=0),
+                dict(max_staleness=-1), dict(staleness_discount=0.0)):
+        with pytest.raises(ValueError):
+            coda.CoDAConfig(n_workers=2, **bad)
+
+
+def test_config_faults_enabled_gate():
+    assert not coda.CoDAConfig(n_workers=2).faults_enabled
+    # staleness/discount knobs alone do NOT enable faults (p = 1.0 stays
+    # bit-for-bit the classical path)
+    assert not coda.CoDAConfig(n_workers=2, max_staleness=3).faults_enabled
+    assert coda.CoDAConfig(n_workers=2, participation=0.5).faults_enabled
+    assert coda.CoDAConfig(n_workers=2, straggler_prob=0.1).faults_enabled
+    assert coda.CoDAConfig(n_workers=2, crashes=((0, 1),)).faults_enabled
+
+
+def test_config_rejects_server_momentum_with_faults():
+    with pytest.raises(ValueError, match="server momentum"):
+        coda.CoDAConfig(n_workers=2, participation=0.5, server_momentum=0.9)
+    # either alone is fine
+    coda.CoDAConfig(n_workers=2, server_momentum=0.9)
+    coda.CoDAConfig(n_workers=2, participation=0.5)
+
+
+def test_executor_fault_arg_contract():
+    key = jax.random.PRNGKey(0)
+    wb = _wb(key)
+    fl = {"weights": jnp.ones((K,), jnp.float32),
+          "resync": jnp.ones((K,), jnp.float32)}
+    cfg_on = coda.CoDAConfig(n_workers=K, participation=0.5)
+    cfg_off = coda.CoDAConfig(n_workers=K)
+    on = coda.make_executor(MCFG, cfg_on, "vmap", donate=False)
+    off = coda.make_executor(MCFG, cfg_off, "vmap", donate=False)
+    st_on = on.place(coda.init_state(key, MCFG, cfg_on))
+    with pytest.raises(ValueError, match="fault"):
+        on.window_step(st_on, wb, 0.1)           # enabled but no vectors
+    st_off = off.place(coda.init_state(key, MCFG, cfg_off))
+    with pytest.raises(ValueError, match="disabled"):
+        off.window_step(st_off, wb, 0.1, faults=fl)  # vectors but disabled
+
+
+# --------------------------------------------------------------------------
+# masked window math on the vmap oracle
+# --------------------------------------------------------------------------
+def _masked_case(algorithm, u, r, key=0, participation=0.6):
+    ccfg = coda.CoDAConfig(n_workers=K, algorithm=algorithm,
+                           participation=participation)
+    kk = jax.random.PRNGKey(key)
+    st0 = coda.init_state(kk, MCFG, ccfg)
+    wb = _wb(jax.random.PRNGKey(key + 1))
+    fl = {"weights": jnp.asarray(u, jnp.float32),
+          "resync": jnp.asarray(r, jnp.float32)}
+    exe = coda.make_executor(MCFG, ccfg, "vmap", donate=False)
+    return ccfg, exe, st0, wb, fl
+
+
+def test_masked_merge_is_exact_weighted_participant_mean():
+    u = np.array([1.0, 0.0, 0.5, 0.0], np.float32)
+    r = np.ones(K, np.float32)
+    ccfg, exe, st0, wb, fl = _masked_case("coda", u, r)
+    merged, _ = exe.window_step(st0, wb, jnp.float32(0.3), faults=fl)
+    # the same local steps without the collective give the pre-merge rows
+    local, _ = coda.window_step(MCFG, ccfg, st0, wb, jnp.float32(0.3),
+                                communicate=False)
+    W = u.sum()
+    for name in ("params", "duals"):
+        for got, loc in zip(jax.tree_util.tree_leaves(merged[name]),
+                            jax.tree_util.tree_leaves(local[name])):
+            rows = loc.astype(jnp.float32).reshape(K, -1)
+            want = (rows * u[:, None]).sum(0) / W
+            # resync = 1 everywhere: every worker adopts the merged row
+            for k in range(K):
+                err = float(jnp.max(jnp.abs(
+                    got.astype(jnp.float32).reshape(K, -1)[k] - want)))
+                assert err < 1e-6, (name, k, err)
+
+
+def test_masked_straggler_keeps_own_iterate():
+    u = np.array([1.0, 1.0, 0.0, 1.0], np.float32)
+    r = np.array([1.0, 1.0, 0.0, 1.0], np.float32)   # worker 2 mid-straggle
+    ccfg, exe, st0, wb, fl = _masked_case("coda", u, r)
+    merged, _ = exe.window_step(st0, wb, jnp.float32(0.3), faults=fl)
+    local, _ = coda.window_step(MCFG, ccfg, st0, wb, jnp.float32(0.3),
+                                communicate=False)
+    for name in ("params", "duals"):
+        for got, loc in zip(jax.tree_util.tree_leaves(merged[name]),
+                            jax.tree_util.tree_leaves(local[name])):
+            assert jnp.array_equal(got[2], loc[2]), name   # kept its own
+            assert not jnp.array_equal(got[0], loc[0])     # merged
+
+
+def test_codasca_participant_mean_invariant_at_half_participation():
+    u = np.array([1.0, 0.0, 1.0, 0.0], np.float32)
+    r = np.ones(K, np.float32)
+    _, exe, st0, wb, fl = _masked_case("codasca", u, r, participation=0.5)
+    st2, _ = exe.window_step(st0, wb, jnp.float32(0.3), faults=fl)
+    for field in ("params", "duals"):
+        cg = jax.tree_util.tree_leaves(st2[f"cg_{field}"])
+        cv = jax.tree_util.tree_leaves(st2[f"cv_{field}"])
+        for g, v in zip(cg, cv):
+            # cg == EXACT mean of the participants' fresh variates
+            part_mean = (v[0].astype(jnp.float32)
+                         + v[2].astype(jnp.float32)) / 2.0
+            assert float(jnp.max(jnp.abs(
+                g[0].astype(jnp.float32) - part_mean))) == 0.0
+            # cg replicated across the worker axis
+            for k in range(1, K):
+                assert jnp.array_equal(g[k], g[0])
+            # absent workers keep their old (zero-initialized) variates
+            assert float(jnp.max(jnp.abs(v[1]))) == 0.0
+            assert float(jnp.max(jnp.abs(v[3]))) == 0.0
+
+
+def test_all_ones_fault_vectors_match_unmasked_path():
+    for algorithm in ("coda", "codasca"):
+        u = np.ones(K, np.float32)
+        r = np.ones(K, np.float32)
+        ccfg, exe, st0, wb, fl = _masked_case(algorithm, u, r)
+        masked, _ = exe.window_step(st0, wb, jnp.float32(0.3), faults=fl)
+        plain_cfg = coda.CoDAConfig(n_workers=K, algorithm=algorithm)
+        plain_exe = coda.make_executor(MCFG, plain_cfg, "vmap", donate=False)
+        plain, _ = plain_exe.window_step(st0, wb, jnp.float32(0.3))
+        for (p, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(masked)[0],
+                jax.tree_util.tree_flatten_with_path(plain)[0]):
+            err = float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                        - b.astype(jnp.float32))))
+            assert err < 1e-6, (algorithm, jax.tree_util.keystr(p), err)
+
+
+def test_full_participation_is_bitwise_the_existing_path():
+    """p = 1.0 with no other fault knobs compiles and runs the EXACT old
+    window program: ``faults_enabled`` is False, so nothing masked is even
+    traced — fit results are bitwise identical to the default config."""
+    from repro.core import schedules
+    base = coda.CoDAConfig(n_workers=K, p_pos=0.6)
+    p1 = coda.CoDAConfig(n_workers=K, p_pos=0.6, participation=1.0,
+                         max_staleness=2, staleness_discount=0.25)
+    assert not p1.faults_enabled
+    sched = schedules.ScheduleConfig(n_workers=K, eta0=0.4, T0=8, I0=2)
+    key = jax.random.PRNGKey(0)
+
+    def sample_window(k, i):
+        return _wb_of(k, i)
+
+    def _wb_of(k, i):
+        kf, kl = jax.random.split(k)
+        y = (jax.random.uniform(kl, (i, K, B)) < 0.6).astype(jnp.float32)
+        return {"features": jax.random.normal(kf, (i, K, B, 8)), "labels": y}
+
+    def sample_alpha(k, m):
+        kf, kl = jax.random.split(k)
+        y = (jax.random.uniform(kl, (K, m)) < 0.6).astype(jnp.float32)
+        return {"features": jax.random.normal(kf, (K, m, 8)), "labels": y}
+
+    r0 = coda.fit(key, MCFG, base, sched, 2, sample_window, sample_alpha)
+    r1 = coda.fit(key, MCFG, p1, sched, 2, sample_window, sample_alpha)
+    assert r0.comm_rounds == r1.comm_rounds
+    for a, b in zip(jax.tree_util.tree_leaves(r0.state),
+                    jax.tree_util.tree_leaves(r1.state)):
+        assert jnp.array_equal(a, b)
+
+
+# --------------------------------------------------------------------------
+# composite liveness: dirichlet shards × participation masks (hypothesis)
+# --------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       alpha=st.floats(min_value=0.05, max_value=5.0),
+       n_workers=st.integers(min_value=2, max_value=8),
+       dropout=st.floats(min_value=0.0, max_value=0.9),
+       straggle=st.floats(min_value=0.0, max_value=0.5))
+def test_partition_plus_masks_never_starve_a_window(seed, alpha, n_workers,
+                                                    dropout, straggle):
+    """Every window has >= 1 participant (the plan guard) and every
+    participant's dirichlet shard is non-empty (the partition top-up), so
+    the merged window always has data; whenever any participating shard
+    holds positives the merged window keeps the positive class."""
+    from repro.data.synthetic import dirichlet_partition
+    rng = np.random.RandomState(seed)
+    labels = (rng.uniform(size=256) < 0.3).astype(np.float32)
+    shards = dirichlet_partition(rng, labels, n_workers, alpha)
+    # exact tiling + no starved shard (the precondition for sampling)
+    assert sorted(np.concatenate(shards).tolist()) == list(range(256))
+    assert all(len(s) > 0 for s in shards)
+    plan = faults.FaultPlan(n_workers=n_workers, seed=seed, dropout=dropout,
+                            straggle=straggle, straggle_windows=1,
+                            max_staleness=1)
+    shard_has_pos = np.array([labels[s].sum() > 0 for s in shards])
+    for w in range(25):
+        m = plan.participants(w)
+        assert m.sum() >= 1.0, w
+        merged_pool = np.concatenate([shards[k] for k in range(n_workers)
+                                      if m[k] > 0])
+        assert merged_pool.size > 0, w
+        if shard_has_pos[m > 0].any():
+            assert labels[merged_pool].sum() > 0, w
+
+
+def test_no_positive_window_takes_guard_path_not_nan():
+    """A window whose batches contain NO positives anywhere must flow
+    through the masked merge to a finite state (the objective's eps-guarded
+    means), never NaN/Inf."""
+    u = np.array([1.0, 0.0, 1.0, 1.0], np.float32)
+    r = np.ones(K, np.float32)
+    for algorithm in ("coda", "codasca"):
+        ccfg, exe, st0, _, fl = _masked_case(algorithm, u, r)
+        wb = _wb(jax.random.PRNGKey(5),
+                 labels=jnp.zeros((I, K, B), jnp.float32))
+        st2, losses = exe.window_step(st0, wb, jnp.float32(0.3), faults=fl)
+        for leaf in jax.tree_util.tree_leaves(st2):
+            assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), \
+                algorithm
+        assert bool(jnp.all(jnp.isfinite(losses))), algorithm

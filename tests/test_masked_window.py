@@ -1,0 +1,222 @@
+"""Masked (partial-participation) window tests on a real 8-device mesh.
+
+The masked merge must be executor-independent: the vmap oracle (wa=()) and
+the shard_map executor run the SAME bucketed arithmetic
+(``bucketing.masked_average_state`` / ``masked_average_and_refresh``), so a
+faulted window is equivalence-testable exactly like the clean one — fp32,
+int8-compressed, sketch-carrying, and overlapped (fused pair) variants all
+covered below, plus the compiled-HLO contract: the masked window is STILL
+exactly one all-reduce per dtype bucket, operand bytes == the documented
+payload + the weight lane(s) (``coda.mask_payload_bytes``).
+
+Subprocesses because ``--xla_force_host_platform_device_count`` must be set
+before jax initialises (same idiom as tests/test_coda_sharded.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+_PRELUDE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs.base import mlp_config
+    from repro.core import coda, faults
+    from repro.launch import mesh as M
+
+    mcfg = mlp_config(n_features=16, d=32)
+
+    def wb_of(key, I, K, B=4):
+        kf, kl = jax.random.split(key)
+        y = (jax.random.uniform(kl, (I, K, B)) < 0.6).astype(jnp.float32)
+        x = jax.random.normal(kf, (I, K, B, 16)) + 0.3 * (y[..., None] * 2 - 1)
+        return {"features": x, "labels": y}
+
+    def fl_of(plan, w, n=1):
+        if n == 1:
+            u, r = plan.window(w)
+            return {"weights": jnp.asarray(u), "resync": jnp.asarray(r)}
+        us, rs = zip(*(plan.window(w + j) for j in range(n)))
+        return {"weights": jnp.stack([jnp.asarray(x) for x in us]),
+                "resync": jnp.stack([jnp.asarray(x) for x in rs])}
+
+    def max_err(a, b):
+        return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                         - y.astype(jnp.float32))))
+                   for x, y in zip(jax.tree_util.tree_leaves(a),
+                                   jax.tree_util.tree_leaves(b)))
+""")
+
+
+def _run(script: str, timeout=900):
+    r = subprocess.run(
+        [sys.executable, "-c", _PRELUDE + textwrap.dedent(script)],
+        capture_output=True, text=True, timeout=timeout,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "ALL OK" in r.stdout, r.stdout[-2000:]
+
+
+def test_masked_shard_map_matches_vmap_oracle():
+    """3 faulted windows (dropout + stragglers with bounded staleness)
+    through both executors: fp32 coda, fp32 codasca, int8 coda, and a
+    sketch-carrying state must agree to fp32 tolerance."""
+    _run("""
+    K, I = 8, 2
+    mesh = M.make_worker_mesh(K)
+    plan = faults.FaultPlan(n_workers=K, seed=3, dropout=0.4, straggle=0.25,
+                            straggle_windows=1, max_staleness=1)
+    cases = [
+        ("coda fp32", dict(algorithm="coda")),
+        ("codasca fp32", dict(algorithm="codasca")),
+        ("coda int8", dict(algorithm="coda", avg_compress="int8")),
+        ("coda sketch", dict(algorithm="coda", stream_bins=32)),
+        ("codasca sketch", dict(algorithm="codasca", stream_bins=32)),
+    ]
+    for label, kw in cases:
+        ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.6, participation=0.6,
+                               straggler_prob=0.25, max_staleness=1, **kw)
+        key = jax.random.PRNGKey(0)
+        st0 = coda.init_state(key, mcfg, ccfg)
+        ev = coda.make_executor(mcfg, ccfg, "vmap", donate=False)
+        es = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh,
+                                donate=False)
+        sv, ss = ev.place(st0), es.place(st0)
+        for w in range(3):
+            b = wb_of(jax.random.PRNGKey(10 + w), I, K)
+            fl = fl_of(plan, w)
+            sv, lv = ev.window_step(sv, b, jnp.float32(0.3), faults=fl)
+            ss, ls = es.window_step(ss, b, jnp.float32(0.3), faults=fl)
+        err = max_err(sv, ss)
+        assert err < 1e-5, (label, err)
+        print(label, "max err", err)
+    print("ALL OK")
+    """)
+
+
+def test_masked_sketch_deltas_of_absent_workers_stay_local():
+    """Under the masked merge only participants' sketch deltas fold into
+    the shared accumulator; an absent worker's ``sk_new`` survives intact
+    (to merge at its next participation) while participants' reset."""
+    _run("""
+    K, I = 8, 2
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.6, participation=0.5,
+                           stream_bins=32)
+    key = jax.random.PRNGKey(0)
+    st0 = coda.init_state(key, mcfg, ccfg)
+    ev = coda.make_executor(mcfg, ccfg, "vmap", donate=False)
+    b = wb_of(jax.random.PRNGKey(1), I, K)
+    u = np.array([1, 0, 1, 0, 1, 0, 1, 0], np.float32)
+    fl = {"weights": jnp.asarray(u), "resync": jnp.ones((K,), jnp.float32)}
+    # pre-merge sketch rows: local steps only
+    local, _ = coda.window_step(mcfg, ccfg, st0, b, jnp.float32(0.3),
+                                communicate=False)
+    merged, _ = ev.window_step(st0, b, jnp.float32(0.3), faults=fl)
+    for side in ("pos", "neg"):
+        nl, nm = local["sk_new"][side], merged["sk_new"][side]
+        acc = merged["sk_acc"][side]
+        for k in range(K):
+            if u[k] > 0:   # participant: delta merged, local buffer reset
+                assert float(jnp.max(jnp.abs(nm[k]))) == 0.0, (side, k)
+            else:          # absent: delta kept bit-for-bit for the next merge
+                assert jnp.array_equal(nm[k], nl[k]), (side, k)
+        # the shared accumulator got exactly the participants' delta sum,
+        # broadcast to every worker row (absent ones resync too: r == 1)
+        want = st0["sk_acc"][side][0] + sum(
+            nl[k] for k in range(K) if u[k] > 0)
+        for k in range(K):
+            assert float(jnp.max(jnp.abs(acc[k] - want))) < 1e-4, (side, k)
+    print("ALL OK")
+    """)
+
+
+def test_masked_overlap_pair_matches_blocking():
+    """The fused overlapped pair under per-window fault vectors ([2, K]
+    leaves) must match two blocking masked window steps to fp32 tolerance
+    for both algorithms."""
+    _run("""
+    K, I = 8, 2
+    mesh = M.make_worker_mesh(K)
+    plan = faults.FaultPlan(n_workers=K, seed=5, dropout=0.4, straggle=0.25,
+                            straggle_windows=1, max_staleness=1)
+    for algorithm in ("coda", "codasca"):
+        ccfg_b = coda.CoDAConfig(n_workers=K, p_pos=0.6, algorithm=algorithm,
+                                 participation=0.6, straggler_prob=0.25,
+                                 max_staleness=1)
+        ccfg_o = coda.CoDAConfig(n_workers=K, p_pos=0.6, algorithm=algorithm,
+                                 participation=0.6, straggler_prob=0.25,
+                                 max_staleness=1, overlap_chunks=2)
+        key = jax.random.PRNGKey(0)
+        st0 = coda.init_state(key, mcfg, ccfg_b)
+        eb = coda.make_executor(mcfg, ccfg_b, "shard_map", mesh=mesh,
+                                donate=False)
+        eo = coda.make_executor(mcfg, ccfg_o, "shard_map", mesh=mesh,
+                                donate=False)
+        wb2 = jax.tree_util.tree_map(
+            lambda l: l.reshape((2, I) + l.shape[1:]),
+            wb_of(jax.random.PRNGKey(2), 2 * I, K))
+        fl2 = fl_of(plan, 0, n=2)
+        so, _ = eo.window_pair_step(eo.place(st0), wb2, jnp.float32(0.3),
+                                    faults=fl2)
+        sb = eb.place(st0)
+        for j in range(2):
+            b = jax.tree_util.tree_map(lambda l: l[j], wb2)
+            fl = jax.tree_util.tree_map(lambda l: l[j], fl2)
+            sb, _ = eb.window_step(sb, b, jnp.float32(0.3), faults=fl)
+        err = max_err(so, sb)
+        assert err < 1e-5, (algorithm, err)
+        print(algorithm, "pair vs blocking max err", err)
+    print("ALL OK")
+    """)
+
+
+def test_masked_window_hlo_payload_contract():
+    """R1 under faults: the compiled masked window still lowers to exactly
+    ONE all-reduce per dtype bucket with operand bytes == documented
+    payload + the weight lane(s); int8 keeps the (s8 all-gather, f32
+    scales+lanes all-gather) pair at K x the masked payload."""
+    _run("""
+    from repro.analysis import hlo as H
+    K, I, B = 8, 2, 4
+    mesh = M.make_worker_mesh(K)
+    fl = {"weights": jnp.ones((K,), jnp.float32),
+          "resync": jnp.ones((K,), jnp.float32)}
+    for algorithm in ("coda", "codasca"):
+        ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.6, algorithm=algorithm,
+                               participation=0.8)
+        st0 = coda.init_state(jax.random.PRNGKey(0), mcfg, ccfg)
+        exe = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh,
+                                 donate=False)
+        b = wb_of(jax.random.PRNGKey(1), I, K, B)
+        txt = exe.window_fn(st0, b).lower(
+            st0, b, jnp.float32(0.1), fl).compile().as_text()
+        payload = coda.window_payload_bytes(st0, masked=True)
+        assert payload == coda.window_payload_bytes(st0) \\
+            + coda.mask_payload_bytes(st0)
+        H.verify_window_payload(
+            txt, payload,
+            by_dtype=coda.window_payload_by_dtype(st0, masked=True))
+        coll = H.collective_bytes(txt)
+        assert coll["all-reduce"]["count"] == 1, algorithm
+        print(algorithm, "masked payload", payload, "ok")
+
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.6, avg_compress="int8",
+                           participation=0.8)
+    st0 = coda.init_state(jax.random.PRNGKey(0), mcfg, ccfg)
+    exe = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh,
+                             donate=False)
+    b = wb_of(jax.random.PRNGKey(1), I, K, B)
+    txt = exe.window_fn(st0, b).lower(
+        st0, b, jnp.float32(0.1), fl).compile().as_text()
+    coll = H.collective_bytes(txt)
+    gathered = K * coda.window_payload_bytes(st0, "int8", masked=True)
+    assert coll["all-reduce"]["count"] == 0
+    assert coll["all-gather"]["count"] == 2, coll["all-gather"]
+    assert coll["all-gather"]["bytes"] == gathered, (
+        coll["all-gather"]["bytes"], gathered)
+    print("int8 masked gather pair", gathered, "ok")
+    print("ALL OK")
+    """)

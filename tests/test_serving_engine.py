@@ -361,3 +361,90 @@ def test_labeled_trace_is_seed_deterministic(cfg_params):
         != [(r.prompt, r.label) for _, r in c]
     with pytest.raises(ValueError, match="p_pos"):
         LG.TraceConfig(labeled=True, p_pos=1.5)
+
+
+# --------------------------------------------------------------------------
+# per-request failure isolation (the fault-tolerance hardening)
+# --------------------------------------------------------------------------
+class _ExplodingList(list):
+    """A generated-token buffer that blows up on first append — simulates a
+    per-request failure while consuming the scored device output."""
+
+    def append(self, tok):
+        raise RuntimeError("scorer exploded")
+
+
+def test_scoring_failure_finalizes_request_not_engine(cfg_params):
+    """Pre-fix: an exception while consuming one slot's output unwound
+    step() mid-loop — the failed request hung in its slot forever and every
+    other active slot lost that tick's token.  Now the failure finalizes
+    THAT request (status 'failed', reason recorded, latency accounting
+    intact, slot freed) and the rest of the trace keeps serving."""
+    eng = _engine(cfg_params, slots=2)
+    bad = Request(uid=0, prompt=[3, 4, 5], max_new_tokens=4)
+    bad.generated = _ExplodingList()
+    ok = Request(uid=1, prompt=[6, 7, 8, 9], max_new_tokens=3)
+    assert eng.add_request(bad) and eng.add_request(ok)
+    eng.run()
+    assert bad.status == "failed" and bad.done
+    assert "RuntimeError" in bad.failure_reason
+    assert "scorer exploded" in bad.failure_reason
+    assert bad.latency is not None          # t_complete stamped
+    assert eng.n_failed == 1
+    # the healthy request is untouched by its neighbour's failure
+    assert ok.status == "done" and len(ok.generated) == 3
+    # the failed slot is recycled, not leaked
+    late = Request(uid=2, prompt=[11, 12], max_new_tokens=2)
+    assert eng.add_request(late) is True
+    eng.run()
+    assert late.status == "done"
+    # and the loadgen summary surfaces the failure count
+    from repro.serving import loadgen as LG
+    rec = LG.summarize([bad, ok, late], wall=1.0)
+    assert rec["failed"] == 1 and rec["completed"] == 2
+
+
+def test_ticks_exhausted_carries_partial_records(cfg_params):
+    """TicksExhausted is a report, not just a signal: it carries the
+    partial per-request records (uid, status, tokens so far, prompt
+    progress, latency stamps) of everything still in flight."""
+    eng = _engine(cfg_params, slots=1, prefill_chunk=1, queue_limit=8)
+    eng.add_request(Request(uid=0, prompt=list(range(1, 20)),
+                            max_new_tokens=8))
+    eng.add_request(Request(uid=1, prompt=[2, 3], max_new_tokens=2))
+    with pytest.raises(TicksExhausted) as ei:
+        eng.run(max_ticks=3)
+    recs = ei.value.records
+    assert [r["uid"] for r in recs] == [0, 1]
+    by_uid = {r["uid"]: r for r in recs}
+    assert by_uid[0]["status"] == "active"
+    assert by_uid[0]["prompt_consumed"] == 3       # one token per tick
+    assert by_uid[0]["generated"] == []
+    assert by_uid[1]["status"] == "queued"
+    assert by_uid[1]["prompt_consumed"] == 0
+    assert by_uid[0]["t_admitted"] is not None
+    assert by_uid[1]["t_admitted"] is None
+    # default construction still works (records optional)
+    assert TicksExhausted("plain").records == []
+
+
+def test_metric_fold_failure_keeps_served_outcome(cfg_params):
+    """A broken streaming-metric fold must not un-serve the request: the
+    'done' outcome stands, the fault is recorded on the request, and the
+    metric simply stops accumulating."""
+    class _BrokenMetric:
+        name, backend = "auc", "broken"
+
+        def init(self):
+            return {}
+
+        def update(self, state, scores, labels):
+            raise ValueError("sketch overflow")
+
+    eng = _engine(cfg_params, slots=1, metric=_BrokenMetric())
+    req = Request(uid=0, prompt=[4, 5, 6], max_new_tokens=2, label=1.0)
+    eng.add_request(req)
+    eng.run()
+    assert req.status == "done" and len(req.generated) == 2
+    assert req.failure_reason.startswith("metric: ValueError")
+    assert eng.n_scored == 0 and eng.n_failed == 0
