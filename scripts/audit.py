@@ -92,6 +92,30 @@ def build_legs(n_devices: int, *, smoke: bool) -> list:
         training_leg("shard_map", algorithm, "", "overlap", masked=True)
     training_leg("shard_map", "coda", "int8", "blocking", masked=True)
 
+    # optimizer seam (core/optimizer.py): whatever local preconditioner
+    # runs, the window contract is UNCHANGED — the opt state must stay off
+    # the wire (capture_sharded_programs pins the payload byte-exactly and
+    # passes opt_bytes so a leak is named, not just sized)
+    def optimizer_leg(executor: str, optname: str):
+        name = f"opt/{optname}/{executor}"
+
+        def run():
+            ccfg = CoDAConfig(n_workers=K, optimizer=optname,
+                              opt_dtype="bfloat16", shampoo_block=16,
+                              precond_every=2)
+            kw = dict(I=I, B=8, window_lens=window_lens, tag=name)
+            if executor == "shard_map":
+                kw.update(mesh=M.make_worker_mesh(K), policy="replica")
+            programs = audit.capture_training_programs(
+                mcfg, ccfg, executor=executor, **kw)
+            return audit.run_rules(programs, check_dispatch=False)
+
+        legs.append((name, run))
+
+    for optname in ("sgd", "sm3", "shampoo_blocked"):
+        optimizer_leg("vmap", optname)
+        optimizer_leg("shard_map", optname)
+
     def serving_leg():
         def run():
             programs = audit.capture_serving_programs(

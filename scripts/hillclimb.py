@@ -14,6 +14,14 @@ pair run through ``serving.loadgen.serve_load_report``; the latency/
 throughput record lands in ``benchmarks/artifacts/serve/<name>.json``.
 
   PYTHONPATH=src python scripts/hillclimb.py --serve-exp <name>
+
+Optimizer-seam variants (``--opt-exp``) hillclimb the local-optimizer
+knobs (core/optimizer.py: η per optimizer, shampoo block size, stale
+preconditioner cadence, bf16 accumulators) on the convergence setting the
+``optimizer_window`` bench tier measures; records land in
+``benchmarks/artifacts/opt/<name>.json``.
+
+  PYTHONPATH=src python scripts/hillclimb.py --opt-exp <name>
 """
 import argparse
 import json
@@ -86,6 +94,65 @@ def serve_experiments():
     }
 
 
+def opt_experiments():
+    """name -> _run(...) override kwargs for the optimizer-seam knobs
+    (core/optimizer.py), hillclimbed on the α=0.1 Dirichlet convergence
+    setting ``benchmarks/run.py --only optimizer_window`` measures.  Each
+    run records final AUC / comm rounds / per-worker optimizer-state bytes
+    so an η, block-size, or refresh-cadence claim in EXPERIMENTS.md has an
+    artifact behind it."""
+    base = dict(K=8, I=8, dirichlet_alpha=0.1, stages=2, T0=24, batch=16,
+                n_data=2048)
+    return {
+        "opt_sgd_base": dict(base, optimizer="sgd", eta0=0.5),
+        "opt_sm3": dict(base, optimizer="sm3", eta0=0.3),
+        "opt_sm3_bf16": dict(base, optimizer="sm3", eta0=0.3,
+                             opt_dtype="bfloat16"),
+        "opt_sm3_eta_hi": dict(base, optimizer="sm3", eta0=0.6),
+        "opt_shampoo": dict(base, optimizer="shampoo_blocked", eta0=0.5,
+                            shampoo_block=16, precond_every=2),
+        "opt_shampoo_bf16": dict(base, optimizer="shampoo_blocked", eta0=0.5,
+                                 shampoo_block=16, precond_every=2,
+                                 opt_dtype="bfloat16"),
+        "opt_shampoo_b8": dict(base, optimizer="shampoo_blocked", eta0=0.5,
+                               shampoo_block=8, precond_every=2),
+        "opt_shampoo_b32": dict(base, optimizer="shampoo_blocked", eta0=0.5,
+                                shampoo_block=32, precond_every=2),
+        "opt_shampoo_stale4": dict(base, optimizer="shampoo_blocked",
+                                   eta0=0.5, shampoo_block=16,
+                                   precond_every=4),
+        "opt_momentum": dict(base, optimizer="momentum", eta0=0.3,
+                             opt_beta=0.9),
+    }
+
+
+def run_opt(name: str) -> None:
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "bench_run", os.path.join(HERE, "benchmarks", "run.py"))
+    bench = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(bench)
+    kw = dict(opt_experiments()[name])
+    K, I = kw.pop("K"), kw.pop("I")
+    if kw.get("opt_dtype") == "bfloat16":
+        kw["opt_dtype"] = jnp.bfloat16
+    r = bench._run(K, I, **kw)
+    rec = {"name": name, "K": K, "I": I,
+           **{k: (v if not hasattr(v, "dtype") else str(v)) for k, v in
+              opt_experiments()[name].items() if k not in ("K", "I")},
+           "auc": r["auc"], "rounds": r["rounds"],
+           "opt_state_bytes": r["opt_state_bytes"],
+           "payload_bytes": r["payload_bytes"],
+           "us_per_iter": r["us_per_iter"]}
+    out_dir = os.path.join(HERE, "benchmarks", "artifacts", "opt")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+    print(f"{name}: auc={r['auc']:.4f} rounds={r['rounds']} "
+          f"opt_state={r['opt_state_bytes']:,}B -> {path}")
+
+
 def run_serve(name: str) -> None:
     from repro.serving.loadgen import serve_load_report
     engine_kw, trace_kw = serve_experiments()[name]
@@ -105,11 +172,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--exp", choices=list(experiments()))
     ap.add_argument("--serve-exp", choices=list(serve_experiments()))
+    ap.add_argument("--opt-exp", choices=list(opt_experiments()))
     args = ap.parse_args()
-    if bool(args.exp) == bool(args.serve_exp):
-        ap.error("pass exactly one of --exp / --serve-exp")
+    if sum(map(bool, (args.exp, args.serve_exp, args.opt_exp))) != 1:
+        ap.error("pass exactly one of --exp / --serve-exp / --opt-exp")
     if args.serve_exp:
         run_serve(args.serve_exp)
+        return
+    if args.opt_exp:
+        run_opt(args.opt_exp)
         return
     from repro.launch.dryrun import run_pair
     arch, shape, mp, ov = experiments()[args.exp]

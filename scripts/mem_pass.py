@@ -9,6 +9,12 @@ the pass's token count implies under the padded capacity dispatch (before:
 [E, C=T, d]) vs the sorted dropless dispatch (after: [T·k, d]) — see
 models/moe.py and ``benchmarks/run.py --only moe_dispatch``.
 
+Every TRAIN artifact additionally gets an ``optimizer_state_bytes``
+record: per-worker accumulator bytes for each stateful registry optimizer
+(core/optimizer.py) in fp32 vs bf16 storage, computed analytically via
+``jax.eval_shape`` — the local-memory side of the optimizer seam (the
+wire side is pinned by the audit's window-payload rule).
+
   PYTHONPATH=src python scripts/mem_pass.py [--arch X --shape Y]
 """
 import argparse
@@ -68,6 +74,39 @@ def moe_dispatch_record(arch: str, shape_name: str):
             "ratio": cap / srt}
 
 
+def optimizer_state_record(arch: str, shape_name: str):
+    """Analytic per-worker optimizer-state bytes for one (arch, shape):
+    every stateful registry optimizer × {fp32, bf16} accumulator storage,
+    from ``jax.eval_shape``-traced state (no buffers materialized).  The
+    state is strictly LOCAL — it never joins the window payload — so these
+    bytes are pure per-worker HBM, and the fp32/bf16 ratio is the memory
+    the stochastic-rounded buffers buy back.  None for non-train shapes
+    (eval/decode lowering has no optimizer)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import SHAPES, get_config
+    from repro.core import coda
+    spec = SHAPES[shape_name]
+    if spec.kind != "train":
+        return None
+    mcfg = get_config(arch)
+    out = {}
+    for optname in ("momentum", "sm3", "shampoo_blocked"):
+        per_dt = {}
+        for dtn, dt in (("fp32", jnp.float32), ("bf16", jnp.bfloat16)):
+            ccfg = coda.CoDAConfig(n_workers=8, optimizer=optname,
+                                   opt_dtype=dt)
+            sts = jax.eval_shape(
+                lambda k, c=ccfg: coda.init_state(k, mcfg, c),
+                jax.random.PRNGKey(0))
+            per_dt[dtn] = coda.opt_state_bytes(sts)
+        per_dt["bf16_reduction"] = round(
+            per_dt["fp32"] / max(1, per_dt["bf16"]), 2)
+        out[optname] = per_dt
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -92,6 +131,18 @@ def main():
                 json.dump(rec, open(os.path.join(ART, f), "w"), indent=1)
                 print(f"{f}: moe dispatch buffer {md['ratio']:.0f}x "
                       f"(capacity/sorted)", flush=True)
+        if "optimizer_state_bytes" not in rec:
+            try:
+                od = optimizer_state_record(arch, shape)
+            except Exception as e:          # never block the memory pass
+                print(f"{f}: optimizer record failed: {e}", flush=True)
+                od = None
+            if od is not None:
+                rec["optimizer_state_bytes"] = od
+                json.dump(rec, open(os.path.join(ART, f), "w"), indent=1)
+                print(f"{f}: optimizer state/worker " + " ".join(
+                    f"{o}={d['bf16']:,}B(bf16,{d['bf16_reduction']}x)"
+                    for o, d in od.items()), flush=True)
         if "memory_rolled" in rec:
             continue
         # decode lowerings have no scans — rolled == unrolled already

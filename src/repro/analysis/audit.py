@@ -169,13 +169,20 @@ def window_payload_problems(hlo_text: str, expected_bytes: int, *,
                             count: int | None = None,
                             by_dtype: dict | None = None,
                             baseline_bytes: int | None = None,
-                            delta_bytes: int | None = None):
+                            delta_bytes: int | None = None,
+                            opt_bytes: int | None = None):
     """The window-payload check as a pure function: returns
     ``(collective op records, problems)`` instead of raising, so it can be
     an R1 rule instance AND back the assert-style entry points.  Parameter
     semantics are documented on ``analysis/hlo.verify_window_payload``
     (which delegates here).  Misuse of the parameters themselves still
-    raises ValueError."""
+    raises ValueError.
+
+    ``opt_bytes``: per-worker size of the local optimizer state
+    (``coda.opt_state_bytes``).  Preconditioning is strictly local — the
+    window collective must NEVER carry it — so when the shipped bytes
+    exceed the expectation by exactly this amount the mismatch message
+    names the cause instead of leaving a raw byte delta to decode."""
     if (baseline_bytes is None) != (delta_bytes is None):
         raise ValueError("baseline_bytes and delta_bytes go together")
     problems = []
@@ -227,16 +234,25 @@ def window_payload_problems(hlo_text: str, expected_bytes: int, *,
                 continue
             unmatched.remove(hit)
         if unmatched:
-            problems.append(
-                f"stray {op} beyond the accounted dtype buckets: "
-                f"{[(o['op'], o['by_dtype']) for o in unmatched]}")
+            msg = (f"stray {op} beyond the accounted dtype buckets: "
+                   f"{[(o['op'], o['by_dtype']) for o in unmatched]}")
+            stray_b = sum(o["bytes"] for o in unmatched)
+            if opt_bytes and stray_b == opt_bytes:
+                msg += (f" — the stray bytes equal the per-worker optimizer "
+                        f"state ({opt_bytes} B): optimizer state leaked "
+                        f"onto the wire")
+            problems.append(msg)
     else:
         total = sum(o["bytes"] for o in ops)
         if total != expected_bytes:
-            problems.append(
-                f"window payload mismatch: HLO ships {total} bytes, "
-                f"accounting says {expected_bytes} "
-                f"({[(o['op'], o['bytes']) for o in ops]})")
+            msg = (f"window payload mismatch: HLO ships {total} bytes, "
+                   f"accounting says {expected_bytes} "
+                   f"({[(o['op'], o['bytes']) for o in ops]})")
+            if opt_bytes and total == expected_bytes + opt_bytes:
+                msg += (f" — the excess equals the per-worker optimizer "
+                        f"state ({opt_bytes} B): optimizer state leaked "
+                        f"onto the wire")
+            problems.append(msg)
     return ops, problems
 
 
@@ -356,7 +372,8 @@ def rule_collective_placement(prog: CompiledProgram):
                             f"{[(o['op'], o['bytes']) for o in ops]}")]
         return []
     if kind == "window":
-        keys = ("op", "count", "by_dtype", "baseline_bytes", "delta_bytes")
+        keys = ("op", "count", "by_dtype", "baseline_bytes", "delta_bytes",
+                "opt_bytes")
         _, problems = window_payload_problems(
             prog.hlo_text, spec["expected_bytes"],
             **{k: spec[k] for k in keys if k in spec})
@@ -777,6 +794,9 @@ def capture_sharded_programs(mcfg, ccfg, mesh, *, policy: str = "replica",
         by_dtype = _payload_by_dtype_or_none(st0, masked=masked)
         if by_dtype:
             window_expect["by_dtype"] = by_dtype
+        ob = coda.opt_state_bytes(st0)
+        if ob:                           # diagnose an exact-size excess as
+            window_expect["opt_bytes"] = ob   # an optimizer-state wire leak
 
     stage_bytes = coda.stage_payload_bytes(ccfg)
     if wired and stage_bytes:
@@ -929,10 +949,11 @@ def capture_kernel_launches(*, impl: str = "auto", shapes=None):
     from repro.kernels import auc_loss as AK
     from repro.kernels import flash_attention as FK
     from repro.kernels import moe_dispatch as MK
+    from repro.kernels import opt_update as OK
     from repro.kernels import prox_update as PK
 
     s = {"moe": (64, 32, 4, 64), "auc": (300,), "prox": (1000,),
-         "flash": (1, 256, 4, 2, 256, 64)}
+         "opt": (1000,), "flash": (1, 256, 4, 2, 256, 64)}
     s.update(shapes or {})
     _, interpret = kops.dispatch(impl)
     launches = []
@@ -957,6 +978,13 @@ def capture_kernel_launches(*, impl: str = "auto", shapes=None):
     launches.append(PallasLaunch(
         kernel="prox_update", grid=g["grid"],
         blocks={"n": (g["Np"], g["bt"])}, interpret=interpret, impl=impl))
+
+    (N,) = s["opt"]
+    g = OK.launch_geometry(N)
+    for mode in ("momentum", "precond"):
+        launches.append(PallasLaunch(
+            kernel=f"opt_update[{mode}]", grid=g["grid"],
+            blocks={"n": (g["Np"], g["bt"])}, interpret=interpret, impl=impl))
 
     B, S, nH, KV, Skv, hd = s["flash"]
     g = FK.launch_geometry(B, S, nH, KV, Skv, hd)

@@ -122,7 +122,8 @@ def verify_window_payload(hlo_text: str, expected_bytes: int, *,
                           count: int = None,
                           by_dtype: dict[str, int] = None,
                           baseline_bytes: int = None,
-                          delta_bytes: int = None) -> list[dict]:
+                          delta_bytes: int = None,
+                          opt_bytes: int = None) -> list[dict]:
     """Assert a compiled CoDA/CODASCA window's wire traffic: all collectives
     are of kind ``op``, totalling ``expected_bytes`` result-shape bytes —
     and *no other* collective of any kind.
@@ -157,6 +158,12 @@ def verify_window_payload(hlo_text: str, expected_bytes: int, *,
     a byte more, while the op-shape checks above still hold (the sketch
     rides the existing fp32 bucket, it does not add a collective).
 
+    ``opt_bytes`` (``coda.opt_state_bytes``): per-worker local-optimizer
+    state size.  It never changes what passes — preconditioning is strictly
+    local and the state must stay off the wire — but when the shipped bytes
+    exceed the expectation by exactly this amount, the failure message says
+    "optimizer state leaked onto the wire" instead of a raw byte delta.
+
     Returns the op records on success so callers can additionally inspect
     dtypes / replica groups.
 
@@ -168,7 +175,8 @@ def verify_window_payload(hlo_text: str, expected_bytes: int, *,
     from repro.analysis import audit
     return audit.assert_window_payload(
         hlo_text, expected_bytes, op=op, count=count, by_dtype=by_dtype,
-        baseline_bytes=baseline_bytes, delta_bytes=delta_bytes)
+        baseline_bytes=baseline_bytes, delta_bytes=delta_bytes,
+        opt_bytes=opt_bytes)
 
 
 _DOT_RE = re.compile(r"\b(dot|convolution)\(")

@@ -13,7 +13,15 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import ml_dtypes
 import numpy as np
+
+# npz cannot serialize the ml_dtypes extension types (they round-trip as
+# void dtypes that nothing can cast back) — store their raw bits in a
+# same-width integer view instead and bitcast on restore.  The manifest
+# keeps the REAL dtype name, so restore knows to undo the view; bf16
+# optimizer/param buffers round-trip bitwise.
+_BITS_VIEW = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
 
 
 def _flatten(tree):
@@ -27,7 +35,12 @@ def save(directory: str, step: int, tree: Any, metadata: dict | None = None) -> 
     path = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(path, exist_ok=True)
     keys, leaves, _ = _flatten(tree)
-    arrays = {f"a{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    arrays = {}
+    for i, l in enumerate(leaves):
+        a = np.asarray(l)
+        if a.dtype.name in _BITS_VIEW:
+            a = a.view(_BITS_VIEW[a.dtype.name][1])
+        arrays[f"a{i}"] = a
     np.savez(os.path.join(path, "arrays.npz"), **arrays)
     manifest = {
         "step": step,
@@ -69,6 +82,9 @@ def restore(directory: str, step: int, template: Any) -> Any:
     new_leaves = []
     for i, (tmpl, shape) in enumerate(zip(leaves, manifest["shapes"])):
         arr = data[f"a{i}"]
+        want = manifest["dtypes"][i]
+        if want in _BITS_VIEW and arr.dtype == _BITS_VIEW[want][1]:
+            arr = arr.view(_BITS_VIEW[want][0])
         if list(np.shape(tmpl)) != shape:
             raise ValueError(f"shape mismatch at {keys[i]}: "
                              f"{np.shape(tmpl)} vs checkpointed {shape}")

@@ -309,6 +309,11 @@ def _apply_sketch_sums(new, smeta, sums):
         tdef, [s.reshape(l.shape[1:]) for s, l in zip(sums, flat)])
     new["sk_acc"] = jax.tree_util.tree_map(
         lambda a, d: a + jnp.broadcast_to(d, a.shape), new["sk_acc"], delta)
+    if "sk_loc" in new:
+        # per-shard readout (coda.merge_sketch's wire twin): each worker
+        # folds its OWN delta into its local history — no collective
+        new["sk_loc"] = jax.tree_util.tree_map(
+            lambda c, d: c + d, new["sk_loc"], new["sk_new"])
     new["sk_new"] = jax.tree_util.tree_map(jnp.zeros_like, new["sk_new"])
     return new
 
@@ -447,6 +452,13 @@ def _apply_masked_sketch_sums(new, smeta, sums, m):
         tdef, [s.reshape(l.shape[1:]) for s, l in zip(sums, flat)])
     new["sk_acc"] = jax.tree_util.tree_map(
         lambda a, d: a + jnp.broadcast_to(d, a.shape), new["sk_acc"], delta)
+    if "sk_loc" in new:
+        # fold exactly what merged globally: participants' deltas only
+        # (binary mask — exact), so Σ_k sk_loc[k] tracks sk_acc's history
+        new["sk_loc"] = jax.tree_util.tree_map(
+            lambda c, l: c + l * m.reshape((l.shape[0],)
+                                           + (1,) * (l.ndim - 1)),
+            new["sk_loc"], new["sk_new"])
     keep = 1.0 - m
     new["sk_new"] = jax.tree_util.tree_map(
         lambda l: l * keep.reshape((l.shape[0],) + (1,) * (l.ndim - 1)),

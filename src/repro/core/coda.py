@@ -75,7 +75,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import objective, schedules
+from repro.core import objective, optimizer, schedules
 from repro.kernels import ops as kops
 from repro.models import model as M
 
@@ -128,6 +128,22 @@ class CoDAConfig:
     fault_seed: int = 0           # replay seed for the fault schedule
     crashes: tuple = ()           # ((worker, window), ...) permanent deaths
     param_dtype: Any = jnp.float32
+    # -- local primal optimizer (core/optimizer.py registry) ---------------
+    # "sgd" is bit-for-bit the plain prox path (no state, nothing extra
+    # traced).  Everything else keeps strictly LOCAL per-worker state under
+    # state["opt"]: never averaged, never on the wire — the window payload
+    # and every HLO byte assert are unchanged for every optimizer.
+    optimizer: str = "sgd"        # sgd | momentum | sm3 | shampoo_blocked
+    opt_dtype: Any = jnp.float32  # momentum/accumulator storage dtype;
+                                  # jnp.bfloat16 halves optimizer state
+                                  # (stochastically rounded stores, fp32
+                                  # master math in-kernel)
+    opt_beta: float = 0.9         # momentum coefficient (optimizer=
+                                  # "momentum"; 0 = bit-for-bit sgd)
+    opt_eps: float = 1e-6         # preconditioner damping (sm3 / shampoo)
+    shampoo_block: int = 32       # block width of the blocked-Shampoo stats
+    precond_every: int = 1        # recompute the Shampoo inverse root every
+                                  # this many local steps (stale between)
 
     @property
     def faults_enabled(self) -> bool:
@@ -193,6 +209,24 @@ class CoDAConfig:
                 "every worker holds the synced iterate after each window; "
                 "it cannot be combined with partial participation / fault "
                 "injection (participation < 1, stragglers, or crashes)")
+        if self.optimizer not in optimizer.names():
+            raise ValueError(f"unknown optimizer {self.optimizer!r} "
+                             f"(registered: {optimizer.names()})")
+        if jnp.dtype(self.opt_dtype) not in (jnp.dtype(jnp.float32),
+                                             jnp.dtype(jnp.bfloat16)):
+            raise ValueError("opt_dtype must be float32 or bfloat16, got "
+                             f"{self.opt_dtype}")
+        if not 0.0 <= self.opt_beta < 1.0:
+            raise ValueError(f"opt_beta must be in [0, 1), got "
+                             f"{self.opt_beta}")
+        if self.opt_eps <= 0.0:
+            raise ValueError(f"opt_eps must be > 0, got {self.opt_eps}")
+        if self.shampoo_block < 1:
+            raise ValueError(f"shampoo_block must be >= 1, got "
+                             f"{self.shampoo_block}")
+        if self.precond_every < 1:
+            raise ValueError(f"precond_every must be >= 1, got "
+                             f"{self.precond_every}")
 
 
 # The training state is a plain dict pytree (stacked worker axis throughout).
@@ -220,10 +254,18 @@ def init_state(key, mcfg: ModelConfig, ccfg: CoDAConfig) -> CoDAState:
     if ccfg.stream_bins:
         # streaming-eval sketch (repro.metrics.streaming): sk_acc is the
         # replicated global accumulator, sk_new the per-worker delta since
-        # the last window average (folded into sk_acc by the collective)
+        # the last window average (folded into sk_acc by the collective);
+        # sk_loc accumulates each worker's OWN merged deltas locally — the
+        # [K, 2, bins] per-shard readout (metrics/report.worker_skew) that
+        # costs zero extra wire bytes (sk_new already rides the collective
+        # pre-merge; sk_loc never ships)
         z = lambda: jnp.zeros((K, ccfg.stream_bins), jnp.float32)
         state["sk_acc"] = {"pos": z(), "neg": z()}
         state["sk_new"] = {"pos": z(), "neg": z()}
+        state["sk_loc"] = {"pos": z(), "neg": z()}
+    opt = optimizer.for_config(ccfg).init(ccfg, state["params"])
+    if opt is not None:
+        state["opt"] = opt
     if ccfg.algorithm == "codasca":
         from repro.core import codasca
         state = codasca.extend_state(state)
@@ -266,14 +308,25 @@ def grad_step(mcfg: ModelConfig, ccfg: CoDAConfig, state: CoDAState, batch):
 
 
 def apply_grads(ccfg: CoDAConfig, state: CoDAState, grads, eta) -> CoDAState:
-    """Proximal primal descent + the objective's dual step."""
+    """Preconditioned proximal primal descent + the objective's dual step.
+
+    The primal update routes through the optimizer seam
+    (``core/optimizer.py``): ``optimizer="sgd"`` has no state (no ``"opt"``
+    entry is ever created) and traces exactly the pre-seam
+    ``prox_update_tree`` call; stateful optimizers thread their strictly
+    local pytree through ``state["opt"]``.  CODASCA enters here with its
+    variate-corrected gradients, so the correction composes with any
+    optimizer.  The duals keep the objective-owned step — the seam
+    preconditions the primal only."""
     gp, gd = grads
     obj = objective.for_config(ccfg)
-    new_params = kops.prox_update_tree(state["params"], gp,
-                                       state["ref_params"], eta, ccfg.gamma,
-                                       impl=ccfg.impl)
+    opt = optimizer.for_config(ccfg)
+    new_params, new_opt = opt.step(ccfg, state.get("opt"), state["params"],
+                                   gp, state["ref_params"], eta)
     new_state = dict(state)
     new_state["params"] = new_params
+    if new_opt is not None:
+        new_state["opt"] = new_opt
     new_state["duals"] = obj.dual_step(state["duals"], gd,
                                        state["ref_duals"], eta, ccfg.gamma)
     return new_state
@@ -389,6 +442,11 @@ def merge_sketch(state: CoDAState) -> CoDAState:
     new = dict(state)
     new["sk_acc"] = jax.tree_util.tree_map(
         lambda a, s: a + jnp.broadcast_to(s, a.shape), state["sk_acc"], ssum)
+    if "sk_loc" in state:
+        # per-shard readout: fold each worker's OWN delta into its local
+        # history exactly when the delta merges globally (never shipped)
+        new["sk_loc"] = jax.tree_util.tree_map(
+            lambda c, d: c + d, state["sk_loc"], state["sk_new"])
     new["sk_new"] = jax.tree_util.tree_map(jnp.zeros_like, state["sk_new"])
     return new
 
@@ -501,6 +559,16 @@ def model_bytes(state: CoDAState, compress: str | None = None) -> int:
         scales = len(leaves) * 4                                # fp32 scales
         return per_worker + scales
     return sum(l.size // l.shape[0] * l.dtype.itemsize for l in leaves)
+
+
+def opt_state_bytes(state: CoDAState) -> int:
+    """Per-worker optimizer-state bytes (``state["opt"]``; 0 for sgd).
+
+    Strictly LOCAL bytes: the wire layout (``bucketing._state_mats``) and
+    the payload accounting above flatten only {"params", "duals"}, so by
+    construction none of these bytes appear in any window payload — the
+    audit's byte-exact collective asserts would fail if they did."""
+    return optimizer.state_bytes(state.get("opt"))
 
 
 # jnp dtype name → the short dtype tag optimized-HLO shapes use

@@ -1,0 +1,324 @@
+"""Optimizer seam for the local primal update (the CoDA window's inner loop).
+
+CoDA's primal step is the proximal update
+
+    v ← (γ(v − η d) + η v₀) / (η + γ)
+
+where the pre-seam code hard-wired the descent direction ``d = ∇̂_v F``
+(plain SGD).  This module makes ``d`` pluggable the same way PR 5 made the
+dual tree pluggable: a registry of local optimizers whose state is a
+generic pytree threaded through ``CoDAState`` under ``state["opt"]``.
+
+Registered optimizers:
+
+  * ``sgd``             — bit-for-bit the pre-seam path.  ``init`` returns
+                          ``None`` and ``core/coda.init_state`` does not add
+                          an ``"opt"`` entry at all, so the traced program,
+                          the state treedef, the checkpoint manifest, and
+                          every HLO payload assert are byte-identical to
+                          before the seam existed.
+  * ``momentum``        — heavy-ball: m ← β m + g, d = m.  The buffer
+                          matches the params tree; with
+                          ``opt_dtype=bfloat16`` it is stored stochastically
+                          rounded (fp32 master math in the fused kernel),
+                          halving optimizer state bytes.
+  * ``sm3``             — Anil et al.'s memory-lean adaptive method: one
+                          accumulator VECTOR per trailing axis of each leaf
+                          (O(Σ dᵢ) state instead of O(Π dᵢ)).  The covering
+                          update ν = minⱼ accⱼ + g², d = g·rsqrt(ν + ε)
+                          runs through the fused kernel; the per-axis maxes
+                          that become the new accumulators reduce outside.
+  * ``shampoo_blocked`` — block-diagonal full-matrix preconditioning: the
+                          flattened leaf is split into ``shampoo_block``-wide
+                          chunks, each with stats G ← G + g gᵀ and a
+                          preconditioner G^{-1/2} recomputed every
+                          ``precond_every`` local steps via a coupled
+                          Newton–Schulz iteration (pure matmuls — no LAPACK
+                          custom call, so it traces inside shard_map).  The
+                          step is grafted to the diagonal-AdaGrad norm (the
+                          stats diagonal is the AdaGrad accumulator), so the
+                          rotation comes from the full block statistics and
+                          the step-size adaptation from the diagonal.
+
+Key invariants (enforced by tests/test_optimizer.py and the audit):
+
+  * Preconditioning is strictly LOCAL.  Optimizer state lives under
+    ``state["opt"]``, which ``core/bucketing._state_mats`` (the wire
+    layout) and ``core/coda._payload_leaves`` (the byte accounting) never
+    touch — nothing optimizer-shaped can cross the wire by construction,
+    and the audit's byte-exact window-payload rule fails if it does.
+  * It is never averaged.  Every averaging helper copies the state dict and
+    rewrites only params/duals/sketch/variate entries; ``"opt"`` passes
+    through untouched on every worker.
+  * Absent workers (faults / partial participation) keep their optimizer
+    state, and a re-syncing worker adopts the merged iterate but keeps its
+    own accumulators (see docs/optimizers.md for why).
+  * The duals keep their objective-owned step (``Objective.dual_step``) —
+    the seam preconditions the primal only.
+
+State layout (uniform across the non-sgd optimizers)::
+
+    state["opt"] = {"t": [K] int32 local-step counter,
+                    "leaves": [per-param-leaf state, ...]}
+
+with ``leaves`` in ``jax.tree_util.tree_leaves(params)`` order.  Every
+entry carries the leading worker axis K, so the sharded executor's generic
+``P(worker, None, ...)`` specs and the checkpoint round-trip handle it with
+no per-optimizer code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+_GOLD = 0x9E3779B9   # 2^32/φ — the classic Weyl increment
+_SALT = 0x85EBCA6B
+
+
+def _leaf_seed(t, idx: int):
+    """Per-(step, leaf) uint32 seed for the stochastic-rounding hash."""
+    salt = np.uint32(((idx + 1) * _SALT) & 0xFFFFFFFF)
+    return t[0].astype(jnp.uint32) * jnp.uint32(_GOLD) ^ salt
+
+
+def _flat(params, gp, ref_params, opt):
+    leaves, tdef = jax.tree_util.tree_flatten(params)
+    return (leaves, jax.tree_util.tree_leaves(gp),
+            jax.tree_util.tree_leaves(ref_params), opt["leaves"], tdef)
+
+
+class _Sgd:
+    """The pre-seam path: stateless proximal SGD (d = g)."""
+
+    name = "sgd"
+
+    def init(self, ccfg, params):
+        return None
+
+    def step(self, ccfg, opt, params, gp, ref_params, eta):
+        new_params = kops.prox_update_tree(params, gp, ref_params, eta,
+                                           ccfg.gamma, impl=ccfg.impl)
+        return new_params, None
+
+
+class _Momentum:
+    """Heavy-ball momentum through the fused opt_update kernel."""
+
+    name = "momentum"
+
+    def init(self, ccfg, params):
+        leaves = jax.tree_util.tree_leaves(params)
+        K = leaves[0].shape[0]
+        dt = jnp.dtype(ccfg.opt_dtype)
+        return {"t": jnp.zeros((K,), jnp.int32),
+                "leaves": [jnp.zeros(l.shape, dt) for l in leaves]}
+
+    def step(self, ccfg, opt, params, gp, ref_params, eta):
+        vs, gs, rs, bufs, tdef = _flat(params, gp, ref_params, opt)
+        t = opt["t"]
+        new_v, new_m = [], []
+        for i, (v, g, v0, m) in enumerate(zip(vs, gs, rs, bufs)):
+            nv, nm = kops.opt_update(v, g, v0, m, eta, ccfg.gamma,
+                                     ccfg.opt_beta, _leaf_seed(t, i),
+                                     mode="momentum", impl=ccfg.impl)
+            new_v.append(nv)
+            new_m.append(nm)
+        return (jax.tree_util.tree_unflatten(tdef, new_v),
+                {"t": t + 1, "leaves": new_m})
+
+
+class _SM3:
+    """SM3-II: per-trailing-axis accumulator vectors, min-of-covers inner
+    update fused with the prox projection (kernel mode="precond")."""
+
+    name = "sm3"
+
+    def init(self, ccfg, params):
+        leaves = jax.tree_util.tree_leaves(params)
+        K = leaves[0].shape[0]
+        dt = jnp.dtype(ccfg.opt_dtype)
+
+        def accs(l):
+            if l.ndim == 1:      # [K] trailing-scalar leaf: one cell
+                return [jnp.zeros((K,), dt)]
+            return [jnp.zeros((K, d), dt) for d in l.shape[1:]]
+
+        return {"t": jnp.zeros((K,), jnp.int32),
+                "leaves": [accs(l) for l in leaves]}
+
+    def step(self, ccfg, opt, params, gp, ref_params, eta):
+        vs, gs, rs, states, tdef = _flat(params, gp, ref_params, opt)
+        t = opt["t"]
+        dt = jnp.dtype(ccfg.opt_dtype)
+        new_v, new_s = [], []
+        for i, (v, g, v0, accs) in enumerate(zip(vs, gs, rs, states)):
+            seed = _leaf_seed(t, i)
+            if v.ndim == 1:
+                cover = accs[0].astype(jnp.float32)
+            else:
+                cover = None
+                for j, a in enumerate(accs):
+                    shape = [v.shape[0]] + [1] * (v.ndim - 1)
+                    shape[1 + j] = v.shape[1 + j]
+                    c = a.astype(jnp.float32).reshape(shape)
+                    cover = c if cover is None else jnp.minimum(cover, c)
+                cover = jnp.broadcast_to(cover, v.shape)
+            # fused: ν = cover + g², d = g·rsqrt(ν + ε), prox — one pass;
+            # ν comes back fp32 and only its axis maxes are kept
+            nv, nu = kops.opt_update(v, g, v0, cover, eta, ccfg.gamma,
+                                     ccfg.opt_eps, seed, mode="precond",
+                                     impl=ccfg.impl)
+            if v.ndim == 1:
+                upd = [kref.stochastic_round(nu, seed, dt)]
+            else:
+                upd = []
+                for j in range(v.ndim - 1):
+                    red = tuple(ax for ax in range(1, v.ndim) if ax != 1 + j)
+                    mx = jnp.max(nu, axis=red)
+                    upd.append(kref.stochastic_round(
+                        mx, seed + jnp.uint32(j + 1), dt))
+            new_v.append(nv)
+            new_s.append(upd)
+        return (jax.tree_util.tree_unflatten(tdef, new_v),
+                {"t": t + 1, "leaves": new_s})
+
+
+# relative ridge for the blocked-Shampoo inverse root, as a fraction of
+# tr(G).  Two jobs: (1) keep bf16-rounded stats (elementwise noise ~0.4%,
+# eigenvalue perturbation ≤ 0.4% of the trace) safely PSD so Newton–Schulz
+# converges; (2) bound the whitening ratio — G is a sum of FEW outer
+# products here (windows are short), so x^{-1/2} with a tiny ridge pumps
+# the step's norm budget into noise directions and the grafted signal
+# component starves.  sqrt((1+r)/r) ≈ 3.3 at r = 0.1 keeps the
+# preconditioner a gentle rotation instead of a noise amplifier.
+_SHAMPOO_RIDGE = 0.1
+
+
+def _inv_sqrt_psd(a, eps: float, iters: int = 15):
+    """A^{-1/2} for (nearly) PSD batched [..., b, b] via the coupled
+    Newton–Schulz iteration — pure matmuls (no eigh/LAPACK custom call), so
+    it traces inside shard_map's manual region and vmap alike.
+
+    The ridge is RELATIVE: δ = ε + ``_SHAMPOO_RIDGE``·tr(A).  bf16-rounded
+    stats carry elementwise noise up to ~0.4% of magnitude, which can push
+    small eigenvalues slightly negative; for PSD A the perturbation is
+    bounded by ‖E‖_F ≤ 0.004·tr(A), so a trace-relative ridge keeps A + δI
+    safely positive and the normalized spectrum bounded away from 0 — the
+    regime where the iteration provably converges (an absolute ε cannot do
+    this: it is dominated by the rounding noise as soon as the stats
+    grow).  See ``_SHAMPOO_RIDGE`` for the whitening-vs-noise trade."""
+    b = a.shape[-1]
+    eye = jnp.eye(b, dtype=jnp.float32)
+    tr = jnp.trace(a, axis1=-2, axis2=-1)[..., None, None]
+    a = a + (eps + _SHAMPOO_RIDGE * tr) * eye
+    c = jnp.trace(a, axis1=-2, axis2=-1)[..., None, None]
+    y = a / c
+    z = jnp.broadcast_to(eye, a.shape)
+    for _ in range(iters):
+        t = 0.5 * (3.0 * eye - z @ y)
+        y = y @ t
+        z = t @ z
+    return z * jax.lax.rsqrt(c)
+
+
+class _ShampooBlocked:
+    """Blocked full-matrix preconditioning on the flattened leaf: per-block
+    stats G ← G + g gᵀ, preconditioner G^{-1/2} refreshed every
+    ``precond_every`` local steps, step grafted to the diagonal-AdaGrad
+    norm (see the grafting comment in ``step``)."""
+
+    name = "shampoo_blocked"
+
+    def _geom(self, ccfg, l):
+        N = int(np.prod(l.shape[1:])) if l.ndim > 1 else 1
+        b = min(ccfg.shampoo_block, N)
+        nb = -(-N // b)
+        return N, b, nb
+
+    def init(self, ccfg, params):
+        leaves = jax.tree_util.tree_leaves(params)
+        K = leaves[0].shape[0]
+        dt = jnp.dtype(ccfg.opt_dtype)
+        out = []
+        for l in leaves:
+            _, b, nb = self._geom(ccfg, l)
+            eye = jnp.broadcast_to(jnp.eye(b, dtype=jnp.float32),
+                                   (K, nb, b, b)).astype(dt)
+            out.append({"s": jnp.zeros((K, nb, b, b), dt), "p": eye.copy()})
+        return {"t": jnp.zeros((K,), jnp.int32), "leaves": out}
+
+    def step(self, ccfg, opt, params, gp, ref_params, eta):
+        vs, gs, rs, states, tdef = _flat(params, gp, ref_params, opt)
+        t = opt["t"]
+        dt = jnp.dtype(ccfg.opt_dtype)
+        refresh = (t[0] % ccfg.precond_every) == 0
+        new_v, new_s = [], []
+        for i, (v, g, v0, st) in enumerate(zip(vs, gs, rs, states)):
+            seed = _leaf_seed(t, i)
+            K = v.shape[0]
+            N, b, nb = self._geom(ccfg, v)
+            gf = g.astype(jnp.float32).reshape(K, N)
+            gb = jnp.pad(gf, ((0, 0), (0, nb * b - N))).reshape(K, nb, b)
+            stats = st["s"].astype(jnp.float32) + jnp.einsum(
+                "knb,knc->knbc", gb, gb)
+            pre = jax.lax.cond(
+                refresh,
+                lambda s: _inv_sqrt_psd(s, ccfg.opt_eps),
+                lambda s: st["p"].astype(jnp.float32),
+                stats)
+            db = jnp.einsum("knbc,knc->knb", pre, gb)
+            df = db.reshape(K, nb * b)[:, :N]
+            # graft the preconditioned DIRECTION onto the diagonal-AdaGrad
+            # step's per-worker norm (the stats diagonal IS the AdaGrad
+            # accumulator Σg², so it's free): the rotation comes from the
+            # full block statistics, the step-size adaptation from the
+            # diagonal — and the ε-dominated first steps can't explode by
+            # ε^{-1/2} because the grafted norm decays with the accumulator
+            diag = jnp.diagonal(stats, axis1=-2, axis2=-1)      # [K, nb, b]
+            ga = (gb * jax.lax.rsqrt(diag + ccfg.opt_eps)) \
+                .reshape(K, nb * b)[:, :N]
+            gn = jnp.sqrt(jnp.sum(ga * ga, axis=1, keepdims=True))
+            dn = jnp.sqrt(jnp.sum(df * df, axis=1, keepdims=True))
+            d = (df * gn / (dn + 1e-30)).reshape(v.shape)
+            nv = kops.prox_update_tree(v, d, v0, eta, ccfg.gamma,
+                                       impl=ccfg.impl)
+            new_v.append(nv)
+            new_s.append({"s": kref.stochastic_round(stats, seed, dt),
+                          "p": kref.stochastic_round(
+                              pre, seed + jnp.uint32(1), dt)})
+        return (jax.tree_util.tree_unflatten(tdef, new_v),
+                {"t": t + 1, "leaves": new_s})
+
+
+_REGISTRY = {o.name: o for o in (_Sgd(), _Momentum(), _SM3(),
+                                 _ShampooBlocked())}
+
+
+def names() -> tuple:
+    return tuple(_REGISTRY)
+
+
+def for_config(ccfg):
+    return _REGISTRY[ccfg.optimizer]
+
+
+def state_bytes(opt_state) -> int:
+    """Per-worker optimizer-state bytes (mirrors ``coda.model_bytes``
+    accounting: leaf bytes divided by the leading worker axis).  Strictly
+    local bytes — by construction NOT part of any window payload."""
+    if opt_state is None:
+        return 0
+    leaves = jax.tree_util.tree_leaves(opt_state)
+    return sum(int(np.prod(l.shape[1:])) * jnp.dtype(l.dtype).itemsize
+               for l in leaves)
+
+
+def abstract_state_bytes(ccfg, params) -> int:
+    """``state_bytes`` without materializing buffers: ``params`` may be a
+    (stacked) tree of ShapeDtypeStructs, e.g. from ``jax.eval_shape``."""
+    opt = jax.eval_shape(lambda p: for_config(ccfg).init(ccfg, p), params)
+    return state_bytes(opt)

@@ -27,6 +27,7 @@ from repro.kernels import ref
 from repro.kernels.auc_loss import auc_loss as _auc_kernel
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.moe_dispatch import grouped_matmul as _grouped_kernel
+from repro.kernels.opt_update import opt_update as _opt_kernel
 from repro.kernels.prox_update import prox_update as _prox_kernel
 
 # Threshold above which the jnp fallback switches from materialized scores to
@@ -104,6 +105,27 @@ def grouped_matmul(x, w, group_sizes, *, impl: str = "auto"):
     if use_pallas:
         return _grouped_kernel(x, w, group_sizes, interpret=interpret)
     return ref.grouped_matmul_ref(x, w, group_sizes)
+
+
+def opt_update(v, g, v0, buf, eta, gamma, coef, seed, *, mode: str,
+               impl: str = "auto"):
+    """Fused optimizer update (the core/optimizer.py seam): accumulator
+    update + preconditioned step + prox projection in one pass over a
+    parameter leaf, returning ``(new_v, new_buf)``.
+
+    ``mode="momentum"``: buf is the momentum buffer (m ← coef·m + g, d = m;
+    bf16 buffers re-stored with stochastic rounding).  ``mode="precond"``:
+    buf is the fp32 accumulator cover (ν = cover + g², d = g·rsqrt(ν+coef),
+    ν returned fp32 for the caller's axis reductions).  The jnp oracle and
+    the kernel share the rounding hash bit-exactly."""
+    use_pallas, interpret = dispatch(impl)
+    if use_pallas:
+        nv, nb = _opt_kernel(v.reshape(-1), g.reshape(-1), v0.reshape(-1),
+                             buf.reshape(-1), eta, gamma, coef, seed,
+                             mode=mode, interpret=interpret)
+        return nv.reshape(v.shape), nb.reshape(buf.shape)
+    return ref.opt_update_ref(v, g, v0, buf, eta, gamma, coef, seed,
+                              mode=mode)
 
 
 def prox_update_tree(v_tree, g_tree, v0_tree, eta, gamma, *, impl: str = "auto"):

@@ -183,3 +183,66 @@ def prox_update_ref(v, g, v0, eta, gamma):
     vf = v.astype(jnp.float32)
     out = (gamma * (vf - eta * g.astype(jnp.float32)) + eta * v0.astype(jnp.float32))
     return (out / (eta + gamma)).astype(v.dtype)
+
+
+# --------------------------------------------------------------------------
+# fused optimizer update (core/optimizer.py seam)
+# --------------------------------------------------------------------------
+def _mix_bits(x):
+    """uint32 avalanche hash (xorshift-multiply finalizer).  Elementwise
+    integer ops only, so the SAME function runs inside the Pallas kernel
+    and in this oracle — the two paths round bit-identically."""
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def stochastic_round(x, seed, dtype):
+    """fp32 → ``dtype`` with deterministic hash-based stochastic rounding.
+
+    ``dtype=float32`` is the identity (no rounding is traced).  For bf16 the
+    random low-16 bits come from hashing the value's own bit pattern with a
+    per-(step, leaf) uint32 ``seed``: deterministic given (value, seed), so
+    checkpoint resume replays bitwise, with no PRNG key threaded through the
+    local steps.  Rounding is add-low-bits-then-truncate: unbiased, and the
+    expected value of the stored buffer equals the fp32 master value."""
+    if jnp.dtype(dtype) == jnp.dtype(jnp.float32):
+        return x.astype(jnp.float32)
+    assert jnp.dtype(dtype) == jnp.dtype(jnp.bfloat16), dtype
+    xi = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    r = _mix_bits(xi ^ seed) & jnp.uint32(0x0000FFFF)
+    yi = (xi + r) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(yi, jnp.float32).astype(jnp.bfloat16)
+
+
+def opt_update_ref(v, g, v0, buf, eta, gamma, coef, seed, *, mode):
+    """Oracle for the fused optimizer update (kernels/opt_update.py):
+    accumulator update + preconditioned step + prox projection in one pass.
+
+    mode="momentum": ``buf`` is the momentum buffer (fp32 or bf16);
+        m = coef·m + g, d = m, new buffer stochastically rounded to
+        ``buf.dtype``.  coef = 0 reproduces ``prox_update_ref`` bitwise.
+    mode="precond": ``buf`` is the fp32 accumulator cover (e.g. SM3's
+        min-of-covers); ν = cover + g², d = g·rsqrt(ν + coef), and ν comes
+        back fp32 for the caller's axis reductions.
+    Returns (new_v, new_buf)."""
+    eta = jnp.asarray(eta, jnp.float32)
+    coef = jnp.asarray(coef, jnp.float32)
+    vf = v.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    bf = buf.astype(jnp.float32)
+    if mode == "momentum":
+        acc = coef * bf + gf
+        d = acc
+        new_buf = stochastic_round(acc, seed, buf.dtype)
+    elif mode == "precond":
+        acc = bf + gf * gf
+        d = gf * jax.lax.rsqrt(acc + coef)
+        new_buf = acc
+    else:
+        raise ValueError(f"unknown opt_update mode {mode!r}")
+    out = (gamma * (vf - eta * d) + eta * v0.astype(jnp.float32))
+    return (out / (eta + gamma)).astype(v.dtype), new_buf

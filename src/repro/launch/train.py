@@ -74,12 +74,13 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import mlp_config
-from repro.core import coda, objective, schedules
+from repro.core import coda, objective, optimizer, schedules
 from repro.data import DataConfig, ShardedDataset
 from repro.launch import mesh as mesh_mod
 from repro.metrics import report as metric_report
@@ -142,6 +143,27 @@ def main():
                     help="β for server momentum on the averaged iterate "
                          "(0 = off; the buffer stays server-side, no extra "
                          "wire bytes)")
+    ap.add_argument("--optimizer", choices=list(optimizer.names()),
+                    default="sgd",
+                    help="local primal optimizer (core/optimizer.py "
+                         "registry); preconditioning is strictly LOCAL — "
+                         "the window all-reduce still carries only the "
+                         "model payload, never optimizer state")
+    ap.add_argument("--opt-dtype", choices=["fp32", "bf16"], default="fp32",
+                    help="storage dtype for optimizer accumulators; bf16 "
+                         "halves optimizer-state bytes (fp32 master math "
+                         "in-kernel, stochastic-rounded stores)")
+    ap.add_argument("--opt-beta", type=float, default=0.9,
+                    help="momentum coefficient (--optimizer momentum)")
+    ap.add_argument("--opt-eps", type=float, default=1e-6,
+                    help="preconditioner damping (sm3 / shampoo_blocked)")
+    ap.add_argument("--shampoo-block", type=int, default=32,
+                    help="block size b for shampoo_blocked's per-block "
+                         "[b, b] second-moment statistics")
+    ap.add_argument("--precond-every", type=int, default=1,
+                    help="recompute the shampoo inverse-root preconditioner "
+                         "every N local steps (stale preconditioner "
+                         "in between — cheaper, usually harmless)")
     ap.add_argument("--dirichlet-alpha", type=float, default=float("inf"),
                     help="Dirichlet(α) label-skew across the K shards "
                          "(inf = IID even split, the paper's setting)")
@@ -242,7 +264,19 @@ def main():
                            straggler_prob=args.straggler_prob,
                            straggler_windows=args.straggler_windows,
                            max_staleness=args.max_staleness,
-                           fault_seed=args.fault_seed)
+                           fault_seed=args.fault_seed,
+                           optimizer=args.optimizer,
+                           opt_dtype=jnp.bfloat16
+                           if args.opt_dtype == "bf16" else jnp.float32,
+                           opt_beta=args.opt_beta,
+                           opt_eps=args.opt_eps,
+                           shampoo_block=args.shampoo_block,
+                           precond_every=args.precond_every)
+    if args.optimizer != "sgd":
+        sts = jax.eval_shape(lambda k: coda.init_state(k, mcfg, ccfg), key)
+        print(f"optimizer: {args.optimizer} ({args.opt_dtype}) "
+              f"state={coda.opt_state_bytes(sts):,} B/worker "
+              f"(local only — never on the wire)")
     if ccfg.faults_enabled:
         print(f"fault injection: participation={args.participation:g} "
               f"straggler_prob={args.straggler_prob:g} "
@@ -283,7 +317,14 @@ def main():
         if args.metrics == "sketch":
             sk = streaming.sketch_from_rows(state["sk_acc"],
                                             *ccfg.stream_range)
-            return rep.report(f"eval {n_evals[0]}", sk, n_seen=int(sk.count))
+            out = rep.report(f"eval {n_evals[0]}", sk, n_seen=int(sk.count))
+            if "sk_loc" in state:
+                # per-worker AUC skew off the local (never-averaged) sketch
+                # lanes — zero extra wire bytes
+                print(metric_report.worker_skew_line(
+                    "train", f"eval {n_evals[0]}", met, state["sk_loc"],
+                    *ccfg.stream_range))
+            return out
         st = met.update(met.init(), test_scores(state), test["labels"])
         return rep.report(f"eval {n_evals[0]}", st,
                           n_seen=int(np.asarray(test["labels"]).size))
@@ -311,6 +352,10 @@ def main():
         sk = streaming.sketch_from_rows(res.state["sk_acc"],
                                         *ccfg.stream_range)
         rep.report("final train-stream", sk, n_seen=int(sk.count))
+        if "sk_loc" in res.state:
+            print(metric_report.worker_skew_line(
+                "train", "final", met, res.state["sk_loc"],
+                *ccfg.stream_range))
     compress = args.compress or None
     total = coda.comm_bytes(schedules.stages(sched, args.stages), res.state,
                             compress,

@@ -142,12 +142,24 @@ def update_counts(pos, neg, scores, labels, lo: float, hi: float):
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class ScoreSketch:
-    """Fixed-size mergeable (pos, neg) score histogram; see module doc."""
+    """Fixed-size mergeable (pos, neg) score histogram; see module doc.
+
+    ``under``/``over`` count the scores that fell outside ``[lo, hi)`` and
+    were saturated into an end bin.  The fixed default range is a silent
+    failure mode — a model whose logits drift past ``hi`` piles mass into
+    the top bin and the sketch AUC quietly degrades toward a coin flip —
+    so the clip events are counted where they happen.  The counters are
+    host-side observability only: they do NOT ride the training wire (the
+    window payload stays ``pos``/``neg``), so device-lifted sketches
+    (``sketch_from_rows``) carry zeros and expose ``edge_mass`` as the
+    observable upper bound instead."""
 
     pos: np.ndarray  # fp32 [bins] positive-score counts
     neg: np.ndarray  # fp32 [bins] negative-score counts
     lo: float
     hi: float
+    under: float = 0.0  # scores < lo, saturated into bin 0
+    over: float = 0.0   # scores >= hi, saturated into bin B-1
 
     @property
     def bins(self) -> int:
@@ -160,6 +172,24 @@ class ScoreSketch:
     @property
     def count(self) -> int:
         return int(float(self.pos.sum() + self.neg.sum()))
+
+    @property
+    def clipped(self) -> float:
+        """Exact fraction of observed scores saturated at the range ends
+        (0.0 when the counters didn't travel — see class doc)."""
+        c = self.count
+        return float(self.under + self.over) / c if c else 0.0
+
+    @property
+    def edge_mass(self) -> float:
+        """Fraction of all counts in the two end bins — ≥ the clipped
+        fraction by construction (every clipped score lands in an end
+        bin), and computable from wire counts alone."""
+        c = self.count
+        if not c:
+            return 0.0
+        return float(self.pos[0] + self.pos[-1] +
+                     self.neg[0] + self.neg[-1]) / c
 
 
 def empty_sketch(bins: int = DEFAULT_BINS, lo: float = DEFAULT_RANGE[0],
@@ -183,7 +213,9 @@ def update(sk: ScoreSketch, scores, labels) -> ScoreSketch:
     is_pos = y > 0.5
     np.add.at(pos, idx[is_pos], np.float32(1.0))
     np.add.at(neg, idx[~is_pos], np.float32(1.0))
-    return ScoreSketch(pos, neg, sk.lo, sk.hi)
+    under = sk.under + float(np.count_nonzero(s < np.float32(sk.lo)))
+    over = sk.over + float(np.count_nonzero(s >= np.float32(sk.hi)))
+    return ScoreSketch(pos, neg, sk.lo, sk.hi, under, over)
 
 
 def merge(a: ScoreSketch, b: ScoreSketch) -> ScoreSketch:
@@ -192,7 +224,8 @@ def merge(a: ScoreSketch, b: ScoreSketch) -> ScoreSketch:
         raise ValueError(
             f"incompatible sketches: {a.bins}@[{a.lo},{a.hi}) vs "
             f"{b.bins}@[{b.lo},{b.hi})")
-    return ScoreSketch(a.pos + b.pos, a.neg + b.neg, a.lo, a.hi)
+    return ScoreSketch(a.pos + b.pos, a.neg + b.neg, a.lo, a.hi,
+                       a.under + b.under, a.over + b.over)
 
 
 def sketch_from_rows(sk_tree, lo: float, hi: float,
@@ -204,6 +237,20 @@ def sketch_from_rows(sk_tree, lo: float, hi: float,
     return ScoreSketch(np.asarray(sk_tree["pos"][row], np.float32),
                        np.asarray(sk_tree["neg"][row], np.float32),
                        float(lo), float(hi))
+
+
+def worker_sketches(sk_tree, lo: float, hi: float) -> list:
+    """Lift EVERY lane of a per-worker sketch subtree to host sketches —
+    one ``ScoreSketch`` per worker row.
+
+    Meant for ``state["sk_loc"]``, the local (never-averaged) twin of the
+    merged accumulator: each worker folds only its OWN deltas into its
+    lane, so after any number of windows lane k holds exactly the raw
+    counts of worker k's local stream — per-worker AUC skew comes straight
+    off the existing ``[K, 2, bins]`` readout with zero extra wire bytes
+    (the window collective never touches ``sk_loc``)."""
+    K = int(np.asarray(sk_tree["pos"]).shape[0])
+    return [sketch_from_rows(sk_tree, lo, hi, row=k) for k in range(K)]
 
 
 # --------------------------------------------------------------------------

@@ -389,3 +389,120 @@ def test_shard_map_streaming_eval_matches_oracle_and_payload_delta():
         print("OK", label, "payload", payload, "=", base, "+", delta)
     print("ALL OK")
     """)
+
+
+# --------------------------------------------------------------------------
+# saturation counters + per-worker skew readout (PR 10 satellites)
+# --------------------------------------------------------------------------
+def test_saturation_counters_count_and_merge_exactly():
+    """Host-side sketches count every clipped score exactly; ``merge`` sums
+    the counters; ``edge_mass`` upper-bounds ``clipped``."""
+    sk = streaming.empty_sketch(32, -1.0, 1.0)
+    s = np.array([-5.0, -1.0001, 0.0, 0.5, 1.0, 7.0], np.float32)
+    y = np.array([1, 0, 1, 0, 1, 0], np.float32)
+    sk = streaming.update(sk, s, y)
+    assert sk.under == 2 and sk.over == 2      # -5, -1.0001 | 1.0, 7 (hi incl)
+    assert sk.clipped == pytest.approx(4 / 6)
+    assert sk.edge_mass >= sk.clipped
+    other = streaming.update(streaming.empty_sketch(32, -1.0, 1.0),
+                             np.array([3.0], np.float32),
+                             np.array([1.0], np.float32))
+    merged = streaming.merge(sk, other)
+    assert merged.under == 2 and merged.over == 3
+    # device-lifted sketches carry NO counters (they never ride the wire)
+    lifted = streaming.sketch_from_rows(
+        {"pos": sk.pos[None], "neg": sk.neg[None]}, -1.0, 1.0)
+    assert lifted.under == 0 and lifted.over == 0 and lifted.clipped == 0.0
+    assert lifted.edge_mass == sk.edge_mass
+
+
+def test_clip_warning_counter_and_edge_mass_paths():
+    from repro.metrics import report
+
+    met = streaming.make_metric("auc", "sketch", bins=128)
+    rng = np.random.default_rng(0)
+    s = rng.normal(0.0, 1.0, 400).astype(np.float32)
+    y = (rng.random(400) < 0.5).astype(np.float32)
+
+    # in-range stream: no warning
+    ok = streaming.update(streaming.empty_sketch(128, -8.0, 8.0), s, y)
+    assert report._clip_warning(ok) is None
+    line = report.metric_line("eval", 1, met, ok)
+    assert "WARN" not in line
+
+    # >1% of scores outside the range: the exact counter fires
+    clipped = streaming.update(streaming.empty_sketch(128, -0.5, 0.5), s, y)
+    warn = report._clip_warning(clipped)
+    assert warn and "clipped=" in warn and "widen the sketch range" in warn
+    assert "WARN" in report.metric_line("eval", 1, met, clipped)
+
+    # device-lifted twin (counters zeroed): the edge-mass fallback fires
+    lifted = streaming.ScoreSketch(clipped.pos, clipped.neg, -0.5, 0.5)
+    warn = report._clip_warning(lifted)
+    assert warn and "edge-bin mass=" in warn
+    # ... but not with few bins, where end bins legitimately hold mass
+    coarse = streaming.ScoreSketch(clipped.pos.reshape(8, 16).sum(1),
+                                   clipped.neg.reshape(8, 16).sum(1),
+                                   -0.5, 0.5)
+    assert report._clip_warning(coarse) is None
+
+
+def test_worker_skew_line_reports_lanes_and_dashes():
+    from repro.metrics import report
+
+    bins = 64
+    met = streaming.SketchMetric(bins=bins)
+    rng = np.random.default_rng(1)
+    pos = np.zeros((4, bins), np.float32)
+    neg = np.zeros((4, bins), np.float32)
+    # lane 0: separable (high AUC); lane 1: overlapping (low AUC);
+    # lane 2: positives only (AUC undefined); lane 3: empty
+    pos[0, 48:] = 10
+    neg[0, :16] = 10
+    pos[1, :] = rng.random(bins).astype(np.float32)
+    neg[1, :] = rng.random(bins).astype(np.float32)
+    pos[2, 10] = 5
+    line = report.worker_skew_line("train", 7, met,
+                                   {"pos": pos, "neg": neg}, -8.0, 8.0)
+    cells = line.split("[")[-1].split("]")[0].split()
+    assert len(cells) == 4
+    assert cells[2] == "-" and cells[3] == "-"
+    assert float(cells[0]) > 0.9 and 0.0 <= float(cells[1]) <= 1.0
+    assert "spread=" in line
+    skews = streaming.worker_sketches({"pos": pos, "neg": neg}, -8.0, 8.0)
+    assert len(skews) == 4 and skews[0].count == 320
+    assert skews[3].count == 0
+
+
+def test_training_sk_loc_holds_each_workers_own_stream():
+    """``state["sk_loc"]`` lane k must hold EXACTLY the histogram of worker
+    k's own local scores — the per-shard skew readout the window collective
+    never touches — while ``sk_acc`` holds the merged stream.  Replayed
+    step by step over two windows."""
+    mcfg, ccfg, st0, wb = _window_case(K=4, bins=32)
+    oracles = [streaming.empty_sketch(ccfg.stream_bins, *ccfg.stream_range)
+               for _ in range(4)]
+    state = st0
+    for _w in range(2):
+        replay = state
+        for i in range(wb["labels"].shape[0]):
+            batch = {k: v[i] for k, v in wb.items()}
+            _, _, hs = coda.grad_step_scores(mcfg, ccfg, replay, batch)
+            for k in range(4):
+                oracles[k] = streaming.update(
+                    oracles[k], np.asarray(hs[k]),
+                    np.asarray(batch["labels"][k]))
+            replay, _ = coda.local_step(mcfg, ccfg, replay, batch,
+                                        jnp.float32(0.1))
+        state, _ = coda.window_step(mcfg, ccfg, state, wb, jnp.float32(0.1))
+    lanes = streaming.worker_sketches(state["sk_loc"], *ccfg.stream_range)
+    for k, (got, want) in enumerate(zip(lanes, oracles)):
+        assert np.array_equal(got.pos, want.pos), k
+        assert np.array_equal(got.neg, want.neg), k
+    # the merged accumulator is exactly the sum of the per-worker lanes
+    acc = streaming.sketch_from_rows(state["sk_acc"], *ccfg.stream_range)
+    assert np.array_equal(acc.pos, sum(o.pos for o in oracles))
+    assert np.array_equal(acc.neg, sum(o.neg for o in oracles))
+    # ...and sk_loc adds ZERO wire bytes: the payload accounting only ever
+    # counts the sk_new deltas
+    assert coda.streaming_payload_bytes(state) == 2 * ccfg.stream_bins * 4

@@ -1,0 +1,470 @@
+"""Optimizer-seam tests (core/optimizer.py + kernels/opt_update.py).
+
+The load-bearing claims, each pinned here:
+
+  * ``optimizer="sgd"`` is bit-for-bit the pre-seam path: no ``"opt"``
+    entry in the state, the window payload accounting is unchanged for
+    EVERY optimizer, and the fused kernel with ``coef=0`` reproduces the
+    plain prox update bitwise (fp32, int8-compressed, and fault-masked
+    windows alike);
+  * optimizer state is strictly local: the window averaging (plain, int8,
+    and masked/faulted) never touches ``state["opt"]`` — the subtree is
+    bitwise identical to a ``communicate=False`` run — while the params it
+    synced are replicated across workers;
+  * the sharded executor matches the vmap oracle for the stateful
+    optimizers (subprocess, 8 forced host devices, fp32 tight / bf16 at
+    stochastic-rounding scale);
+  * bf16 accumulator storage stays within a bounded drift of the fp32 run;
+  * checkpoint resume with optimizer state is bitwise identical to the
+    uninterrupted run (the stochastic-rounding hash is deterministic in
+    (value, step-counter seed) — no PRNG key threads the local steps);
+  * the audit names an exact-size window-payload excess as an optimizer
+    wire leak (red-team: deliberately under-claim the expected bytes);
+  * the Pallas kernel (interpret mode off-TPU) matches the jnp oracle at
+    fp32 noise scale (the two are separately compiled programs, so XLA's
+    FMA contraction may differ per op of the prox chain — last-bit
+    absolute differences, which cancellation can make large in ULP terms),
+    and its launch geometry passes the R5 static checks.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import audit
+from repro.configs.base import mlp_config
+from repro.core import coda, optimizer, schedules
+from repro.kernels import ops as kops
+from repro.kernels import opt_update as OK
+from repro.kernels import ref as kref
+
+MCFG = mlp_config(n_features=16, d=32)
+
+
+def _case(K=4, I=3, B=8, seed=0, **kw):
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, **kw)
+    key = jax.random.PRNGKey(seed)
+    st0 = coda.init_state(key, MCFG, ccfg)
+    ky, kx = jax.random.split(key)
+    y = (jax.random.uniform(ky, (I, K, B)) < 0.7).astype(jnp.float32)
+    x = jax.random.normal(kx, (I, K, B, 16)) + 0.3 * (y[..., None] * 2 - 1)
+    return ccfg, st0, {"features": x, "labels": y}
+
+
+def _faults(K, weights):
+    return {"weights": jnp.asarray(weights, jnp.float32),
+            "resync": jnp.zeros((K,), jnp.float32)}
+
+
+def _tree_equal(a, b):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves_with_path(b)
+    assert len(la) == len(lb)
+    for (p, x), (_, y) in zip(la, lb):
+        assert jnp.array_equal(x, y), jax.tree_util.keystr(p)
+
+
+def _tree_close(a, b, tol, label=""):
+    for (p, x), (_, y) in zip(jax.tree_util.tree_leaves_with_path(a),
+                              jax.tree_util.tree_leaves_with_path(b)):
+        err = float(jnp.max(jnp.abs(x.astype(jnp.float32) -
+                                    y.astype(jnp.float32))))
+        assert err < tol, (label, jax.tree_util.keystr(p), err)
+
+
+# --------------------------------------------------------------------------
+# sgd is bit-for-bit the pre-seam path
+# --------------------------------------------------------------------------
+def test_sgd_state_has_no_opt_entry_and_payload_is_optimizer_independent():
+    """The seam must be invisible under sgd: no ``"opt"`` key (same
+    treedef, same checkpoint manifest, same donation layout as before the
+    seam existed), and the window-payload accounting must not move for ANY
+    optimizer — preconditioning is local, the wire contract is fixed."""
+    _, sgd_st, _ = _case()
+    assert set(sgd_st) == {"params", "duals", "ref_params", "ref_duals"}
+    base = coda.window_payload_bytes(sgd_st)
+    assert coda.opt_state_bytes(sgd_st) == 0
+    for name in ("momentum", "sm3", "shampoo_blocked"):
+        _, st, _ = _case(optimizer=name, shampoo_block=8)
+        assert "opt" in st, name
+        assert coda.window_payload_bytes(st) == base, name
+        assert coda.window_payload_by_dtype(st) == \
+            coda.window_payload_by_dtype(sgd_st), name
+        assert coda.opt_state_bytes(st) > 0, name
+
+
+def test_momentum_beta0_fp32_reproduces_sgd_bitwise():
+    """β=0 fp32 momentum degenerates to d=g with an identity re-store, so
+    the params/duals trajectory must equal sgd's BITWISE — across a plain
+    fp32 window, an int8-compressed window, and a fault-masked window.
+    This pins the fused kernel's prox arithmetic to the pre-seam path."""
+    for kw, faults in [({}, None),
+                       ({"avg_compress": "int8"}, None),
+                       ({}, _faults(4, [1.0, 0.0, 1.0, 1.0]))]:
+        ccfg_s, st_s, wb = _case(**kw)
+        ccfg_m, st_m, _ = _case(optimizer="momentum", opt_beta=0.0, **kw)
+        out_s, loss_s = coda.window_step(MCFG, ccfg_s, st_s, wb,
+                                         jnp.float32(0.1), faults=faults)
+        out_m, loss_m = coda.window_step(MCFG, ccfg_m, st_m, wb,
+                                         jnp.float32(0.1), faults=faults)
+        _tree_equal({k: out_m[k] for k in out_s}, out_s)
+        assert jnp.array_equal(loss_s, loss_m)
+
+
+def test_opt_update_coef0_is_prox_update_bitwise():
+    v = jax.random.normal(jax.random.PRNGKey(0), (257,))
+    g = jax.random.normal(jax.random.PRNGKey(1), (257,))
+    v0 = jax.random.normal(jax.random.PRNGKey(2), (257,))
+    m = jnp.zeros((257,), jnp.float32)
+    nv, nm = kref.opt_update_ref(v, g, v0, m, 0.1, 0.5, 0.0,
+                                 jnp.uint32(7), mode="momentum")
+    want = kref.prox_update_ref(v, g, v0, 0.1, 0.5)
+    assert jnp.array_equal(nv, want)
+    assert jnp.array_equal(nm, g)
+
+
+# --------------------------------------------------------------------------
+# optimizer state is strictly local
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name,kw", [
+    ("momentum", {}),
+    ("sm3", {}),
+    ("shampoo_blocked", {"shampoo_block": 8, "precond_every": 2}),
+])
+def test_averaging_never_touches_opt_state(name, kw):
+    """Every averaging flavor must pass ``state["opt"]`` through untouched:
+    the subtree after a communicating window is bitwise the subtree of the
+    same window run silent, while the synced params are replicated across
+    worker rows and the per-worker accumulators are NOT."""
+    for extra, faults in [({}, None),
+                          ({"avg_compress": "int8"}, None),
+                          ({}, _faults(4, [1.0, 0.0, 1.0, 0.5]))]:
+        if name == "shampoo_blocked" and extra:
+            continue          # one compress case is enough; keep it fast
+        ccfg, st0, wb = _case(optimizer=name, **kw, **extra)
+        synced, _ = coda.window_step(MCFG, ccfg, st0, wb, jnp.float32(0.1),
+                                     faults=faults)
+        silent, _ = coda.window_step(MCFG, ccfg, st0, wb, jnp.float32(0.1),
+                                     communicate=False)
+        _tree_equal(synced["opt"], silent["opt"])
+        assert int(synced["opt"]["t"][0]) == wb["labels"].shape[0]
+        for leaf in jax.tree_util.tree_leaves(synced["params"]):
+            assert np.array_equal(
+                np.asarray(leaf),
+                np.broadcast_to(np.asarray(leaf[0]), leaf.shape)) \
+                or faults is not None
+        # per-worker accumulators differ across workers (different local
+        # streams) — averaging them would have erased exactly this
+        bufs = [l for l in jax.tree_util.tree_leaves(synced["opt"]["leaves"])
+                if l.ndim > 1]
+        assert any(
+            not np.array_equal(np.asarray(l[0]), np.asarray(l[1]))
+            for l in bufs), name
+
+
+def test_resync_adopts_merged_params_but_keeps_local_opt_state():
+    """A worker past max_staleness re-syncs: its params jump to the merged
+    iterate, its optimizer state stays its own (bitwise the silent run's)."""
+    K = 4
+    ccfg, st0, wb = _case(K=K, optimizer="momentum")
+    faults = {"weights": jnp.asarray([1.0, 1.0, 1.0, 0.0], jnp.float32),
+              "resync": jnp.asarray([0.0, 0.0, 0.0, 1.0], jnp.float32)}
+    synced, _ = coda.window_step(MCFG, ccfg, st0, wb, jnp.float32(0.1),
+                                 faults=faults)
+    silent, _ = coda.window_step(MCFG, ccfg, st0, wb, jnp.float32(0.1),
+                                 communicate=False)
+    _tree_equal(synced["opt"], silent["opt"])
+    for leaf in jax.tree_util.tree_leaves(synced["params"]):
+        # the resynced worker 3 holds the same merged replica as worker 0
+        assert np.array_equal(np.asarray(leaf[3]), np.asarray(leaf[0]))
+
+
+# --------------------------------------------------------------------------
+# bf16 accumulator drift
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["momentum", "sm3"])
+def test_bf16_opt_state_drift_is_bounded(name):
+    """Stochastically-rounded bf16 accumulators must track the fp32 run:
+    after several windows the params drift stays at rounding scale, far
+    from the divergence/no-learning failure modes."""
+    ccfg32, st32, wb = _case(optimizer=name)
+    ccfg16, st16, _ = _case(optimizer=name, opt_dtype=jnp.bfloat16)
+    for _ in range(4):
+        st32, _ = coda.window_step(MCFG, ccfg32, st32, wb, jnp.float32(0.1))
+        st16, _ = coda.window_step(MCFG, ccfg16, st16, wb, jnp.float32(0.1))
+    _tree_close(st16["params"], st32["params"], 2e-2, name)
+    assert coda.opt_state_bytes(st16) < coda.opt_state_bytes(st32)
+
+
+def test_bf16_halves_opt_state_bytes_and_abstract_matches_concrete():
+    for name in ("momentum", "sm3", "shampoo_blocked"):
+        sizes = {}
+        for dt in (jnp.float32, jnp.bfloat16):
+            ccfg, st, _ = _case(optimizer=name, opt_dtype=dt,
+                                shampoo_block=8)
+            sizes[dt] = coda.opt_state_bytes(st)
+            assert optimizer.abstract_state_bytes(
+                ccfg, jax.eval_shape(lambda s: s, st)["params"]) == sizes[dt]
+        ratio = sizes[jnp.float32] / sizes[jnp.bfloat16]
+        assert ratio >= 1.9, (name, ratio)   # the ISSUE's memory target
+
+
+# --------------------------------------------------------------------------
+# registry / config surface
+# --------------------------------------------------------------------------
+def test_registry_names_and_config_validation():
+    assert set(optimizer.names()) == {"sgd", "momentum", "sm3",
+                                      "shampoo_blocked"}
+    with pytest.raises(ValueError, match="unknown optimizer"):
+        coda.CoDAConfig(n_workers=2, optimizer="adam")
+    with pytest.raises(ValueError, match="opt_dtype"):
+        coda.CoDAConfig(n_workers=2, optimizer="sm3", opt_dtype=jnp.float16)
+    with pytest.raises(ValueError, match="shampoo_block"):
+        coda.CoDAConfig(n_workers=2, shampoo_block=0)
+    with pytest.raises(ValueError, match="precond_every"):
+        coda.CoDAConfig(n_workers=2, precond_every=0)
+    with pytest.raises(ValueError, match="opt_beta"):
+        coda.CoDAConfig(n_workers=2, opt_beta=1.0)
+
+
+# --------------------------------------------------------------------------
+# checkpoint resume with optimizer state
+# --------------------------------------------------------------------------
+class _Crash(RuntimeError):
+    pass
+
+
+def test_checkpoint_resume_with_opt_state_is_bitwise(tmp_path):
+    """Crash-resume with bf16 sm3 state must be bitwise identical to the
+    uninterrupted run: the state dict now carries ``"opt"`` (mixed int32 /
+    bf16 leaves) and the stochastic-rounding seeds replay from the
+    checkpointed step counter."""
+    K, I, B, F = 4, 2, 4, 8
+    mcfg = mlp_config(n_features=F, d=16)
+    sched = schedules.ScheduleConfig(n_workers=K, eta0=0.3, T0=8, I0=I)
+    ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.6, optimizer="sm3",
+                           opt_dtype=jnp.bfloat16)
+
+    def sample_window(key, n_steps):
+        kf, kl = jax.random.split(key)
+        y = (jax.random.uniform(kl, (n_steps, K, B)) < 0.6) \
+            .astype(jnp.float32)
+        x = jax.random.normal(kf, (n_steps, K, B, F)) \
+            + 0.3 * (y[..., None] * 2 - 1)
+        return {"features": x, "labels": y}
+
+    def sample_alpha(key, m):
+        kf, kl = jax.random.split(key)
+        y = (jax.random.uniform(kl, (K, m)) < 0.6).astype(jnp.float32)
+        x = jax.random.normal(kf, (K, m, F)) + 0.3 * (y[..., None] * 2 - 1)
+        return {"features": x, "labels": y}
+
+    def crashing(n_calls):
+        seen = {"n": 0}
+
+        def sample(key, n_steps):
+            if seen["n"] >= n_calls:
+                raise _Crash("boom")
+            seen["n"] += 1
+            return sample_window(key, n_steps)
+
+        return sample
+
+    want = coda.fit(jax.random.PRNGKey(0), mcfg, ccfg, sched, 2,
+                    sample_window, sample_alpha)
+    assert "opt" in want.state
+    d = str(tmp_path / "run")
+    with pytest.raises(_Crash):
+        coda.fit(jax.random.PRNGKey(0), mcfg, ccfg, sched, 2,
+                 crashing(5), sample_alpha, ckpt_dir=d, ckpt_every=2)
+    got = coda.fit(jax.random.PRNGKey(0), mcfg, ccfg, sched, 2,
+                   sample_window, sample_alpha, ckpt_dir=d, ckpt_every=2,
+                   resume=True)
+    _tree_equal(got.state, want.state)
+    assert got.history == want.history
+    assert got.comm_rounds == want.comm_rounds
+
+
+# --------------------------------------------------------------------------
+# fused kernel: interpret ≡ oracle, R5 geometry
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("mode,buf_dtype", [
+    ("momentum", jnp.float32),
+    ("momentum", jnp.bfloat16),
+    ("precond", jnp.float32),
+])
+def test_opt_update_kernel_interpret_matches_ref(mode, buf_dtype):
+    """The Pallas kernel (interpret mode off-TPU) and the jnp oracle share
+    the stochastic-rounding hash as the same integer ops, but the two are
+    separately compiled programs: XLA is free to contract the prox chain's
+    mul+adds into FMAs in one and not the other, and where ``coef·m + g``
+    cancels toward zero that last-bit difference is large in relative
+    terms (and can flip a stochastic-rounding decision by one bf16 step).
+    So the pin is the repo's kernel-vs-oracle idiom — allclose at fp32
+    noise scale for the prox result, bf16 rounding scale for a rounded
+    buffer — which still catches every real bug class here (wrong seed
+    lane, fp32-vs-bf16 math, off-by-one tiles produce order-of-magnitude
+    diffs).  Exercised at a length that does not divide the block size."""
+    for n in (64, 1000):
+        ks = jax.random.split(jax.random.PRNGKey(n), 4)
+        v = jax.random.normal(ks[0], (n,))
+        g = jax.random.normal(ks[1], (n,))
+        v0 = jax.random.normal(ks[2], (n,))
+        if mode == "momentum":
+            buf = (jax.random.normal(ks[3], (n,))).astype(buf_dtype)
+        else:
+            buf = jnp.abs(jax.random.normal(ks[3], (n,)))  # fp32 cover ≥ 0
+        args = (v, g, v0, buf, 0.1, 0.5,
+                0.9 if mode == "momentum" else 1e-6, jnp.uint32(12345))
+        nv_k, nb_k = kops.opt_update(*args, mode=mode, impl="pallas")
+        nv_r, nb_r = kops.opt_update(*args, mode=mode, impl="ref")
+        np.testing.assert_allclose(np.asarray(nv_k), np.asarray(nv_r),
+                                   rtol=1e-6, atol=1e-6, err_msg=f"{mode} v n={n}")
+        assert nb_k.dtype == buf.dtype
+        tol = 1e-2 if buf.dtype == jnp.bfloat16 else 1e-6
+        np.testing.assert_allclose(np.asarray(nb_k, np.float32),
+                                   np.asarray(nb_r, np.float32),
+                                   rtol=tol, atol=tol, err_msg=f"{mode} buf n={n}")
+
+
+def test_opt_update_launch_geometry_passes_r5():
+    """The static launch checks the audit enforces in CI, exercised over
+    sub-block, exact-block, and padded sizes."""
+    for N in (1, 8, 1000, 4096, 5000):
+        g = OK.launch_geometry(N)
+        assert g["Np"] >= N and g["Np"] % g["bt"] == 0
+        for mode in ("momentum", "precond"):
+            launch = audit.PallasLaunch(
+                kernel=f"opt_update[{mode}]", grid=g["grid"],
+                blocks={"n": (g["Np"], g["bt"])})
+            assert audit.launch_problems(launch) == [], (N, mode)
+
+
+# --------------------------------------------------------------------------
+# sharded executor (subprocess: 8 forced host devices)
+# --------------------------------------------------------------------------
+_PRELUDE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.analysis import audit as A
+    from repro.configs.base import mlp_config
+    from repro.core import coda
+    mcfg = mlp_config(n_features=16, d=32)
+
+    def make_case(K, I, B=8, seed=0, **kw):
+        ccfg = coda.CoDAConfig(n_workers=K, p_pos=0.7, **kw)
+        key = jax.random.PRNGKey(seed)
+        st0 = coda.init_state(key, mcfg, ccfg)
+        ky, kx = jax.random.split(key)
+        y = (jax.random.uniform(ky, (I, K, B)) < 0.7).astype(jnp.float32)
+        x = jax.random.normal(kx, (I, K, B, 16)) + 0.3 * (y[..., None] * 2 - 1)
+        return ccfg, st0, {"features": x, "labels": y}
+
+    def max_err(a, b):
+        return max(float(jnp.max(jnp.abs(x.astype(jnp.float32) -
+                                         y.astype(jnp.float32))))
+                   for x, y in zip(jax.tree_util.tree_leaves(a),
+                                   jax.tree_util.tree_leaves(b)))
+""")
+
+
+def _run_sub(script: str, timeout=900):
+    r = subprocess.run([sys.executable, "-c",
+                        _PRELUDE + textwrap.dedent(script)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env={**os.environ, "PYTHONPATH": "src"},
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "ALL OK" in r.stdout, r.stdout[-2000:]
+
+
+def test_shard_map_matches_vmap_oracle_for_stateful_optimizers():
+    """Two windows of each stateful optimizer through the real 8-device
+    shard_map executor vs the vmap oracle.  fp32: tight (the Newton–Schulz
+    inverse root is pure matmuls, so both executors trace the same
+    program).  bf16: the stochastic-rounding hash sees bitwise-identical
+    inputs only until the first ulp-level scheduling difference, so bf16
+    buffers may differ by a few ulp of their magnitude — params stay at
+    fp32-feedback scale."""
+    _run_sub("""
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    K, I = 8, 4
+    cases = [
+        ("momentum", jnp.float32, {}),
+        ("sm3", jnp.float32, {}),
+        ("sm3", jnp.bfloat16, {}),
+        ("shampoo_blocked", jnp.float32,
+         {"shampoo_block": 8, "precond_every": 2}),
+        ("shampoo_blocked", jnp.bfloat16,
+         {"shampoo_block": 8, "precond_every": 2}),
+    ]
+    for name, dt, kw in cases:
+        label = f"{name}/{jnp.dtype(dt).name}"
+        ccfg, st0, wb = make_case(K, I, optimizer=name, opt_dtype=dt, **kw)
+        exe = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh,
+                                 donate=False)
+        st_s = exe.place(st0)
+        st_v = st0
+        for w in range(2):
+            st_s, _ = exe.window_step(st_s, wb, 0.1)
+            st_v, _ = coda.window_step(mcfg, ccfg, st_v, wb,
+                                       jnp.float32(0.1))
+        fp32 = jnp.dtype(dt) == jnp.dtype(jnp.float32)
+        ptol = 1e-4 if fp32 else 1e-2
+        pe = max_err(st_s["params"], st_v["params"])
+        de = max_err(st_s["duals"], st_v["duals"])
+        assert pe < ptol and de < ptol, (label, pe, de)
+        assert int(st_s["opt"]["t"][0]) == 2 * I, label
+        if fp32:
+            oe = max_err(st_s["opt"], st_v["opt"])
+            assert oe < 1e-2, (label, oe)
+        print("OK", label, pe)
+    print("ALL OK")
+    """)
+
+
+def test_window_payload_audit_red_team_names_opt_state_leak():
+    """Red-team for the wire contract: the compiled sm3 window must pass
+    the byte-exact payload assert at the ACCOUNTED size, and an expectation
+    that is short by exactly ``opt_state_bytes`` must fail with the
+    diagnosis naming the optimizer leak (that is what the excess would mean
+    if the opt tree ever joined the bucket)."""
+    _run_sub("""
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    K, I, B = 8, 2, 8
+    ccfg, st0, _ = make_case(K, I, optimizer="sm3")
+    exe = coda.make_executor(mcfg, ccfg, "shard_map", mesh=mesh,
+                             donate=False)
+    wb = {"features": jax.ShapeDtypeStruct((I, K, B, 16), jnp.float32),
+          "labels": jax.ShapeDtypeStruct((I, K, B), jnp.float32)}
+    sts = jax.eval_shape(lambda s: s, st0)
+    txt = exe.window_fn(sts, wb).lower(
+        sts, wb, jax.ShapeDtypeStruct((), jnp.float32)).compile().as_text()
+
+    payload = coda.window_payload_bytes(st0)
+    ob = coda.opt_state_bytes(st0)
+    assert ob > 0
+    # the honest contract holds: sm3's window ships exactly the sgd bytes
+    A.assert_window_payload(txt, payload, opt_bytes=ob)
+    # red team: under-claim by exactly the optimizer state; the failure
+    # must NAME the leak instead of leaving a raw byte delta
+    try:
+        A.assert_window_payload(txt, payload - ob, opt_bytes=ob)
+        raise SystemExit("under-claimed payload must fail")
+    except AssertionError as e:
+        assert "optimizer state leaked onto the wire" in str(e), str(e)
+    # without the hint the same mismatch is a plain byte report
+    try:
+        A.assert_window_payload(txt, payload - ob)
+        raise SystemExit("under-claimed payload must fail")
+    except AssertionError as e:
+        assert "leaked" not in str(e)
+    print("ALL OK")
+    """)
